@@ -1,0 +1,77 @@
+"""B2 -- application-perceived commit cost: iCheck non-blocking commit vs a
+blocking PFS write (paper SSII: "the application does not need to block for
+data transfer [but] can continue the execution immediately").
+
+The async path costs the app only the host-side snapshot serialization; the
+RDMA drain to agents and the L1->PFS writeback happen behind its back.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ICheckClient, ICheckCluster
+
+from .common import block_parts, fmt_bytes, save
+
+PAYLOAD = 128 << 20
+PARTS = 16
+PFS_BW = 10e9
+NIC_BW = 25e9
+STEPS = 5
+
+
+def run(verbose: bool = True) -> dict:
+    data = np.random.default_rng(0).standard_normal(
+        PAYLOAD // 4).astype(np.float32)
+    parts = block_parts(data, PARTS)
+
+    with ICheckCluster(n_icheck_nodes=4, node_memory=8 << 30,
+                       nic_bandwidth=NIC_BW, pfs_bandwidth=PFS_BW) as c:
+        client = ICheckClient("app", c.controller, ranks=PARTS).init(
+            ckpt_bytes_estimate=PAYLOAD)
+        client.add_adapt("x", data.shape, "float32", num_parts=PARTS)
+
+        async_block_wall = []
+        async_total_sim = []
+        for step in range(STEPS):
+            t0 = time.monotonic()
+            sim0 = c.clock.now()
+            h = client.commit(step, {"x": parts})   # returns immediately
+            app_sim_stall = c.clock.now() - sim0    # sim time the app lost
+            async_block_wall.append(
+                (time.monotonic() - t0, app_sim_stall))
+            h.wait(timeout=120)
+            async_total_sim.append(h.sim_duration)
+        client.finalize()
+        c.controller.wait_for_drains(timeout=60)
+
+    # blocking baseline: the app stalls for the fabric transfer AND the
+    # PFS write before resuming (no agents, no overlap)
+    blocking_sim = PAYLOAD / NIC_BW + PAYLOAD / PFS_BW
+
+    wall = float(np.mean([w for w, _ in async_block_wall]))
+    sim_stall = float(np.mean([s for _, s in async_block_wall]))
+    out = {
+        "payload": PAYLOAD,
+        "async_app_stall_sim_s": sim_stall,
+        "async_host_serialize_wall_s": wall,
+        "async_transfer_sim_s_hidden": float(np.mean(async_total_sim)),
+        "blocking_app_stall_sim_s": blocking_sim,
+        "hidden_fraction": 1.0 - sim_stall / blocking_sim,
+    }
+    save("b2_async_overlap", out)
+    if verbose:
+        print(f"\nB2 app-perceived commit cost ({fmt_bytes(PAYLOAD)}):")
+        print(f"  blocking (NIC+PFS in the app's critical path): "
+              f"{blocking_sim:.3f} s stall per checkpoint")
+        print(f"  iCheck async commit: {sim_stall:.4f} s fabric stall "
+              f"({out['async_transfer_sim_s_hidden']:.3f} s of transfer "
+              f"hidden behind compute; host-side snapshot serialize "
+              f"{wall*1e3:.0f} ms wall, overlappable via D2H async copy)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""B5 -- multilevel restart latency (paper SSII): restoring from L1 (agent
+memory over the fabric) vs L2 (parallel file system), plus the L1-replica
+failover path (kill the primary replica's agent; restart must still come
+from a surviving L1 copy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ICheckClient, ICheckCluster
+
+from .common import block_parts, fmt_bytes, save
+
+PAYLOAD = 128 << 20
+PARTS = 16
+PFS_BW = 10e9
+NIC_BW = 25e9
+
+
+def run(verbose: bool = True) -> dict:
+    data = np.random.default_rng(0).standard_normal(
+        PAYLOAD // 4).astype(np.float32)
+    rows = {}
+    with ICheckCluster(n_icheck_nodes=4, node_memory=8 << 30,
+                       nic_bandwidth=NIC_BW, pfs_bandwidth=PFS_BW) as c:
+        from .common import FixedCountPolicy
+
+        c.controller.policy = FixedCountPolicy(4)  # spread the 2 replicas
+        client = ICheckClient("app", c.controller, ranks=PARTS,
+                              replication=2).init(
+            ckpt_bytes_estimate=PAYLOAD)
+        client.add_adapt("x", data.shape, "float32", num_parts=PARTS)
+        client.commit(0, {"x": block_parts(data, PARTS)}, blocking=True)
+        c.controller.wait_for_drains(timeout=60)
+
+        # -- L1 restart
+        t0 = c.clock.now()
+        meta, parts, level = client.restart()
+        rows["l1"] = {"sim_s": c.clock.now() - t0, "level": level}
+        assert level == "l1"
+
+        # -- L1 with primary-replica failure (failover to replica 1)
+        primary = c.controller.agents_for("app")[0]
+        c.fault.kill_agent(primary.agent_id)
+        t0 = c.clock.now()
+        meta, parts, level = client.restart()
+        rows["l1_failover"] = {"sim_s": c.clock.now() - t0, "level": level}
+
+        # -- L2 restart (all agents dead -> PFS)
+        for mgr in c.controller.managers():
+            for agent in list(mgr.agents()):
+                c.fault.kill_agent(agent.agent_id)
+        t0 = c.clock.now()
+        meta, parts, level = client.restart()
+        rows["l2"] = {"sim_s": c.clock.now() - t0, "level": level}
+        assert level == "l2"
+        got = np.concatenate([parts["x"][i] for i in range(PARTS)])
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+    out = {"payload": PAYLOAD, "rows": rows,
+           "l2_over_l1": rows["l2"]["sim_s"] / max(rows["l1"]["sim_s"], 1e-9)}
+    save("b5_restart", out)
+    if verbose:
+        print(f"\nB5 restart latency ({fmt_bytes(PAYLOAD)}, repl=2):")
+        for k, r in rows.items():
+            print(f"  {k:12s}: {r['sim_s']:.3f}s sim (from {r['level']})")
+        print(f"  L1 is {out['l2_over_l1']:.1f}x faster than PFS restart")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""B8 -- serving: measured CPU decode throughput (tiny configs) next to
+the dry-run-derived v5e decode latency bounds (full configs), including
+the int8-KV (H8) variant where it changes the bound."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ServeEngine, serve_max_len
+
+from .common import save
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _bound(path):
+    try:
+        a = json.load(open(path))
+        return a["roofline"]["bound_s"], \
+            a["memory"]["peak_bytes_per_device"] / 2**30
+    except OSError:
+        return None, None
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in ("yi-6b", "deepseek-7b", "rwkv6-7b", "recurrentgemma-9b"):
+        cfg = get_config(arch, tiny=True)
+        params, _ = init_params(cfg, jax.random.key(0))
+        b, t, gen = 4, 16, 32
+        batch = {"tokens": rng.integers(0, cfg.vocab_size, (b, t))
+                 .astype(np.int32)}
+        eng = ServeEngine(cfg, params, max_len=serve_max_len(cfg, t, gen))
+        eng.generate(batch, gen_len=2)          # compile
+        t0 = time.monotonic()
+        out = eng.generate(batch, gen_len=gen)
+        tps = b * gen / (time.monotonic() - t0)
+        bound, mem = _bound(os.path.join(
+            ART, "dryrun", f"{arch}__decode_32k__pod.json"))
+        bound_q, mem_q = _bound(os.path.join(
+            ART, "perf", f"{arch}__decode_32k__pod__H8_kvq.json"))
+        rows.append({"arch": arch, "cpu_tiny_tok_s": tps,
+                     "v5e_decode_bound_s": bound, "mem_GiB": mem,
+                     "v5e_bound_int8kv_s": bound_q, "mem_int8kv_GiB": mem_q})
+    out = {"rows": rows}
+    save("b8_serving", out)
+    if verbose:
+        print("\nB8 serving (tiny-config CPU throughput; v5e decode_32k "
+              "step bound from the dry-run):")
+        for r in rows:
+            extra = ""
+            if r["v5e_bound_int8kv_s"]:
+                extra = (f"  int8-KV: {r['v5e_bound_int8kv_s']*1e3:.1f}ms, "
+                         f"{r['mem_int8kv_GiB']:.1f}GiB")
+            bd = f"{r['v5e_decode_bound_s']*1e3:.1f}ms" \
+                if r["v5e_decode_bound_s"] else "n/a"
+            print(f"  {r['arch']:18s} cpu {r['cpu_tiny_tok_s']:7.1f} tok/s | "
+                  f"v5e bound {bd}, {r['mem_GiB']:.1f}GiB{extra}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""B1 -- aggregate checkpoint transfer rate vs. #agents (paper SSII:
+"iCheck can dynamically change the agent count to obtain an optimum
+checkpoint transfer rate").
+
+Agents on distinct iCheck nodes add NIC capacity; agents sharing a node
+share its NIC -- the rate curve therefore has a knee at #agents == #nodes,
+which is exactly what ``icheck_probe_agents`` adapts toward.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ICheckClient, ICheckCluster
+
+from .common import FixedCountPolicy, block_parts, fmt_bytes, save
+
+NODES = 8
+NIC_BW = 25e9
+PAYLOAD = 256 << 20      # 256 MiB checkpoint
+PARTS = 32
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    data = np.random.default_rng(0).standard_normal(
+        PAYLOAD // 4).astype(np.float32)
+    for n_agents in (1, 2, 4, 6, 8, 12, 16):
+        with ICheckCluster(n_icheck_nodes=NODES, n_spare_nodes=0,
+                           node_memory=4 << 30, nic_bandwidth=NIC_BW) as c:
+            c.controller.policy = FixedCountPolicy(n_agents)
+            client = ICheckClient("app", c.controller, ranks=PARTS).init(
+                ckpt_bytes_estimate=PAYLOAD)
+            client.add_adapt("x", data.shape, "float32", num_parts=PARTS)
+            h = client.commit(0, {"x": block_parts(data, PARTS)},
+                              blocking=True, drain=False)
+            rate = PAYLOAD / max(h.sim_duration, 1e-9)
+            rows.append({"agents": n_agents, "sim_s": h.sim_duration,
+                         "rate_Bps": rate})
+            client.finalize()
+    # knee: first agent count reaching ~the saturated (max) rate
+    max_rate = max(r["rate_Bps"] for r in rows)
+    knee = next(r["agents"] for r in rows
+                if r["rate_Bps"] >= 0.95 * max_rate)
+    out = {"nodes": NODES, "payload": PAYLOAD, "rows": rows, "knee": knee}
+    save("b1_transfer", out)
+    if verbose:
+        print(f"\nB1 transfer rate vs agents ({NODES} nodes, "
+              f"{fmt_bytes(PAYLOAD)} ckpt, NIC {fmt_bytes(NIC_BW)}/s):")
+        for r in rows:
+            bar = "#" * int(r["rate_Bps"] / (NIC_BW / 4))
+            print(f"  agents={r['agents']:3d}  rate={fmt_bytes(r['rate_Bps'])}/s "
+                  f"({r['sim_s']:.3f}s sim)  {bar}")
+        print(f"  knee at ~{knee} agents (= node count: NIC-bound beyond)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: fixed-count placement policy, result I/O."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.policies import NodeView, SchedulingPolicy
+from repro.core.types import AppRecord
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+class FixedCountPolicy(SchedulingPolicy):
+    """Places exactly ``n`` agents, round-robin across nodes (one per node
+    first) -- the control knob for the agent-count sweep (B1)."""
+
+    name = "fixed"
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def place(self, nodes: Sequence[NodeView], app: AppRecord):
+        placement: Dict[str, int] = {}
+        i = 0
+        for _ in range(self.n):
+            nv = nodes[i % len(nodes)]
+            placement[nv.node_id] = placement.get(nv.node_id, 0) + 1
+            i += 1
+        return list(placement.items())
+
+
+def save(name: str, payload: dict) -> None:
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PiB"
+
+
+def block_parts(arr, ranks: int):
+    from repro.core import split_array
+    from repro.core.types import PartitionDesc, PartitionScheme
+
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=ranks)
+    return {i: p for i, p in enumerate(split_array(arr, desc))}

@@ -1,0 +1,75 @@
+"""B7 -- roofline table: aggregates the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json produced by ``python -m repro.launch.dryrun``
+and prints, per (arch x shape x mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "dryrun")
+
+SKIPS = [
+    # long_500k requires sub-quadratic attention (assignment): skipped for
+    # pure full-attention archs, run for SSM/hybrid
+    (a, "long_500k") for a in
+    ("dbrx-132b", "qwen3-moe-235b-a22b", "seamless-m4t-medium", "yi-6b",
+     "phi3-medium-14b", "deepseek-7b", "qwen2.5-3b", "pixtral-12b")
+]
+
+
+def load(pattern: str = "*.json"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        a = json.load(open(f))
+        r = a["roofline"]
+        mesh = "2x16x16" if a["mesh"].get("pod") else "16x16"
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"], "mesh": mesh,
+            "tag": a.get("tag", ""),
+            "mem_GiB": a["memory"]["peak_bytes_per_device"] / 2**30,
+            "t_compute": r["t_compute"], "t_memory": r["t_memory"],
+            "t_collective": r["t_collective"], "dominant": r["dominant"],
+            "useful": r["useful_flop_ratio"],
+            "fraction": r["roofline_fraction"],
+            "compile_s": a["compile_s"],
+        })
+    return rows
+
+
+def run(verbose: bool = True) -> dict:
+    rows = load()
+    if not rows:
+        print("\nB7 roofline: no dry-run artifacts found -- run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return {"rows": []}
+    out = {"rows": rows, "skipped_cells": SKIPS}
+    save("b7_roofline", out)
+    if verbose:
+        print("\nB7 roofline (from the compiled multi-pod dry-run; "
+              "t_* in seconds/step at v5e peak):")
+        hdr = (f"  {'arch':21s} {'shape':11s} {'mesh':7s} {'GiB':>6s} "
+               f"{'t_comp':>7s} {'t_mem':>7s} {'t_coll':>7s} "
+               f"{'dominant':>10s} {'useful':>6s} {'frac':>6s}")
+        print(hdr)
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                             r["mesh"], r["tag"])):
+            tag = f" [{r['tag']}]" if r["tag"] else ""
+            print(f"  {r['arch']:21s} {r['shape']:11s} {r['mesh']:7s} "
+                  f"{r['mem_GiB']:6.1f} {r['t_compute']:7.3f} "
+                  f"{r['t_memory']:7.3f} {r['t_collective']:7.3f} "
+                  f"{r['dominant']:>10s} {r['useful']:6.2f} "
+                  f"{r['fraction']:6.3f}{tag}")
+        print(f"  ({len(SKIPS)} long_500k cells skipped per assignment: "
+              f"full-attention archs)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

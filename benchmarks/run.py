@@ -1,0 +1,54 @@
+"""Benchmark driver: one benchmark per paper claim (DESIGN.md SS6).
+
+  PYTHONPATH=src python -m benchmarks.run [--only b1,b3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_async_overlap, bench_codec, bench_multiapp,
+               bench_redistribution, bench_restart, bench_serving,
+               bench_transfer, roofline)
+
+ALL = {
+    "b1": ("agent-count transfer knee", bench_transfer.run),
+    "b2": ("async commit overlap", bench_async_overlap.run),
+    "b3": ("redistribution", bench_redistribution.run),
+    "b4": ("multi-app adaptivity", bench_multiapp.run),
+    "b5": ("multilevel restart", bench_restart.run),
+    "b6": ("checkpoint codec", bench_codec.run),
+    "b7": ("roofline table", roofline.run),
+    "b8": ("serving decode", bench_serving.run),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. b1,b3")
+    args = ap.parse_args(argv)
+    names = list(ALL) if not args.only else args.only.split(",")
+    failures = []
+    t0 = time.monotonic()
+    for name in names:
+        desc, fn = ALL[name]
+        print(f"\n===== {name.upper()}: {desc} =====")
+        try:
+            t = time.monotonic()
+            fn(verbose=True)
+            print(f"[{name} done in {time.monotonic() - t:.1f}s]")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n===== benchmarks finished in {time.monotonic() - t0:.1f}s =====")
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("ALL BENCHMARKS PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Multi-application checkpointing (paper SSII/SSIV): one iCheck instance
+serves a training job and a serving job simultaneously, scaling its own
+nodes through the RM when memory runs out -- system-level malleability.
+
+  PYTHONPATH=src python examples/multi_app.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import ICheckClient, ICheckCluster
+from repro.models import init_params
+from repro.optim import AdamWConfig
+from repro.serve import ServeEngine
+from repro.train import ElasticTrainer
+
+
+def main():
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=3,
+                       node_memory=2 << 20) as cluster:
+        n0 = len(cluster.controller.managers())
+
+        # app 1: a training job with periodic commits
+        cfg_t = get_config("yi-6b", tiny=True)
+        trainer = ElasticTrainer(cfg_t, ShapeConfig("t", "train", 32, 4),
+                                 cluster, app_id="trainer", seed=0,
+                                 opt_cfg=AdamWConfig(lr=1e-3),
+                                 commit_every=5, total_steps=20)
+
+        # app 2: a serving job checkpointing its KV cache after prefill
+        cfg_s = get_config("qwen2.5-3b", tiny=True)
+        params, _ = init_params(cfg_s, jax.random.key(1))
+        engine = ServeEngine(cfg_s, params, max_len=64)
+        serve_client = ICheckClient("server", cluster.controller).init()
+
+        trainer.run(10)
+        out = engine.generate(
+            {"tokens": np.arange(16, dtype=np.int32)[None, :].repeat(2, 0)},
+            gen_len=8, checkpoint_client=serve_client)
+        trainer.run(10)
+
+        # serve's commit is async: give its transfer a moment to land
+        import time
+        for _ in range(50):
+            if cluster.controller.latest_restartable("server"):
+                break
+            time.sleep(0.1)
+
+        n1 = len(cluster.controller.managers())
+        apps = ["trainer", "server"]
+        for app in apps:
+            found = cluster.controller.latest_restartable(app)
+            assert found is not None, app
+            print(f"app {app!r}: newest checkpoint step={found[0].step} "
+                  f"({found[1]}), agents="
+                  f"{len(cluster.controller.agents_for(app))}")
+        print(f"iCheck nodes: {n0} -> {n1} "
+              f"(controller grew via the RM when memory ran short)")
+        trainer.finalize()
+        serve_client.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""iCheck core — the paper's primary contribution.
+
+An adaptive, asynchronous, multi-level, application-level checkpoint
+management system with a data-redistribution service for malleable
+applications (John & Gerndt, 2022), adapted from MPI clusters to elastic
+JAX/TPU training (see DESIGN.md §2).
+"""
+from .agent import Agent, AgentDead
+from .client import CommitHandle, ICheckClient
+from .cluster import ICheckCluster
+from .controller import Controller
+from .malleable import MalleableApp, ProcType
+from .manager import Manager
+from .plan import (Move, MeshMove, apply_mesh_moves, apply_moves,
+                   assemble_array, boxes_to_desc, local_shape, mesh_moves,
+                   mesh_part_bounds, partition_intervals,
+                   redistribution_moves, split_array)
+from .policies import (AdaptivePolicy, BandwidthBalancedPolicy,
+                       MemoryAwarePolicy, StaticPolicy, get_policy)
+from .rm import ResizeEvent, ResourceManager
+from .simnet import EWMA, FaultInjector, SimClock, SimNIC
+from .snapshot import HostSnapshot, restore_pytree, snapshot_pytree
+from .store import MemoryStore, PFSStore, crc32
+from .types import (AppRecord, AppStatus, CheckpointMeta, CkptStatus,
+                    ICheckError, IntegrityError, CapacityError, NodeSpec,
+                    PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
+                    ShardKey)
+
+__all__ = [
+    "Agent", "AgentDead", "CommitHandle", "ICheckClient", "ICheckCluster",
+    "Controller", "MalleableApp", "ProcType", "Manager", "Move", "MeshMove",
+    "apply_mesh_moves", "apply_moves", "assemble_array", "boxes_to_desc",
+    "local_shape", "mesh_moves", "mesh_part_bounds", "partition_intervals",
+    "redistribution_moves", "split_array", "AdaptivePolicy",
+    "BandwidthBalancedPolicy", "MemoryAwarePolicy", "StaticPolicy",
+    "get_policy", "ResizeEvent", "ResourceManager", "EWMA", "FaultInjector",
+    "SimClock", "SimNIC", "HostSnapshot", "restore_pytree", "snapshot_pytree",
+    "MemoryStore", "PFSStore", "crc32", "AppRecord", "AppStatus",
+    "CheckpointMeta", "CkptStatus", "ICheckError", "IntegrityError",
+    "CapacityError", "NodeSpec", "PartitionDesc", "PartitionScheme",
+    "RegionMeta", "ShardInfo", "ShardKey",
+]

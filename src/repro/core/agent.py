@@ -1,0 +1,167 @@
+"""iCheck Agents.
+
+"The agent performs the functionality of checkpoint read/write (using
+libfabric) and data redistribution (for malleable implementations).  Multiple
+agents can be assigned to a single application, and iCheck can dynamically
+change the agent count to obtain an optimum checkpoint transfer rate." (§II)
+
+An Agent here is a worker thread bound to an iCheck node's memory store and
+NIC.  Writes (RDMA puts from the application) and L2 drains run through its
+queue; reads for restart/redistribution are served concurrently off the
+thread-safe store with simulated NIC time.  All payloads are real bytes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Callable, List, Optional
+
+from .simnet import EWMA, FaultInjector, SimNIC
+from .store import MemoryStore, PFSStore, crc32
+from .types import AgentId, NodeId, ShardKey, TransferRecord
+
+
+class AgentDead(ConnectionError):
+    pass
+
+
+class _Op:
+    __slots__ = ("kind", "key", "payload", "crc", "future", "pfs", "on_done")
+
+    def __init__(self, kind, key=None, payload=None, crc=None, future=None,
+                 pfs=None, on_done=None):
+        self.kind = kind
+        self.key = key
+        self.payload = payload
+        self.crc = crc
+        self.future = future
+        self.pfs = pfs
+        self.on_done = on_done
+
+
+class Agent:
+    """One checkpoint agent living on an iCheck node."""
+
+    def __init__(self, agent_id: AgentId, node_id: NodeId, store: MemoryStore,
+                 nic: SimNIC, fault: Optional[FaultInjector] = None):
+        self.agent_id = agent_id
+        self.node_id = node_id
+        self.store = store
+        self.nic = nic
+        self.fault = fault or FaultInjector()
+        self._inbox: "queue.Queue[_Op]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, name=f"agent-{agent_id}",
+                                        daemon=True)
+        self._lock = threading.Lock()
+        self.transfers: List[TransferRecord] = []
+        self.rate_ewma = EWMA(alpha=0.4)      # observed bytes/sim-second
+        self.bytes_in = 0
+        self._thread.start()
+
+    # ------------------------------------------------------------------ RDMA
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> Future:
+        """Non-blocking RDMA-put analogue.  Returns a Future that resolves to
+        a TransferRecord once the shard has landed in L1."""
+        fut: Future = Future()
+        self._inbox.put(_Op("put", key=key, payload=payload, crc=crc, future=fut))
+        return fut
+
+    def get(self, key: ShardKey) -> bytes:
+        """Read a shard back (restart / redistribution path)."""
+        self._check_alive()
+        payload = self.store.get(key)          # crc-verified
+        self.nic.transfer(len(payload))
+        return payload
+
+    def has(self, key: ShardKey) -> bool:
+        return self.store.has(key)
+
+    # ------------------------------------------------------------------ L2
+    def drain(self, keys: List[ShardKey], pfs: PFSStore,
+              on_done: Optional[Callable] = None) -> Future:
+        """Write the given L1 shards to the PFS (asynchronously)."""
+        fut: Future = Future()
+        self._inbox.put(_Op("drain", key=keys, pfs=pfs, future=fut, on_done=on_done))
+        return fut
+
+    # ------------------------------------------------------------------ admin
+    def alive(self) -> bool:
+        return (not self._stop.is_set()
+                and not self.fault.agent_dead(self.agent_id)
+                and not self.fault.node_dead(self.node_id))
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._inbox.put(_Op("stop"))
+        self._thread.join(timeout=5)
+
+    def observed_rate(self) -> float:
+        """Predicted ingest rate (bytes / simulated second)."""
+        r = self.rate_ewma.predict()
+        return r if r > 0 else self.nic.bandwidth
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "agent_id": self.agent_id,
+                "node_id": self.node_id,
+                "bytes_in": self.bytes_in,
+                "transfers": len(self.transfers),
+                "rate_ewma": self.rate_ewma.predict(),
+            }
+
+    # ------------------------------------------------------------------ guts
+    def _check_alive(self) -> None:
+        if not self.alive():
+            raise AgentDead(f"agent {self.agent_id} on node {self.node_id} is dead")
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            op = self._inbox.get()
+            if op.kind == "stop":
+                break
+            try:
+                if op.kind == "put":
+                    rec = self._do_put(op)
+                    op.future.set_result(rec)
+                elif op.kind == "drain":
+                    res = self._do_drain(op)
+                    op.future.set_result(res)
+                    if op.on_done:
+                        op.on_done(res)
+            except BaseException as e:  # noqa: BLE001 - surface through future
+                if op.future is not None and not op.future.done():
+                    op.future.set_exception(e)
+
+    def _do_put(self, op: _Op) -> TransferRecord:
+        self._check_alive()
+        payload = op.payload
+        # straggler injection slows this agent's transfers only
+        slow = self.fault.agent_slowdown(self.agent_id)
+        sim = self.nic.transfer(len(payload))
+        if slow > 1.0:
+            extra = sim * (slow - 1.0)
+            self.nic.clock.sleep(extra)
+            sim += extra
+        self._check_alive()  # may have died mid-transfer
+        self.store.put(op.key, payload, crc=op.crc)
+        rec = TransferRecord(key=op.key, nbytes=len(payload),
+                             agent_id=self.agent_id, sim_seconds=sim)
+        with self._lock:
+            self.transfers.append(rec)
+            self.bytes_in += len(payload)
+            if sim > 0:
+                self.rate_ewma.update(len(payload) / sim)
+        return rec
+
+    def _do_drain(self, op: _Op) -> dict:
+        self._check_alive()
+        written = 0
+        sim_total = 0.0
+        for key in op.key:
+            payload = self.store.get(key)
+            sim_total += op.pfs.write_shard(key, payload)
+            written += len(payload)
+        return {"bytes": written, "sim_seconds": sim_total, "keys": list(op.key)}

@@ -1,0 +1,368 @@
+"""The iCheck application library (paper Listing 1).
+
+Maps 1:1 to the paper's API:
+
+    icheck_init            -> ICheckClient.init
+    icheck_add_adapt       -> ICheckClient.add_adapt / add_adapt_snapshot
+    icheck_commit          -> ICheckClient.commit            (non-blocking)
+    icheck_restart         -> ICheckClient.restart
+    icheck_redistribute    -> ICheckClient.redistribute
+    icheck_probe_agents    -> ICheckClient.probe_agents
+    icheck_finalize        -> ICheckClient.finalize
+
+"Since the agents use RDMA, the application does not need to block for data
+transfer rather it can continue the execution immediately after notifying
+the agents about the checkpoints." — ``commit`` therefore returns a
+``CommitHandle`` immediately; a background completer thread drives the
+transfers, retries stragglers, and finalises the checkpoint with the
+controller.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import plan as planlib
+from .agent import Agent, AgentDead
+from .controller import Controller
+from .store import crc32
+from .types import (AppId, CapacityError, CheckpointMeta, ICheckError,
+                    PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
+                    ShardKey)
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+
+def _encode(payload: bytes, codec: str) -> bytes:
+    if codec == "zstd" and _zstd is not None:
+        return _zstd.ZstdCompressor(level=1).compress(bytes(payload))
+    return bytes(payload)
+
+
+def _decode(payload: bytes, codec: str) -> bytes:
+    if codec == "zstd" and _zstd is not None:
+        return _zstd.ZstdDecompressor().decompress(payload)
+    return payload
+
+
+class CommitHandle:
+    """In-flight checkpoint: resolves once every shard is acked in L1."""
+
+    def __init__(self, client: "ICheckClient", meta: CheckpointMeta,
+                 puts: List[Tuple[ShardKey, bytes, Agent]], drain: bool):
+        self.client = client
+        self.meta = meta
+        self._puts = puts
+        self._drain = drain
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.sim_duration = 0.0
+        self.retries = 0
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def ckpt_id(self) -> int:
+        return self.meta.ckpt_id
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> "CommitHandle":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"commit {self.meta.ckpt_id} still in flight")
+        if self._error is not None:
+            raise self._error
+        return self
+
+    # -- executed on the client's completer thread --------------------------
+    def _complete(self) -> None:
+        ctl = self.client.controller
+        per_node_sim: Dict[str, float] = {}
+        try:
+            inflight = [(key, payload, agent, agent.put(key, payload))
+                        for key, payload, agent in self._puts]
+            for key, payload, agent, fut in inflight:
+                rec = self._await_with_straggler_retry(key, payload, agent, fut)
+                # agents on one node share its NIC: serialized-at-full-bw
+                # time summed per NODE equals concurrent shared-bw time
+                node = rec.agent_id.split("/")[0]
+                per_node_sim[node] = per_node_sim.get(node, 0.0) \
+                    + rec.sim_seconds
+                if key.replica == 0:
+                    ctl.record_shard(self.meta, ShardInfo(
+                        key=key, nbytes=rec.nbytes, crc32=crc32(payload),
+                        agent_id=rec.agent_id))
+            # commit duration ≈ busiest NIC's total transfer time
+            self.sim_duration = max(per_node_sim.values(), default=0.0)
+            ctl.finalize_checkpoint(self.meta, drain=self._drain)
+            self.client._last_commit_sim_s = self.sim_duration
+        except BaseException as e:  # noqa: BLE001
+            self._error = e
+        finally:
+            self._done.set()
+
+    def _await_with_straggler_retry(self, key: ShardKey, payload: bytes,
+                                    agent: Agent, fut: Future):
+        """First-completion-wins re-issue of laggard transfers.
+
+        Deadline comes from the controller's bandwidth prediction; on expiry
+        (or agent death) the shard is re-put to the next healthy agent.
+        Puts are idempotent, so a late original completing twice is harmless.
+        """
+        ctl = self.client.controller
+        scale = max(ctl.clock.time_scale, 0.0)
+        tried = {agent.agent_id}
+        for _ in range(8):
+            sim_deadline = ctl.transfer_deadline(len(payload), agent)
+            wall_timeout = sim_deadline * scale + 2.0 if scale > 0 else 10.0
+            try:
+                return fut.result(timeout=wall_timeout)
+            except AgentDead:
+                pass
+            except TimeoutError:
+                self.retries += 1
+            except ConnectionError:
+                pass
+            except CapacityError:
+                # node full: controller asks the RM for another iCheck node
+                # (paper SSIII-A), then we re-put to the grown agent set
+                ctl.handle_capacity_pressure(key.app_id)
+                tried.clear()
+                tried.add(agent.agent_id)
+            # pick a replacement agent
+            candidates = [a for a in ctl.agents_for(key.app_id)
+                          if a.agent_id not in tried] or ctl.agents_for(key.app_id)
+            if not candidates:
+                raise ICheckError(f"no live agents for {key}")
+            agent = candidates[0]
+            tried.add(agent.agent_id)
+            fut = agent.put(key, payload)
+        raise ICheckError(f"shard {key} could not be stored after retries")
+
+
+class ICheckClient:
+    def __init__(self, app_id: AppId, controller: Controller, ranks: int = 1,
+                 replication: int = 1, codec: str = "raw",
+                 ckpt_interval_s: float = 60.0):
+        self.app_id = app_id
+        self.controller = controller
+        self.ranks = ranks
+        self.replication = max(1, replication)
+        self.codec = codec
+        self.ckpt_interval_s = ckpt_interval_s
+        self.agents: List[Agent] = []
+        self.regions: Dict[str, RegionMeta] = {}
+        self._rr = 0
+        self._last_commit_sim_s: Optional[float] = None
+        self._commit_q: "queue.Queue[Optional[CommitHandle]]" = queue.Queue()
+        self._completer = threading.Thread(target=self._completer_loop,
+                                           daemon=True,
+                                           name=f"icheck-client-{app_id}")
+        self._completer.start()
+        self._initialized = False
+
+    # ------------------------------------------------------------- lifecycle
+    def init(self, ckpt_bytes_estimate: int = 0) -> "ICheckClient":
+        """icheck_init(): register with the controller, connect to agents."""
+        self.agents = self.controller.register_app(
+            self.app_id, self.ranks, ckpt_bytes_estimate=ckpt_bytes_estimate,
+            ckpt_interval_s=self.ckpt_interval_s, replication=self.replication)
+        self._initialized = True
+        return self
+
+    def finalize(self) -> None:
+        """icheck_finalize()."""
+        self._commit_q.put(None)
+        self._completer.join(timeout=10)
+        self.controller.notify_finished(self.app_id)
+
+    # ----------------------------------------------------------- add_adapt
+    def add_adapt(self, name: str, shape: Sequence[int], dtype: str,
+                  scheme: PartitionScheme = PartitionScheme.BLOCK,
+                  axis: int = 0, num_parts: Optional[int] = None,
+                  block: int = 1,
+                  bounds: Optional[tuple] = None) -> RegionMeta:
+        """icheck_add_adapt(): register a checkpointable array + its
+        distribution mapping (used later for redistribution)."""
+        shape = tuple(int(s) for s in shape)
+        desc = PartitionDesc(scheme=scheme, axis=axis,
+                             num_parts=num_parts or self.ranks, block=block,
+                             bounds=bounds)
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize if shape else \
+            np.dtype(dtype).itemsize
+        meta = RegionMeta(name=name, shape=shape, dtype=str(np.dtype(dtype)),
+                          partition=desc, nbytes=nbytes, codec=self.codec)
+        self.regions[name] = meta
+        self.controller.register_region(self.app_id, meta)
+        return meta
+
+    def add_adapt_snapshot(self, snap) -> None:
+        """Register every region of a ``HostSnapshot`` (JAX pytree path)."""
+        for name, sr in snap.regions.items():
+            meta = sr.meta
+            meta.codec = self.codec
+            self.regions[name] = meta
+            self.controller.register_region(self.app_id, meta)
+
+    # ---------------------------------------------------------------- commit
+    def commit(self, step: int,
+               parts_by_region: Dict[str, Dict[int, np.ndarray]],
+               userdata: bytes = b"", blocking: bool = False,
+               drain: bool = True) -> CommitHandle:
+        """icheck_commit(): notify agents, return immediately.
+
+        ``parts_by_region[name][part]`` is the local array of that part
+        (what each application rank holds).
+        """
+        if not self._initialized:
+            raise ICheckError("call init() first")
+        metas = {}
+        for name, parts in parts_by_region.items():
+            if name not in self.regions:
+                raise ICheckError(f"region {name!r} was not add_adapt()ed")
+            meta = self.regions[name]
+            if len(parts) != meta.partition.num_parts:
+                raise ICheckError(
+                    f"region {name!r}: got {len(parts)} parts, expected "
+                    f"{meta.partition.num_parts}")
+            metas[name] = meta
+        ckpt = self.controller.new_checkpoint(self.app_id, step, metas,
+                                              userdata=userdata)
+        agents = self.controller.agents_for(self.app_id)
+        if not agents:
+            raise ICheckError("no agents assigned")
+        puts: List[Tuple[ShardKey, bytes, Agent]] = []
+        for name, parts in parts_by_region.items():
+            for part, arr in parts.items():
+                payload = _encode(np.ascontiguousarray(arr).tobytes(), self.codec)
+                for rep in range(self.replication):
+                    key = ShardKey(self.app_id, ckpt.ckpt_id, name, part, rep)
+                    agent = agents[(self._rr + rep) % len(agents)]
+                    puts.append((key, payload, agent))
+                self._rr += 1
+        handle = CommitHandle(self, ckpt, puts, drain=drain)
+        self._commit_q.put(handle)
+        if blocking:
+            handle.wait(timeout=120)
+        return handle
+
+    def _completer_loop(self) -> None:
+        while True:
+            handle = self._commit_q.get()
+            if handle is None:
+                return
+            handle._complete()
+
+    # --------------------------------------------------------------- restart
+    def restart(self) -> Optional[Tuple[CheckpointMeta, Dict[str, Dict[int, np.ndarray]], str]]:
+        """icheck_restart(): newest usable checkpoint → (meta, parts, level).
+
+        Returns None when no checkpoint exists (fresh start, paper line 7-9).
+        """
+        found = self.controller.latest_restartable(self.app_id)
+        if found is None:
+            return None
+        meta, level = found
+        out: Dict[str, Dict[int, np.ndarray]] = {}
+        for name, region in meta.regions.items():
+            parts: Dict[int, np.ndarray] = {}
+            for part in range(region.partition.num_parts):
+                payload = _decode(
+                    self.controller.fetch_shard(self.app_id, meta.ckpt_id,
+                                                name, part),
+                    region.codec)
+                arr = np.frombuffer(bytearray(payload),
+                                    dtype=np.dtype(region.dtype))
+                parts[part] = arr.reshape(self._part_shape(region, part))
+            out[name] = parts
+            # refresh the client-side region registry from the manifest
+            self.regions[name] = region
+            self.controller.register_region(self.app_id, region)
+        return meta, out, level
+
+    def _part_shape(self, region: RegionMeta, part: int) -> Tuple[int, ...]:
+        desc = region.partition
+        if desc.scheme == PartitionScheme.MESH:
+            return tuple(hi - lo for lo, hi in desc.bounds[part])
+        return planlib.local_shape(region.shape, desc, part)
+
+    # ---------------------------------------------------------- redistribute
+    def redistribute(self, name: str, new_num_parts: int,
+                     ckpt_id: Optional[int] = None,
+                     parts_needed: Optional[Sequence[int]] = None
+                     ) -> Dict[int, np.ndarray]:
+        """icheck_redistribute(): build the *new* distribution's parts from
+        the latest checkpoint, moving only the slices each new part needs
+        (paper §III-B; BLOCK/CYCLIC preserved, part count changes)."""
+        region = self.regions[name]
+        old = region.partition
+        if old.scheme == PartitionScheme.MESH:
+            raise ICheckError("use redistribute_mesh for mesh regions")
+        new = old.renumbered(new_num_parts)
+        moves = self.controller.plan_for_resize(self.app_id, name, new_num_parts)
+        if ckpt_id is None:
+            found = self.controller.latest_restartable(self.app_id)
+            if found is None:
+                raise ICheckError("nothing to redistribute from")
+            ckpt_id = found[0].ckpt_id
+        wanted = set(parts_needed) if parts_needed is not None \
+            else set(range(new_num_parts))
+        needed_src = sorted({mv.src for mv in moves if mv.dst in wanted})
+        src_parts: Dict[int, np.ndarray] = {}
+        for sp in needed_src:
+            payload = _decode(self.controller.fetch_shard(
+                self.app_id, ckpt_id, name, sp), region.codec)
+            src_parts[sp] = np.frombuffer(bytearray(payload),
+                                          dtype=np.dtype(region.dtype)) \
+                .reshape(self._part_shape(region, sp))
+        sub_moves = [mv for mv in moves if mv.dst in wanted]
+        dst = planlib.apply_moves(src_parts, sub_moves, old, new, region.shape)
+        result = {p: dst[p] for p in wanted}
+        return result
+
+    def commit_redistribution(self, name: str, new_num_parts: int) -> None:
+        """MPI_Comm_adapt_commit side-effect: region now has the new mapping."""
+        region = self.regions[name]
+        region.partition = region.partition.renumbered(new_num_parts)
+        self.controller.register_region(self.app_id, region)
+
+    def redistribute_mesh(self, name: str, new_boxes: Sequence[planlib.Box],
+                          ckpt_id: Optional[int] = None
+                          ) -> Dict[int, np.ndarray]:
+        """Mesh-sharded (JAX) variant: old boxes from the region registry,
+        new boxes from the target sharding."""
+        region = self.regions[name]
+        if region.partition.scheme != PartitionScheme.MESH:
+            raise ICheckError(f"{name} is not a mesh region")
+        old_boxes = region.partition.bounds
+        moves = planlib.mesh_moves(old_boxes, tuple(new_boxes))
+        if ckpt_id is None:
+            found = self.controller.latest_restartable(self.app_id)
+            if found is None:
+                raise ICheckError("nothing to redistribute from")
+            ckpt_id = found[0].ckpt_id
+        needed_src = sorted({mv.src for mv in moves})
+        src_parts: Dict[int, np.ndarray] = {}
+        for sp in needed_src:
+            payload = _decode(self.controller.fetch_shard(
+                self.app_id, ckpt_id, name, sp), region.codec)
+            src_parts[sp] = np.frombuffer(bytearray(payload),
+                                          dtype=np.dtype(region.dtype)) \
+                .reshape(self._part_shape(region, sp))
+        return planlib.apply_mesh_moves(src_parts, moves, tuple(new_boxes),
+                                        np.dtype(region.dtype))
+
+    # ---------------------------------------------------------- probe_agents
+    def probe_agents(self) -> List[Agent]:
+        """icheck_probe_agents(): let the controller re-tune our agent set."""
+        self.agents = self.controller.probe_agents(self.app_id,
+                                                   self._last_commit_sim_s)
+        return self.agents

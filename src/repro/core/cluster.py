@@ -1,0 +1,46 @@
+"""Convenience assembly of a full iCheck deployment for tests / examples /
+benchmarks: RM + controller + N iCheck nodes + PFS, all on one simulated
+fabric clock."""
+from __future__ import annotations
+
+import tempfile
+from typing import Optional
+
+from .controller import Controller
+from .rm import ResourceManager
+from .simnet import FaultInjector, SimClock
+from .store import PFSStore
+
+
+class ICheckCluster:
+    def __init__(self, n_icheck_nodes: int = 2, n_spare_nodes: int = 2,
+                 node_memory: int = 8 << 30, nic_bandwidth: float = 25e9,
+                 pfs_bandwidth: float = 40e9, pfs_root: Optional[str] = None,
+                 policy: str = "adaptive", time_scale: float = 0.0,
+                 keep_l1: int = 2, max_concurrent_drains: int = 2):
+        self.clock = SimClock(time_scale)
+        self.fault = FaultInjector()
+        self.rm = ResourceManager()
+        for _ in range(n_icheck_nodes + n_spare_nodes):
+            self.rm.make_node(memory_bytes=node_memory,
+                              nic_bandwidth=nic_bandwidth)
+        self._tmp = None
+        if pfs_root is None:
+            self._tmp = tempfile.TemporaryDirectory(prefix="icheck-pfs-")
+            pfs_root = self._tmp.name
+        self.pfs = PFSStore(pfs_root, bandwidth=pfs_bandwidth, clock=self.clock)
+        self.controller = Controller(
+            self.rm, self.pfs, policy=policy, initial_nodes=n_icheck_nodes,
+            clock=self.clock, fault=self.fault, keep_l1=keep_l1,
+            max_concurrent_drains=max_concurrent_drains)
+
+    def close(self) -> None:
+        self.controller.close()
+        if self._tmp is not None:
+            self._tmp.cleanup()
+
+    def __enter__(self) -> "ICheckCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

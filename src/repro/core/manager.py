@@ -1,0 +1,97 @@
+"""iCheck Managers.
+
+"The manager manages the node-level activities of the software, such as
+launching the agents and monitoring and predicting the node usage parameters
+(e.g., memory usage, bandwidth usage)." (§II)
+
+One Manager per iCheck node.  It owns the node's checkpoint RAM
+(``MemoryStore``) and NIC (``SimNIC``), launches/stops agents on request from
+the controller, and keeps EWMA predictors of memory and bandwidth usage that
+the controller's scheduling policies consume.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, List, Optional
+
+from .agent import Agent
+from .simnet import EWMA, FaultInjector, SimClock, SimNIC
+from .store import MemoryStore
+from .types import AgentId, AppId, NodeSpec
+
+
+class Manager:
+    def __init__(self, spec: NodeSpec, clock: Optional[SimClock] = None,
+                 fault: Optional[FaultInjector] = None):
+        self.spec = spec
+        self.node_id = spec.node_id
+        self.clock = clock or SimClock()
+        self.fault = fault or FaultInjector()
+        self.store = MemoryStore(spec.memory_bytes)
+        self.nic = SimNIC(f"nic-{spec.node_id}", spec.nic_bandwidth,
+                          spec.nic_latency, clock=self.clock)
+        self._agents: Dict[AgentId, Agent] = {}
+        self._lock = threading.Lock()
+        self._agent_seq = itertools.count()
+        self.mem_ewma = EWMA(alpha=0.3)
+        self.bw_ewma = EWMA(alpha=0.3)
+
+    # ----------------------------------------------------------------- agents
+    def launch_agent(self, app_id: AppId) -> Agent:
+        """Paper §II step 4: managers launch agents and notify the controller."""
+        with self._lock:
+            if len(self._agents) >= self.spec.max_agents:
+                raise RuntimeError(f"node {self.node_id} at max_agents")
+            agent_id = f"{self.node_id}/a{next(self._agent_seq)}"
+            agent = Agent(agent_id, self.node_id, self.store, self.nic, self.fault)
+            self._agents[agent_id] = agent
+        return agent
+
+    def stop_agent(self, agent_id: AgentId) -> None:
+        with self._lock:
+            agent = self._agents.pop(agent_id, None)
+        if agent is not None:
+            agent.stop()
+
+    def agents(self) -> List[Agent]:
+        with self._lock:
+            return list(self._agents.values())
+
+    def agent(self, agent_id: AgentId) -> Optional[Agent]:
+        with self._lock:
+            return self._agents.get(agent_id)
+
+    # ----------------------------------------------------------------- health
+    def alive(self) -> bool:
+        return not self.fault.node_dead(self.node_id)
+
+    def heartbeat(self) -> Optional[dict]:
+        """Metrics snapshot, or None if the node is dead (missed heartbeat)."""
+        if not self.alive():
+            return None
+        used = self.store.used_bytes
+        self.mem_ewma.update(used)
+        busy = self.nic.stats()["busy_sim_seconds"]
+        self.bw_ewma.update(self.nic.active_streams)
+        return {
+            "node_id": self.node_id,
+            "mem_used": used,
+            "mem_free": self.store.free_bytes,
+            "mem_pred": self.mem_ewma.predict(),
+            "nic_active": self.nic.active_streams,
+            "nic_busy_sim_s": busy,
+            "n_agents": len(self._agents),
+        }
+
+    # predicted headroom used by policies
+    def predicted_free_memory(self) -> float:
+        return self.spec.memory_bytes - max(self.store.used_bytes,
+                                            self.mem_ewma.predict())
+
+    def predicted_bw_load(self) -> float:
+        return self.bw_ewma.predict()
+
+    def close(self) -> None:
+        for a in self.agents():
+            a.stop()

@@ -1,0 +1,143 @@
+"""Device→host snapshots of sharded JAX pytrees.
+
+This is the bridge between a JAX application's ``TrainState`` and iCheck's
+byte-oriented agents: every pytree leaf becomes a *region* whose parts are
+the distinct device shards (deduplicated across replicas).  The device→host
+copy is issued asynchronously for all leaves first (``copy_to_host_async`` —
+the TPU DMA analogue of the paper's RDMA source buffers) and only then
+gathered, so device compute can proceed underneath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import plan as planlib
+from .types import PartitionDesc, PartitionScheme, RegionMeta
+
+
+def _leaf_name(path) -> str:
+    import jax
+
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) or "leaf"
+
+
+@dataclasses.dataclass
+class SnapshotRegion:
+    meta: RegionMeta
+    parts: Dict[int, np.ndarray]          # part index -> host array (local shard)
+    boxes: Tuple[planlib.Box, ...]        # global boxes, canonical order
+
+
+@dataclasses.dataclass
+class HostSnapshot:
+    regions: Dict[str, SnapshotRegion]
+    step: int = 0
+
+    def total_bytes(self) -> int:
+        return sum(p.nbytes for r in self.regions.values()
+                   for p in r.parts.values())
+
+
+def leaf_names(tree) -> List[str]:
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_leaf_name(path) for path, _ in flat]
+
+
+def snapshot_pytree(tree, step: int = 0) -> HostSnapshot:
+    """Snapshot a pytree of (possibly sharded) jax.Arrays to host memory."""
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    # 1) kick off all async D2H copies
+    for _, leaf in flat:
+        if hasattr(leaf, "copy_to_host_async"):
+            leaf.copy_to_host_async()
+    # 2) gather per-shard host arrays
+    regions: Dict[str, SnapshotRegion] = {}
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        arr = leaf
+        if not hasattr(arr, "addressable_shards"):
+            arr = np.asarray(arr)
+        if isinstance(arr, np.ndarray):
+            boxes = (tuple((0, s) for s in arr.shape),)
+            parts = {0: arr}
+            desc = PartitionDesc(scheme=PartitionScheme.MESH, num_parts=1,
+                                 bounds=boxes)
+        else:
+            shape = tuple(arr.shape)
+            boxes = planlib.mesh_part_bounds(shape, arr.sharding)
+            box_index = {b: i for i, b in enumerate(boxes)}
+            parts = {}
+            for sh in arr.addressable_shards:
+                box = []
+                for d, sl in enumerate(sh.index):
+                    lo = 0 if sl.start is None else int(sl.start)
+                    hi = shape[d] if sl.stop is None else int(sl.stop)
+                    box.append((lo, hi))
+                idx = box_index[tuple(box)]
+                if idx not in parts:                       # skip replicas
+                    parts[idx] = np.asarray(sh.data)
+            desc = PartitionDesc(scheme=PartitionScheme.MESH,
+                                 num_parts=len(boxes), bounds=boxes)
+        np_dtype = parts[0].dtype if parts else np.dtype("float32")
+        meta = RegionMeta(name=name, shape=tuple(np.shape(leaf)),
+                          dtype=str(np_dtype),
+                          partition=desc,
+                          nbytes=sum(p.nbytes for p in parts.values()))
+        regions[name] = SnapshotRegion(meta=meta, parts=parts, boxes=boxes)
+    return HostSnapshot(regions=regions, step=step)
+
+
+def restore_pytree(template, regions: Dict[str, Dict[int, np.ndarray]],
+                   region_meta: Dict[str, RegionMeta],
+                   shardings: Optional[Dict[str, Any]] = None):
+    """Rebuild a pytree of jax.Arrays from fetched region parts.
+
+    ``template`` provides structure + avals (e.g. from ``jax.eval_shape``);
+    ``shardings`` maps leaf name → target Sharding (None → commit to default
+    device layout).  Parts may come from a *different* partitioning than the
+    target: they are reassembled via their recorded boxes and re-split by
+    ``device_put`` — the caller can instead use ``ICheckClient.redistribute``
+    to move only the needed slices.
+    """
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        meta = region_meta[name]
+        parts = regions[name]
+        if meta.partition.scheme == PartitionScheme.MESH:
+            boxes = meta.partition.bounds
+            full = np.empty(meta.shape, dtype=np.dtype(meta.dtype))
+            for idx, part in parts.items():
+                dsl = tuple(slice(lo, hi) for lo, hi in boxes[idx])
+                full[dsl] = part.reshape([hi - lo for lo, hi in boxes[idx]])
+        else:
+            ordered = [parts[i] for i in range(meta.partition.num_parts)]
+            full = planlib.assemble_array(ordered, meta.partition, meta.shape)
+        target_dtype = getattr(leaf, "dtype", full.dtype)
+        full = full.astype(target_dtype, copy=False)
+        sharding = (shardings or {}).get(name)
+        if sharding is not None:
+            leaves.append(jax.device_put(full, sharding))
+        else:
+            leaves.append(jax.device_put(full))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

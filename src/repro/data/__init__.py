@@ -1,0 +1,3 @@
+from .pipeline import DataState, SyntheticLMData
+
+__all__ = ["SyntheticLMData", "DataState"]

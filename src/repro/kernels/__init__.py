@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships three paths (see ``common.resolve_impl``):
+``kernel.py`` -- pl.pallas_call + BlockSpec VMEM tiling (TPU production);
+``ref.py``    -- pure-jnp oracle used by the test suite;
+``ops.py``    -- jit'd public op with a blockwise XLA fallback that the
+                 CPU multi-pod dry-run lowers (flash-style working set).
+"""
+from .ckpt_codec import dequantize, quantize, quantize_delta, undelta_dequantize
+from .common import resolve_impl
+from .flash_attention import attention, attention_ref
+from .rglru import rglru, rglru_ref
+from .rwkv6 import rwkv6, rwkv6_ref
+
+__all__ = [
+    "attention", "attention_ref", "rwkv6", "rwkv6_ref", "rglru", "rglru_ref",
+    "quantize", "quantize_delta", "dequantize", "undelta_dequantize",
+    "resolve_impl",
+]

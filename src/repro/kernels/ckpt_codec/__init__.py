@@ -1,0 +1,5 @@
+from .ops import dequantize, quantize, quantize_delta, undelta_dequantize
+from .ref import BLOCK
+
+__all__ = ["quantize", "quantize_delta", "dequantize", "undelta_dequantize",
+           "BLOCK"]

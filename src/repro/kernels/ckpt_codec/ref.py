@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the checkpoint codec.
+
+The codec is the TPU-native answer to "reduce the bytes iCheck's agents must
+move" (DESIGN.md SS2): checkpoints are (1) block-quantized to int8 with one
+f32 scale per block of 256 values, and (2) XOR-diffed against the previous
+checkpoint's quantized form, so that unchanged blocks become zero bytes and
+compress to nothing under zstd on the agent side.
+
+All functions operate on *flattened, padded* buffers of shape
+(num_blocks, BLOCK); padding/unpadding to that layout is done by ``ops``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 256  # values per quantization block (one f32 scale each)
+
+
+def quantize_ref(x):
+    """(nb, BLOCK) float -> (int8 codes (nb, BLOCK), f32 scales (nb, 1))."""
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def xor_delta_ref(curr_q, prev_q):
+    """Bitwise delta between two int8 code buffers (identical -> zeros)."""
+    return jnp.bitwise_xor(curr_q, prev_q)
+
+
+def quantize_delta_ref(x, prev_q):
+    """Fused quantize + XOR-delta: what the agent receives for an
+    *incremental* commit. Returns (delta codes, scales, current codes)."""
+    q, scale = quantize_ref(x)
+    return jnp.bitwise_xor(q, prev_q), scale, q

@@ -1,0 +1,47 @@
+"""Shared kernel-dispatch machinery.
+
+Every kernel package exposes three execution paths:
+
+  ``pallas``     -- ``pl.pallas_call`` compiled for TPU (the production path).
+  ``interpret``  -- the same kernel body executed in Pallas interpret mode on
+                    CPU; used by the test suite to validate numerics against
+                    the pure-jnp oracle in ``ref.py``.
+  ``xla``        -- a blockwise jnp/lax implementation with the *same working
+                    set* as the kernel (online softmax / chunked recurrence),
+                    used when lowering on CPU (multi-pod dry-run) so that
+                    ``cost_analysis()`` reflects the flash-style memory
+                    behaviour rather than a naive T x T buffer.
+
+``resolve_impl`` picks a path: explicit argument > REPRO_KERNEL_IMPL env var >
+backend autodetection (TPU -> pallas, otherwise xla).
+"""
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+VALID_IMPLS = ("pallas", "interpret", "xla", "ref")
+
+
+@lru_cache(maxsize=1)
+def _default_backend() -> str:
+    import jax
+
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover
+        return "cpu"
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    if impl is None:
+        impl = os.environ.get("REPRO_KERNEL_IMPL") or "auto"
+    if impl == "auto":
+        impl = "pallas" if _default_backend() == "tpu" else "xla"
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"impl must be one of {VALID_IMPLS} or 'auto', got {impl!r}")
+    return impl
+
+
+def next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for (GQA, causal / sliding-window) attention.
+
+Materializes the full (T, S) score matrix -- O(T*S) memory -- and is only
+used as the numerical reference for the Pallas kernel and the blockwise XLA
+path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def allowed_mask(t, s, causal: bool, window: int | None, offset: int):
+    """(t, s) boolean mask of *allowed* positions.
+
+    ``offset`` is the absolute position of query row 0 relative to key row 0
+    (for decode, offset = S - T: queries are the last T positions).
+    """
+    qpos = jnp.arange(t)[:, None] + offset
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((t, s), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return ok
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """q: (B, Hq, T, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+
+    Returns (B, Hq, T, D) in q.dtype; softmax in f32.
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    ok = allowed_mask(t, s, causal, window, offset=s - t)
+    scores = jnp.where(ok[None, None], scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the RG-LRU diagonal gated linear recurrence.
+
+TPU adaptation: RecurrentGemma's GPU kernel is a sequential per-channel scan.
+Here the channel axis is laid out across VPU lanes (tiles of (C, bd) with
+bd a multiple of 128) and time is chunked: within a chunk of C tokens the
+prefix is computed *in closed form* from the cumulative log-decay,
+
+    h_t = exp(L_t) * h_in + sum_{i<=t} exp(L_t - L_i) * g_i,
+
+via an exact pairwise (C, C, bd) tensor in VMEM -- every exponent is a
+"later minus earlier" difference of a monotone cumsum, hence <= 0 and
+overflow-free.  The carried state h (1, bd) persists in VMEM scratch across
+the chunk sweep (grid's last axis).
+
+Grid: (B, D/bd, T/C); tiles log_a/g: (C, bd); scratch: h (1, bd) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import next_multiple
+
+
+def _rglru_kernel(la_ref, g_ref, o_ref, hT_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = la_ref[0].astype(jnp.float32)             # (C, bd)
+    g = g_ref[0].astype(jnp.float32)
+    h_in = h_ref[...]                              # (1, bd)
+
+    L = jnp.cumsum(la, axis=0)                     # (C, bd), monotone down
+    # pairwise prefix: exp(L_t - L_i) for i <= t (<= 0 exponents)
+    diff = L[:, None, :] - L[None, :, :]           # (C, C, bd)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ij = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lower = (ij <= ti)[:, :, None]
+    E = jnp.where(lower, jnp.exp(jnp.where(lower, diff, 0.0)), 0.0)
+    h_intra = jnp.sum(E * g[None, :, :], axis=1)   # (C, bd)
+    h_seq = jnp.exp(L) * h_in + h_intra
+    o_ref[0] = h_seq.astype(o_ref.dtype)
+    h_ref[...] = h_seq[-1:, :]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hT_ref[0] = h_ref[0]
+
+
+def rglru_pallas(log_a, g, h0=None, *, chunk: int = 64, block_d: int = 512,
+                 interpret: bool = False):
+    """log_a, g: (B, T, D). Returns (h: (B, T, D), h_final: (B, D) f32)."""
+    b, t, d = g.shape
+    c = min(chunk, next_multiple(t, 8))
+    bd = min(block_d, next_multiple(d, 128))
+    tp, dp = next_multiple(t, c), next_multiple(d, bd)
+    pad = ((0, 0), (0, tp - t), (0, dp - d))
+    lap = jnp.pad(log_a, pad)
+    gp = jnp.pad(g, pad)
+    if h0 is not None:
+        # fold the initial state into the first token: h_1 = a_1 h_0 + g_1
+        h0p = jnp.pad(h0.astype(jnp.float32), ((0, 0), (0, dp - d)))
+        gp = gp.at[:, 0, :].add(jnp.exp(lap[:, 0, :]) * h0p)
+    kern = functools.partial(_rglru_kernel, chunk=c)
+    h, hT = pl.pallas_call(
+        kern,
+        grid=(b, dp // bd, tp // c),
+        in_specs=[
+            pl.BlockSpec((1, c, bd), lambda b_, j, c_: (b_, c_, j)),
+            pl.BlockSpec((1, c, bd), lambda b_, j, c_: (b_, c_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, bd), lambda b_, j, c_: (b_, c_, j)),
+            pl.BlockSpec((1, bd), lambda b_, j, c_: (b_, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tp, dp), g.dtype),
+            jax.ShapeDtypeStruct((b, dp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(lap, gp)
+    return h[:, :t, :d], hT[:, :d]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the RG-LRU (Griffin / RecurrentGemma) recurrence.
+
+Diagonal gated linear recurrence, per channel:
+
+    h_t = a_t * h_{t-1} + g_t        a_t = exp(log_a_t) in (0, 1]
+
+where the model computes log_a_t = -c * softplus(Lambda) * sigmoid(r_t) and
+g_t = sqrt(1 - a_t^2) * i_t * x_t (input gate + magnitude correction); the
+kernel only sees (log_a, g) -- the canonical diagonal scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, g, h0=None):
+    """log_a, g: (B, T, D) (log_a <= 0); h0: (B, D) or None.
+
+    Returns (h: (B, T, D) in g.dtype, h_final: (B, D) f32).
+    """
+    b, t, d = g.shape
+    la = log_a.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+
+    def step(h, lag):
+        la_t, g_t = lag
+        h = jnp.exp(la_t) * h + g_t
+        return h, h
+
+    h_final, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(la, 1, 0), jnp.moveaxis(gf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(g.dtype), h_final

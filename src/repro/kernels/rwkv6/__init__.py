@@ -1,0 +1,4 @@
+from .ops import rwkv6
+from .ref import rwkv6_ref
+
+__all__ = ["rwkv6", "rwkv6_ref"]

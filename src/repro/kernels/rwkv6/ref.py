@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) time-mix recurrence.
+
+Per head, with state S in R^{Dk x Dv}:
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t^T v_t
+
+where lw_t <= 0 is the *data-dependent* per-channel log-decay (the defining
+feature of RWKV-6 vs RWKV-4/5; the model computes lw = -exp(w_proj)
+natively, so the kernel API takes log-decay directly -- passing w and
+re-taking log(w) is a numerically hostile autodiff roundtrip) and u is the
+learned per-channel "bonus" for the current token.  The oracle is a plain
+``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, log_w, u, s0=None):
+    """r/k/v/log_w: (B, H, T, D) (log_w <= 0); u: (H, D);
+    s0: (B, H, D, D) or None.
+
+    Returns (o: (B, H, T, D) in v.dtype, s_final: (B, H, D, D) f32).
+    """
+    b, h, t, d = r.shape
+    rf, kf, vf, lwf = (x.astype(jnp.float32) for x in (r, k, v, log_w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    else:
+        s0 = s0.astype(jnp.float32)
+
+    def step(S, rkvw):
+        rt, kt, vt, lwt = rkvw                     # each (B, H, D)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + uf[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, o
+
+    xs = tuple(jnp.moveaxis(x, 2, 0) for x in (rf, kf, vf, lwf))
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 2).astype(v.dtype), s_final

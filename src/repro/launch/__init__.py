@@ -1,0 +1,3 @@
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh
+
+__all__ = ["make_production_mesh", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

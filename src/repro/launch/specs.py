@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the cell's step
+function (train_step / prefill_step / serve_step) without allocating
+anything; ``cell_shardings`` resolves the matching NamedShardings on a
+mesh.  This is what both the multi-pod dry-run and the roofline benchmarks
+lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cache_axes, init_cache
+from repro.models.params import _is_axes, param_specs
+from repro.optim import AdamWConfig
+from repro.sharding import Rules, get_rules, spec as axes_spec
+from repro.train import abstract_train_state, train_state_specs
+
+
+# --------------------------------------------------------------------------
+# rules adjustment per cell
+# --------------------------------------------------------------------------
+def cell_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               base: Optional[Rules] = None) -> Rules:
+    rules = base or get_rules(cfg.rules)
+    if shape.kind in ("prefill", "decode"):
+        model = mesh.shape.get("model", 1)
+        if cfg.num_kv_heads % model != 0:
+            # kv heads don't divide the model axis: shard the KV cache's
+            # sequence axis instead (softmax stats all-reduce over "model")
+            rules = rules.with_rule("act_kv_heads", None) \
+                         .with_rule("kv_seq", "model")
+    return rules
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                         mesh: Mesh) -> int:
+    """Baseline gradient-accumulation factor so the per-layer scan carry
+    (b_mb x T x d_model residual per layer) fits the v5e HBM budget:
+    microbatch down to ~1-2 sequences per device for train_4k."""
+    if shape.kind != "train":
+        return 1
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev = max(shape.global_batch // data, 1)
+    return min(8, per_dev)
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+def _batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((batch, seq), jnp.int32),
+           "labels": sds((batch, seq), jnp.int32)}
+    if cfg.frontend == "frames":
+        out["frames"] = sds((batch, cfg.num_frames, cfg.d_model),
+                            jnp.float32)
+    if cfg.frontend == "patches":
+        out["patches"] = sds((batch, cfg.num_patches, cfg.d_model),
+                             jnp.float32)
+    return out
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    filled_to: int):
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return dict(cache, idx=jax.ShapeDtypeStruct((), jnp.int32)), filled_to
+
+
+def _serving_dtype(params_shapes, cfg: ModelConfig):
+    """Serving holds weights in the compute dtype (bf16), not f32 masters."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return s
+
+    return jax.tree.map(cast, params_shapes)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opt_cfg: Optional[AdamWConfig] = None) -> Tuple[Any, ...]:
+    """Abstract inputs of the cell's step function:
+
+      train:   (TrainState, batch)
+      prefill: (params, batch, cache)
+      decode:  (params, cache, tokens)
+    """
+    if shape.kind == "train":
+        state, _ = abstract_train_state(cfg, opt_cfg)
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        return state, batch
+    from repro.models import abstract_params
+
+    params, _ = abstract_params(cfg)
+    params = _serving_dtype(params, cfg)
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch.pop("labels")
+        max_len = shape.seq_len + (cfg.num_patches
+                                   if cfg.frontend == "patches" else 0)
+        cache, _ = _abstract_cache(cfg, shape.global_batch, max_len, 0)
+        return params, batch, cache
+    # decode: cache of seq_len tokens, one new token
+    cache, _ = _abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                               shape.seq_len - 1)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return params, cache, tokens
+
+
+# --------------------------------------------------------------------------
+# shardings
+# --------------------------------------------------------------------------
+def _tree_shardings(axes_tree, shapes_tree, rules: Rules, mesh: Mesh):
+    specs = jax.tree.map(
+        lambda ax, sh: axes_spec(ax, rules, mesh, sh.shape),
+        axes_tree, shapes_tree, is_leaf=_is_axes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def batch_shardings(batch_specs, mesh: Mesh, rules: Rules):
+    def shard_one(sds):
+        names = ["batch"] + [None] * (len(sds.shape) - 1)
+        s = axes_spec(names, rules, mesh, sds.shape)
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(shard_one, batch_specs)
+
+
+def cell_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   rules: Optional[Rules] = None,
+                   opt_cfg: Optional[AdamWConfig] = None) -> Tuple[Any, ...]:
+    """NamedShardings matching ``input_specs`` leaf-for-leaf."""
+    from repro.models import abstract_params
+
+    rules = rules or cell_rules(cfg, shape, mesh)
+    if shape.kind == "train":
+        state, state_axes = abstract_train_state(cfg, opt_cfg)
+        sspecs = train_state_specs(cfg, mesh, state, state_axes, rules)
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                                is_leaf=lambda x: isinstance(x, PartitionSpec))
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        return state_sh, batch_shardings(batch, mesh, rules)
+
+    params, axes = abstract_params(cfg)
+    p_specs = param_specs(axes, rules, mesh, params)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    c_axes = cache_axes(cfg)
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch.pop("labels")
+        max_len = shape.seq_len + (cfg.num_patches
+                                   if cfg.frontend == "patches" else 0)
+        cache_shapes, _ = _abstract_cache(cfg, shape.global_batch, max_len, 0)
+        cache_sh = _tree_shardings(c_axes, cache_shapes, rules, mesh)
+        return p_sh, batch_shardings(batch, mesh, rules), cache_sh
+    cache_shapes, _ = _abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                      shape.seq_len - 1)
+    cache_sh = _tree_shardings(c_axes, cache_shapes, rules, mesh)
+    tok_sh = NamedSharding(mesh, axes_spec(
+        ["batch", None], rules, mesh, (shape.global_batch, 1)))
+    return p_sh, cache_sh, tok_sh

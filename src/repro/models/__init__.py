@@ -1,0 +1,8 @@
+from .transformer import (abstract_params, cache_axes, decode_step, forward,
+                          init_cache, init_params, loss_fn, prefill,
+                          stack_plan)
+from .params import count_params, param_shardings, param_specs
+
+__all__ = ["init_params", "abstract_params", "forward", "loss_fn",
+           "init_cache", "cache_axes", "prefill", "decode_step", "stack_plan",
+           "count_params", "param_specs", "param_shardings"]

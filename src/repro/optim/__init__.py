@@ -1,0 +1,5 @@
+from .adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                    opt_state_axes, warmup_cosine)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "opt_state_axes", "warmup_cosine"]

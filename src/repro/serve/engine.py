@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + greedy decode over the backbone's
+cache API, with optional iCheck serving-state checkpointing (beyond-paper:
+a preempted inference node can restore its KV cache / recurrent state from
+agents instead of re-prefilling)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import snapshot_pytree
+from repro.models import decode_step, init_cache, prefill
+from repro.sharding import get_rules, use_rules
+
+
+def serve_max_len(cfg: ModelConfig, seq_len: int, gen: int = 0) -> int:
+    n = seq_len + gen
+    if cfg.frontend == "patches":
+        n += cfg.num_patches
+    return n
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 mesh=None, impl: Optional[str] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self.rules = get_rules(cfg.rules)
+        self.impl = impl
+
+        def _prefill(params, batch, cache):
+            with use_rules(mesh, self.rules):
+                return prefill(cfg, params, batch, cache, impl=impl)
+
+        def _decode(params, cache, toks):
+            with use_rules(mesh, self.rules):
+                return decode_step(cfg, params, cache, toks, impl=impl)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=1)
+
+    def generate(self, batch: Dict, gen_len: int = 16,
+                 checkpoint_client=None) -> np.ndarray:
+        """Greedy generation. batch: {"tokens": (B, T), ...modality}.
+
+        ``checkpoint_client``: optional ICheckClient; if given, the filled
+        cache is committed after prefill (serving-state fault tolerance).
+        """
+        b = batch["tokens"].shape[0]
+        cache = init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        if checkpoint_client is not None:
+            snap = snapshot_pytree(cache, step=0)
+            checkpoint_client.add_adapt_snapshot(snap)
+            checkpoint_client.commit(
+                0, {n: r.parts for n, r in snap.regions.items()})
+        out = [jnp.argmax(logits, -1)[:, None].astype(jnp.int32)]
+        for _ in range(gen_len - 1):
+            logits, cache = self._decode(self.params, cache, out[-1])
+            out.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+        return np.concatenate([np.asarray(t) for t in out], axis=1)

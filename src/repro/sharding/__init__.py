@@ -1,0 +1,6 @@
+from .rules import (FSDP_RULES, SEQ_RULES, TP_RULES, Rules, active_rules,
+                    constrain, get_rules, named_sharding, spec, use_rules)
+
+__all__ = ["Rules", "TP_RULES", "FSDP_RULES", "SEQ_RULES", "spec",
+           "named_sharding", "constrain", "use_rules", "active_rules",
+           "get_rules"]

@@ -1,0 +1,213 @@
+"""ElasticTrainer: paper Listing 1 driven over a JAX TrainState.
+
+Control flow is exactly the paper's malleable-app skeleton:
+
+    MPI_Init_adapt            -> MalleableApp.init_adapt
+    icheck_init               -> ICheckClient.init
+    icheck_add_adapt          -> add_adapt_snapshot (every TrainState leaf +
+                                 data-iterator state become iCheck regions)
+    icheck_restart            -> restart()  (fresh start if no checkpoint)
+    loop:
+        MPI_Probe_adapt       -> probe_adapt
+        [MPI_Comm_adapt_begin -> adapt_begin
+         icheck_redistribute  -> redistribute_mesh per region
+         MPI_Comm_adapt_commit-> adapt_commit]
+        train_step
+        icheck_commit         -> commit (non-blocking, async agents)
+        icheck_probe_agents   -> probe_agents
+
+A "rank" is a data-parallel slice of the device mesh.  On resize the
+TrainState is *not* gathered: agents move only the slices each new part
+needs (plan.mesh_moves), then the state is re-materialized under the new
+mesh's shardings.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import (ICheckClient, ICheckCluster, MalleableApp,
+                        snapshot_pytree)
+from repro.core import plan as planlib
+from repro.core.snapshot import leaf_names, restore_pytree
+from repro.data import SyntheticLMData
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.sharding import get_rules, use_rules
+
+from .state import TrainState, make_train_state
+from .step import make_train_step
+
+DATA_REGION = "data_state"
+
+
+def default_make_mesh(ranks: int) -> Mesh:
+    devs = jax.devices()[:ranks]
+    if len(devs) < ranks:                    # 1-device CPU: logical ranks
+        devs = jax.devices()
+    return Mesh(np.asarray(devs).reshape(len(devs)), ("data",))
+
+
+class ElasticTrainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 cluster: ICheckCluster, app_id: str = "train",
+                 ranks: int = 1, seed: int = 0,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 commit_every: int = 10, probe_every: int = 100,
+                 global_batch: Optional[int] = None,
+                 make_mesh: Callable[[int], Mesh] = default_make_mesh,
+                 codec: str = "raw", replication: int = 1,
+                 total_steps: int = 1000):
+        self.cfg = cfg
+        self.shape = shape
+        self.app = MalleableApp(app_id, cluster.rm, ranks)
+        self.proc_type = self.app.init_adapt()
+        self.client = ICheckClient(app_id, cluster.controller, ranks=ranks,
+                                   codec=codec, replication=replication)
+        self.make_mesh = make_mesh
+        self.mesh = make_mesh(ranks)
+        self.rules = get_rules(cfg.rules)
+        self.commit_every = commit_every
+        self.probe_every = probe_every
+        self.global_batch = global_batch or shape.global_batch
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.schedule = warmup_cosine(self.opt_cfg.lr, warmup=20,
+                                      total=total_steps)
+        self.data = SyntheticLMData(cfg, shape, seed=seed)
+        self.metrics_log: list = []
+        self.resizes = 0
+        self._pending_commits: list = []
+
+        key = jax.random.key(seed)
+        self.state = make_train_state(cfg, key, self.opt_cfg)
+        self._shard_state()
+        self._jit_step()
+
+        # icheck_init + add_adapt + (maybe) restart -- paper lines 5..9
+        est = sum(np.prod(l.shape) * l.dtype.itemsize
+                  for l in jax.tree.leaves(self.state))
+        self.client.init(ckpt_bytes_estimate=int(est))
+        self._register_regions()
+        restored = self.restart_if_available()
+        self.restarted = restored
+
+    # ----------------------------------------------------------------- setup
+    def _batch_sharding(self):
+        return NamedSharding(self.mesh, PartitionSpec("data"))
+
+    def _shard_state(self):
+        """(Re)commit the TrainState onto the current mesh (DP-replicated
+        params; batch over "data")."""
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        self.state = jax.tree.map(lambda x: jax.device_put(x, rep),
+                                  self.state)
+
+    def _jit_step(self):
+        step_fn = make_train_step(self.cfg, self.opt_cfg, self.schedule)
+
+        def run(state, batch):
+            with use_rules(self.mesh, self.rules):
+                return step_fn(state, batch)
+
+        self._step = jax.jit(run, donate_argnums=0)
+
+    def _register_regions(self):
+        snap = snapshot_pytree(self.state, step=int(self.state.step))
+        self.client.add_adapt_snapshot(snap)
+        self.client.add_adapt(DATA_REGION, (2,), "int64",
+                              num_parts=1)
+
+    # ----------------------------------------------------------- checkpoints
+    def commit(self, blocking: bool = False):
+        """icheck_commit: async snapshot -> agents (paper line 26)."""
+        snap = snapshot_pytree(self.state, step=int(self.state.step))
+        self.client.add_adapt_snapshot(snap)   # refresh region boxes
+        parts = {name: r.parts for name, r in snap.regions.items()}
+        parts[DATA_REGION] = {0: self.data.state_array()}
+        h = self.client.commit(int(self.state.step), parts, blocking=blocking)
+        self._pending_commits.append(h)
+        return h
+
+    def restart_if_available(self) -> bool:
+        """icheck_restart: newest complete checkpoint -> TrainState."""
+        found = self.client.restart()
+        if found is None:
+            return False
+        meta, regions, level = found
+        data_parts = regions.pop(DATA_REGION)
+        self.data.restore(data_parts[0])
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        region_meta = {name: meta.regions[name] for name in regions}
+        self.state = restore_pytree(template, regions, region_meta)
+        self._shard_state()
+        return True
+
+    # ---------------------------------------------------------------- resize
+    def _redistribute(self, new_ranks: int):
+        """Agent-side slice redistribution onto the new mesh (paper SSIII-B).
+
+        Requires a checkpoint: commit (blocking) first, then pull only the
+        slices each new part needs from the agents.
+        """
+        self.commit(blocking=True)
+        new_mesh = self.make_mesh(new_ranks)
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        names = leaf_names(self.state)
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        rep = NamedSharding(new_mesh, PartitionSpec())
+        new_leaves = []
+        for name, leaf in zip(names, flat):
+            boxes = planlib.mesh_part_bounds(leaf.shape, rep)
+            parts = self.client.redistribute_mesh(name, boxes)
+            full = np.zeros(leaf.shape, leaf.dtype)
+            for idx, arr in parts.items():
+                sl = tuple(slice(lo, hi) for lo, hi in boxes[idx])
+                full[sl] = arr
+            new_leaves.append(jax.device_put(full, rep))
+        self.mesh = new_mesh
+        self.state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    def maybe_adapt(self) -> bool:
+        """MPI_Probe_adapt + adapt window (paper lines 17-23)."""
+        ev = self.app.probe_adapt()
+        if ev is None:
+            return False
+        window = self.app.adapt_begin()
+        self._redistribute(window.new_ranks)
+        self.app.adapt_commit()
+        self.client.ranks = window.new_ranks
+        self._jit_step()
+        self.resizes += 1
+        return True
+
+    # ------------------------------------------------------------------ run
+    def run(self, steps: int) -> Dict:
+        t0 = time.monotonic()
+        for _ in range(steps):
+            self.maybe_adapt()
+            batch = self.data.next_batch(self.global_batch)
+            batch = {k: jax.device_put(v, self._batch_sharding())
+                     for k, v in batch.items()}
+            self.state, metrics = self._step(self.state, batch)
+            step = int(self.state.step)
+            self.metrics_log.append(
+                {"step": step, "loss": float(metrics["loss"])})
+            if step % self.commit_every == 0:
+                self.commit()
+            if self.probe_every and step % self.probe_every == 0:
+                self.client.probe_agents()
+        return {"steps": steps, "wall_s": time.monotonic() - t0,
+                "final_loss": self.metrics_log[-1]["loss"],
+                "resizes": self.resizes}
+
+    def finalize(self):
+        for h in self._pending_commits:
+            if not h.done():
+                h.wait(timeout=60)
+        self.client.finalize()

@@ -1,0 +1,76 @@
+"""TrainState: params (f32 master) + AdamW state + step counter, with
+logical-axis trees and sharding resolution for pjit."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import abstract_params, init_params
+from repro.models.params import param_specs
+from repro.optim import AdamWConfig, AdamWState, adamw_init, opt_state_axes
+from repro.sharding import FSDP_RULES, Rules, get_rules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def make_train_state(cfg: ModelConfig, key,
+                     opt_cfg: Optional[AdamWConfig] = None) -> TrainState:
+    opt_cfg = opt_cfg or AdamWConfig()
+    params, _ = init_params(cfg, key)
+    return TrainState(params=params,
+                      opt=adamw_init(params, compress=opt_cfg.compress_grads),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         opt_cfg: Optional[AdamWConfig] = None):
+    """(ShapeDtypeStruct TrainState, axes TrainState) -- no allocation."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    shapes, axes = abstract_params(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    state = TrainState(
+        params=shapes,
+        opt=AdamWState(mu=jax.tree.map(f32, shapes),
+                       nu=jax.tree.map(f32, shapes),
+                       count=jax.ShapeDtypeStruct((), jnp.int32),
+                       err=jax.tree.map(f32, shapes)
+                       if opt_cfg.compress_grads else None),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+    state_axes = TrainState(
+        params=axes,
+        opt=opt_state_axes(axes, compress=opt_cfg.compress_grads),
+        step=())
+    return state, state_axes
+
+
+def train_state_specs(cfg: ModelConfig, mesh, state_shapes, state_axes,
+                      rules: Optional[Rules] = None):
+    """PartitionSpec tree for the TrainState.
+
+    Params follow the model's rule set; optimizer moments always resolve
+    against FSDP rules (ZeRO-1: sharded over ("pod","data") on the embed
+    axis) regardless of the model rules.
+    """
+    rules = rules or get_rules(cfg.rules)
+    p_specs = param_specs(state_axes.params, rules, mesh,
+                          state_shapes.params)
+    mu_specs = param_specs(state_axes.opt.mu, FSDP_RULES, mesh,
+                           state_shapes.opt.mu)
+    nu_specs = param_specs(state_axes.opt.nu, FSDP_RULES, mesh,
+                           state_shapes.opt.nu)
+    err_specs = None
+    if state_axes.opt.err is not None:
+        err_specs = param_specs(state_axes.opt.err, FSDP_RULES, mesh,
+                                state_shapes.opt.err)
+    from jax.sharding import PartitionSpec as P
+    return TrainState(
+        params=p_specs,
+        opt=AdamWState(mu=mu_specs, nu=nu_specs, count=P(), err=err_specs),
+        step=P())

@@ -1,0 +1,67 @@
+"""train_step factory: value_and_grad over the backbone loss, microbatch
+gradient accumulation via lax.scan, AdamW update.
+
+The returned function is pure (TrainState, batch) -> (TrainState, metrics)
+and is meant to be jit'd/pjit'd by the caller with the shardings from
+``train_state_specs`` -- the launcher does that, both for real runs and the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, adamw_update
+
+from .state import TrainState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    schedule: Optional[Callable] = None,
+                    microbatches: int = 1,
+                    impl: Optional[str] = None) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, impl=impl), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict) -> tuple:
+        params = state.params
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                loss, _, grads = compute_grads(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, params, opt_cfg, schedule)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out
+
+    return train_step

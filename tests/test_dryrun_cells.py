@@ -1,0 +1,33 @@
+"""Multi-pod dry-run smoke: one representative cell per step kind compiles
+on the production meshes (the full 40-cell x 2-mesh sweep runs via
+``python -m repro.launch.dryrun --all --both-meshes``; artifacts in
+EXPERIMENTS.md)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+CASES = [
+    ("qwen2.5-3b", "train_4k", []),
+    ("qwen2.5-3b", "decode_32k", ["--multipod"]),
+]
+
+
+@pytest.mark.dryrun
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape,extra", CASES)
+def test_cell_compiles(arch, shape, extra, tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(tmp_path)] + extra
+    out = subprocess.run(cmd, capture_output=True, text=True,
+                         cwd="/root/repo", timeout=560,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "ALL CELLS PASS" in out.stdout, out.stdout[-3000:] + out.stderr[-3000:]
+    arts = list(tmp_path.glob("*.json"))
+    assert arts
+    art = json.loads(arts[0].read_text())
+    assert art["roofline"]["bound_s"] > 0
+    assert art["memory"]["peak_bytes_per_device"] > 0
+    assert art["collectives"]["total_link_bytes"] > 0

@@ -1,0 +1,334 @@
+"""End-to-end iCheck lifecycle tests against the paper's workflow (§II):
+register → place agents → commit (async) → L1 → drain to L2 → restart,
+plus adaptivity, failures, stragglers, and the malleability path."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ICheckCluster, ICheckClient, MalleableApp,
+                        PartitionScheme, ProcType)
+from repro.core.types import CkptStatus
+
+
+def _parts(arr, ranks):
+    from repro.core import split_array
+    from repro.core.types import PartitionDesc
+
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=ranks)
+    return {i: p for i, p in enumerate(split_array(arr, desc))}
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = ICheckCluster(n_icheck_nodes=2, n_spare_nodes=2,
+                      node_memory=256 << 20, pfs_root=str(tmp_path / "pfs"))
+    yield c
+    c.close()
+
+
+def test_register_places_agents(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=4).init(
+        ckpt_bytes_estimate=1 << 20)
+    assert len(client.agents) >= 1
+    assert all(a.alive() for a in client.agents)
+    client.finalize()
+
+
+def test_commit_restart_roundtrip(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=4).init()
+    data = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+    client.add_adapt("data", data.shape, "float32",
+                     scheme=PartitionScheme.BLOCK, num_parts=4)
+    h = client.commit(step=10, parts_by_region={"data": _parts(data, 4)},
+                      userdata=b"step=10", blocking=True)
+    assert h.done()
+
+    res = client.restart()
+    assert res is not None
+    meta, parts, level = res
+    assert level == "l1"
+    assert meta.step == 10
+    assert meta.userdata == b"step=10"
+    got = np.concatenate([parts["data"][i] for i in range(4)], axis=0)
+    np.testing.assert_array_equal(got, data)
+    client.finalize()
+
+
+def test_commit_is_nonblocking(cluster):
+    """Paper: the app 'can continue the execution immediately after
+    notifying the agents'."""
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.zeros((1 << 16,), dtype=np.float32)
+    client.add_adapt("data", data.shape, "float32", num_parts=2)
+    t0 = time.monotonic()
+    h = client.commit(step=1, parts_by_region={"data": _parts(data, 2)})
+    issue_time = time.monotonic() - t0
+    assert issue_time < 0.5           # returns without waiting for transfers
+    h.wait(timeout=30)
+    client.finalize()
+
+
+def test_drain_to_l2_and_restart_from_pfs(cluster, tmp_path):
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.arange(100, dtype=np.int64)
+    client.add_adapt("data", data.shape, "int64", num_parts=2)
+    h = client.commit(step=5, parts_by_region={"data": _parts(data, 2)},
+                      blocking=True)
+    cluster.controller.wait_for_drains()
+    assert h.meta.status == CkptStatus.IN_L2
+    assert cluster.pfs.checkpoint_complete(h.meta)
+
+    # cold restart: new controller process over the same PFS
+    from repro.core import Controller, ResourceManager
+    rm2 = ResourceManager()
+    rm2.make_node()
+    ctl2 = None
+    try:
+        from repro.core.controller import Controller as C
+        ctl2 = C(rm2, cluster.pfs, initial_nodes=1)
+        client2 = ICheckClient("appA", ctl2, ranks=2).init()
+        res = client2.restart()
+        assert res is not None
+        meta, parts, level = res
+        assert level == "l2"
+        got = np.concatenate([parts["data"][i] for i in range(2)])
+        np.testing.assert_array_equal(got, data)
+        client2.finalize()
+    finally:
+        if ctl2 is not None:
+            ctl2.close()
+
+
+def test_multiple_checkpoints_latest_wins(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    client.add_adapt("x", (10,), "float32", num_parts=2)
+    for step in (1, 2, 3):
+        arr = np.full((10,), float(step), dtype=np.float32)
+        client.commit(step=step, parts_by_region={"x": _parts(arr, 2)},
+                      blocking=True)
+    meta, parts, _ = client.restart()
+    assert meta.step == 3
+    assert parts["x"][0][0] == 3.0
+    client.finalize()
+
+
+def test_replication_and_agent_failure_recovery(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=2,
+                          replication=2).init(ckpt_bytes_estimate=1 << 20)
+    data = np.random.default_rng(1).normal(size=(32, 4)).astype(np.float32)
+    client.add_adapt("data", data.shape, "float32", num_parts=2)
+    client.commit(step=1, parts_by_region={"data": _parts(data, 2)},
+                  blocking=True)
+
+    # kill the first agent; the monitor should replace it and data must
+    # still be restorable from the replica
+    victim = client.agents[0]
+    cluster.fault.kill_agent(victim.agent_id)
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        events = [e["event"] for e in cluster.controller.events]
+        if "agent_replaced" in events or "agent_failed" in events:
+            break
+        time.sleep(0.02)
+    res = client.restart()
+    assert res is not None
+    _, parts, _ = res
+    got = np.concatenate([parts["data"][i] for i in range(2)], axis=0)
+    np.testing.assert_array_equal(got, data)
+    client.finalize()
+
+
+def test_straggler_reroute(tmp_path):
+    c = ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                      node_memory=256 << 20, pfs_root=str(tmp_path / "pfs"),
+                      time_scale=1e-9)
+    try:
+        client = ICheckClient("appA", c.controller, ranks=2).init()
+        data = np.zeros((1 << 18,), dtype=np.float32)
+        client.add_adapt("data", data.shape, "float32", num_parts=2)
+        # warm up the rate predictors
+        client.commit(step=0, parts_by_region={"data": _parts(data, 2)},
+                      blocking=True)
+        # make every agent on node 0 pathologically slow
+        for a in c.controller.agents_for("appA"):
+            if a.node_id.endswith("0"):
+                c.fault.make_straggler(a.agent_id, 1e7)
+        h = client.commit(step=1, parts_by_region={"data": _parts(data, 2)})
+        h.wait(timeout=60)
+        assert h.done()
+        # the commit finished despite the straggler (either rerouted or the
+        # fast agent carried it)
+        meta, parts, _ = client.restart()
+        assert meta.step == 1
+        client.finalize()
+    finally:
+        c.close()
+
+
+def test_node_retake_migrates_shards(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.arange(50, dtype=np.float32)
+    client.add_adapt("d", data.shape, "float32", num_parts=2)
+    client.commit(step=1, parts_by_region={"d": _parts(data, 2)}, blocking=True)
+
+    node0 = cluster.controller.managers()[0].node_id
+    assert cluster.rm.retake_icheck_node(node0)
+    assert all(m.node_id != node0 for m in cluster.controller.managers())
+    res = client.restart()
+    assert res is not None
+    _, parts, _ = res
+    np.testing.assert_array_equal(
+        np.concatenate([parts["d"][i] for i in range(2)]), data)
+    client.finalize()
+
+
+def test_probe_agents_scales_up_when_slow(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=2,
+                          ckpt_interval_s=1.0).init(ckpt_bytes_estimate=1 << 20)
+    n_before = len(cluster.controller.agents_for("appA"))
+    client._last_commit_sim_s = 10.0        # way above 25% of the interval
+    client.probe_agents()
+    n_after = len(cluster.controller.agents_for("appA"))
+    assert n_after >= n_before + 1
+    client.finalize()
+
+
+def test_probe_agents_scales_down_when_overprovisioned(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=2,
+                          ckpt_interval_s=100.0).init(ckpt_bytes_estimate=1 << 20)
+    # force >1 agents first
+    client._last_commit_sim_s = 1e3
+    client.probe_agents()
+    n_big = len(cluster.controller.agents_for("appA"))
+    assert n_big >= 2
+    client._last_commit_sim_s = 1e-9
+    client.probe_agents()
+    assert len(cluster.controller.agents_for("appA")) == n_big - 1
+    client.finalize()
+
+
+# ------------------------------------------------------------- malleability
+def test_malleable_expand_with_redistribution(cluster):
+    """Paper Listing 1 control flow: probe → adapt_begin → redistribute →
+    adapt_commit, expanding 2 → 4 ranks."""
+    app = MalleableApp("appA", cluster.rm, ranks=2)
+    assert app.init_adapt() == ProcType.INITIAL
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.arange(37 * 3, dtype=np.float32).reshape(37, 3)
+    client.add_adapt("data", data.shape, "float32",
+                     scheme=PartitionScheme.BLOCK, num_parts=2)
+    client.commit(step=1, parts_by_region={"data": _parts(data, 2)},
+                  blocking=True)
+
+    assert app.probe_adapt() is None
+    cluster.rm.schedule_resize("appA", 4)       # RM triggers malleability
+    ev = app.probe_adapt()
+    assert ev is not None and ev.new_ranks == 4
+    # forewarning should have pre-staged a plan (paper §III-A interaction 4)
+    assert ("appA", "data", 4) in cluster.controller._plans
+
+    app.adapt_begin()
+    new_parts = client.redistribute("data", 4)
+    client.commit_redistribution("data", 4)
+    app.adapt_commit()
+    assert app.ranks == 4
+
+    from repro.core import split_array
+    from repro.core.types import PartitionDesc
+    want = split_array(data, PartitionDesc(scheme=PartitionScheme.BLOCK,
+                                           num_parts=4))
+    for i in range(4):
+        np.testing.assert_array_equal(new_parts[i], want[i])
+    client.finalize()
+
+
+def test_malleable_shrink(cluster):
+    client = ICheckClient("appA", cluster.controller, ranks=4).init()
+    data = np.arange(101, dtype=np.int32)
+    client.add_adapt("data", data.shape, "int32", num_parts=4)
+    client.commit(step=7, parts_by_region={"data": _parts(data, 4)},
+                  blocking=True)
+    cluster.rm.schedule_resize("appA", 2)
+    new_parts = client.redistribute("data", 2)
+    got = np.concatenate([new_parts[0], new_parts[1]])
+    np.testing.assert_array_equal(got, data)
+    client.finalize()
+
+
+def test_joining_process_redistribution_subset(cluster):
+    """A joining rank only fetches the parts it needs (paper §III-B)."""
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.arange(64, dtype=np.float64)
+    client.add_adapt("data", data.shape, "float64", num_parts=2)
+    client.commit(step=1, parts_by_region={"data": _parts(data, 2)},
+                  blocking=True)
+    cluster.rm.schedule_resize("appA", 4)
+    # rank 3 (joining) asks only for its own part
+    mine = client.redistribute("data", 4, parts_needed=[3])
+    assert list(mine) == [3]
+    np.testing.assert_array_equal(mine[3], data[48:])
+    client.finalize()
+
+
+def test_capacity_pressure_grows_cluster(tmp_path):
+    """Paper SSIII-A: a full node makes the controller pull a new node from
+    the RM mid-commit; the commit must succeed, not fail with CapacityError."""
+    c = ICheckCluster(n_icheck_nodes=1, n_spare_nodes=2,
+                      node_memory=1 << 20, pfs_root=str(tmp_path / "pfs"))
+    try:
+        client = ICheckClient("big", c.controller, ranks=4).init()
+        data = np.zeros(450_000, np.float32)       # 1.8MB > one 1MB node
+        client.add_adapt("x", data.shape, "float32", num_parts=4)
+        h = client.commit(0, {"x": _parts(data, 4)}, blocking=True,
+                          drain=False)
+        assert h.done()
+        assert len(c.controller.managers()) > 1      # grew via the RM
+        meta, parts, level = client.restart()
+        got = np.concatenate([parts["x"][i] for i in range(4)])
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+    finally:
+        c.close()
+
+
+def test_rm_retake_node_migrates_shards(cluster):
+    """Paper SSIII-A: 'RM can retake nodes from iCheck' (e.g. priority job)
+    -- the controller must migrate checkpoint shards off the node first, so
+    restart still works from L1 afterwards."""
+    client = ICheckClient("appA", cluster.controller, ranks=4).init(
+        ckpt_bytes_estimate=1 << 20)
+    data = np.random.default_rng(1).normal(size=(64, 8)).astype(np.float32)
+    client.add_adapt("data", data.shape, "float32",
+                     scheme=PartitionScheme.BLOCK, num_parts=4)
+    client.commit(0, {"data": _parts(data, 4)}, blocking=True, drain=False)
+
+    victims = {a.node_id for a in cluster.controller.agents_for("appA")}
+    n0 = len(cluster.controller.managers())
+    assert cluster.rm.retake_icheck_node(next(iter(victims)))
+    assert len(cluster.controller.managers()) == n0 - 1
+
+    res = client.restart()
+    assert res is not None
+    meta, parts, level = res
+    got = np.concatenate([parts["data"][i] for i in range(4)], axis=0)
+    np.testing.assert_array_equal(got, data)
+    client.finalize()
+
+
+def test_rm_migration_request(cluster):
+    """Paper SSIII-A: 'RM can ask the controller to migrate resources to a
+    different iCheck node.'"""
+    client = ICheckClient("appA", cluster.controller, ranks=2).init()
+    data = np.arange(512, dtype=np.float32)
+    client.add_adapt("data", data.shape, "float32", num_parts=2)
+    client.commit(0, {"data": _parts(data, 2)}, blocking=True, drain=False)
+    mgrs = cluster.controller.managers()
+    assert len(mgrs) >= 2
+    src, dst = mgrs[0].node_id, mgrs[1].node_id
+    cluster.rm.request_migration(src, dst)
+    res = client.restart()
+    assert res is not None
+    got = np.concatenate([res[1]["data"][i] for i in range(2)], axis=0)
+    np.testing.assert_array_equal(got, data)
+    client.finalize()

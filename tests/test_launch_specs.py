@@ -1,0 +1,72 @@
+"""launch/specs unit tests: abstract inputs + shardings per step kind."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs import get_config, get_shape
+from repro.launch.specs import (cell_rules, cell_shardings,
+                                default_microbatches, input_specs)
+from repro.optim import AdamWConfig
+
+
+def mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def _leaves_match(specs, shardings):
+    a = jax.tree.leaves(specs)
+    b = jax.tree.leaves(shardings,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+    assert len(a) == len(b), (len(a), len(b))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "qwen3-moe-235b-a22b",
+                                  "seamless-m4t-medium", "pixtral-12b",
+                                  "rwkv6-7b", "recurrentgemma-9b"])
+def test_train_specs_consistent(arch):
+    cfg = get_config(arch)
+    shape = get_shape("train_4k")
+    specs = input_specs(cfg, shape)
+    state, batch = specs
+    assert batch["tokens"].shape == (shape.global_batch, shape.seq_len)
+    sh = cell_shardings(cfg, shape, mesh1())
+    _leaves_match(specs, sh)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-7b", "seamless-m4t-medium"])
+def test_decode_specs_consistent(arch):
+    cfg = get_config(arch)
+    shape = get_shape("decode_32k")
+    params, cache, tokens = input_specs(cfg, shape)
+    assert tokens.shape == (shape.global_batch, 1)
+    # serving params are compute-dtype, not f32 masters
+    float_dtypes = {l.dtype for l in jax.tree.leaves(params)
+                    if jnp.issubdtype(l.dtype, jnp.floating)}
+    assert float_dtypes == {jnp.dtype(cfg.dtype)}
+    sh = cell_shardings(cfg, shape, mesh1())
+    _leaves_match((params, cache, tokens), sh)
+
+
+def test_prefill_specs_have_no_labels():
+    cfg = get_config("yi-6b")
+    params, batch, cache = input_specs(cfg, get_shape("prefill_32k"))
+    assert "labels" not in batch
+
+
+def test_long500k_only_for_subquadratic():
+    from repro.configs import shapes_for
+
+    assert "long_500k" in [s.name for s in shapes_for(get_config("rwkv6-7b"))]
+    assert "long_500k" not in [s.name for s in
+                               shapes_for(get_config("yi-6b"))]
+
+
+def test_vocab_padding_applies_only_when_needed():
+    seam = get_config("seamless-m4t-medium")
+    assert seam.padded_vocab == 256256 and seam.vocab_size == 256206
+    yi = get_config("yi-6b")
+    assert yi.padded_vocab == yi.vocab_size      # 64000 % 256 == 0

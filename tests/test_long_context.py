@@ -1,0 +1,58 @@
+"""Long-context decode properties (the long_500k cell's correctness basis).
+
+RWKV-6 is position-free: decoding with the cache index advanced to 500k+
+must produce bit-identical logits (O(1) state carries no positional
+dependence).  Sliding-window/ring caches must stay finite and sane at
+arbitrary positions.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params, prefill
+
+
+def test_rwkv6_decode_position_invariant():
+    cfg = get_config("rwkv6-7b", tiny=True)
+    params, _ = init_params(cfg, jax.random.key(0))
+    B, T = 2, 16
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, T), 0,
+                                          cfg.vocab_size)}
+    cache0 = init_cache(cfg, B, 32)
+    lg, cache = jax.jit(lambda p, b, c: prefill(cfg, p, b, c))(
+        params, batch, cache0)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+
+    lg_near, _ = dec(params, cache, tok)
+    far = dict(cache, idx=jnp.asarray(524_287, jnp.int32))  # long_500k pos
+    lg_far, _ = dec(params, far, tok)
+    np.testing.assert_array_equal(np.asarray(lg_near), np.asarray(lg_far))
+
+
+def test_ring_cache_decode_stays_finite_at_large_positions():
+    """recurrentgemma: decode far past the window (ring wraps many times)
+    keeps producing finite logits and the ring never grows."""
+    cfg = get_config("recurrentgemma-9b", tiny=True)
+    params, _ = init_params(cfg, jax.random.key(0))
+    B = 2
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, 8), 0,
+                                          cfg.vocab_size)}
+    cache = init_cache(cfg, B, cfg.window * 2)
+    lg, cache = jax.jit(lambda p, b, c: prefill(cfg, p, b, c))(
+        params, batch, cache)
+    dec = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    sizes = {k: np.asarray(v).shape for k, v in
+             jax.tree_util.tree_flatten_with_path(cache)[0]}
+    for _ in range(3 * cfg.window):          # wrap the ring several times
+        lg, cache = dec(params, cache, tok)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    assert np.isfinite(np.asarray(lg)).all()
+    sizes2 = {k: np.asarray(v).shape for k, v in
+              jax.tree_util.tree_flatten_with_path(cache)[0]}
+    assert sizes == sizes2                    # O(window) state, no growth
+    assert int(cache["idx"]) == 8 + 3 * cfg.window

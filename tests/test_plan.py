@@ -1,0 +1,156 @@
+"""Property tests for the redistribution planner (paper §III-B).
+
+The plan math is the heart of iCheck's data-redistribution service; we prove
+with hypothesis that for arbitrary sizes and part counts, executing a plan
+produces exactly the arrays a fresh split of the global array would.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import plan as planlib
+from repro.core.types import PartitionDesc, PartitionScheme
+
+SCHEMES = [PartitionScheme.BLOCK, PartitionScheme.CYCLIC]
+
+
+def _desc(scheme, parts, block=1, axis=0):
+    return PartitionDesc(scheme=scheme, axis=axis, num_parts=parts, block=block)
+
+
+# --------------------------------------------------------------------- unit
+def test_block_intervals_balanced():
+    ivs = planlib.partition_intervals(10, _desc(PartitionScheme.BLOCK, 3))
+    assert ivs == [[(0, 4)], [(4, 7)], [(7, 10)]]
+
+
+def test_cyclic_intervals_block2():
+    ivs = planlib.partition_intervals(10, _desc(PartitionScheme.CYCLIC, 2, block=2))
+    assert ivs == [[(0, 2), (4, 6), (8, 10)], [(2, 4), (6, 8)]]
+
+
+def test_block_split_assemble_roundtrip():
+    arr = np.arange(24).reshape(12, 2)
+    desc = _desc(PartitionScheme.BLOCK, 5)
+    parts = planlib.split_array(arr, desc)
+    out = planlib.assemble_array(parts, desc, arr.shape)
+    np.testing.assert_array_equal(arr, out)
+
+
+def test_replicated_split():
+    arr = np.arange(6)
+    desc = PartitionDesc(scheme=PartitionScheme.REPLICATED, num_parts=3)
+    parts = planlib.split_array(arr, desc)
+    assert len(parts) == 3
+    for p in parts:
+        np.testing.assert_array_equal(p, arr)
+
+
+def test_empty_part_when_more_parts_than_rows():
+    desc = _desc(PartitionScheme.BLOCK, 5)
+    parts = planlib.split_array(np.arange(3), desc)
+    assert [p.shape[0] for p in parts] == [1, 1, 1, 0, 0]
+
+
+# --------------------------------------------------------------- properties
+@settings(max_examples=120, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    old_parts=st.integers(1, 9),
+    new_parts=st.integers(1, 9),
+    old_scheme=st.sampled_from(SCHEMES),
+    new_scheme=st.sampled_from(SCHEMES),
+    old_block=st.integers(1, 5),
+    new_block=st.integers(1, 5),
+)
+def test_redistribution_matches_fresh_split(n, old_parts, new_parts,
+                                            old_scheme, new_scheme,
+                                            old_block, new_block):
+    old = _desc(old_scheme, old_parts, old_block)
+    new = _desc(new_scheme, new_parts, new_block)
+    arr = np.arange(n * 3, dtype=np.int64).reshape(n, 3)
+
+    src_parts = {i: p for i, p in enumerate(planlib.split_array(arr, old))}
+    moves = planlib.redistribution_moves(n, old, new)
+    got = planlib.apply_moves(src_parts, moves, old, new, arr.shape)
+    want = planlib.split_array(arr, new)
+    assert len(got) == new_parts
+    for i in range(new_parts):
+        np.testing.assert_array_equal(got[i], want[i])
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    parts=st.integers(1, 10),
+    scheme=st.sampled_from(SCHEMES),
+    block=st.integers(1, 7),
+)
+def test_intervals_cover_exactly_once(n, parts, scheme, block):
+    ivs = planlib.partition_intervals(n, _desc(scheme, parts, block))
+    owned = np.zeros(n, dtype=np.int32)
+    for part_ivs in ivs:
+        for lo, hi in part_ivs:
+            assert 0 <= lo <= hi <= n
+            owned[lo:hi] += 1
+    assert (owned == 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    old_parts=st.integers(1, 6),
+    new_parts=st.integers(1, 6),
+)
+def test_moves_cover_destination_exactly_once(n, old_parts, new_parts):
+    old = _desc(PartitionScheme.BLOCK, old_parts)
+    new = _desc(PartitionScheme.CYCLIC, new_parts, block=2)
+    moves = planlib.redistribution_moves(n, old, new)
+    covered = np.zeros(n, dtype=np.int32)
+    for mv in moves:
+        covered[mv.glo:mv.ghi] += 1
+    assert (covered == 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 12),
+    old_rows_split=st.integers(1, 4),
+    old_cols_split=st.integers(1, 3),
+    new_rows_split=st.integers(1, 4),
+    new_cols_split=st.integers(1, 3),
+)
+def test_mesh_moves_roundtrip(rows, cols, old_rows_split, old_cols_split,
+                              new_rows_split, new_cols_split):
+    """N-d (mesh) generalisation: grid partitions of a 2-d array."""
+    arr = np.arange(rows * cols, dtype=np.float32).reshape(rows, cols)
+
+    def grid_boxes(rs, cs):
+        rb = planlib.partition_intervals(rows, _desc(PartitionScheme.BLOCK, rs))
+        cb = planlib.partition_intervals(cols, _desc(PartitionScheme.BLOCK, cs))
+        boxes = []
+        for r in rb:
+            for c in cb:
+                rr = r[0] if r else (0, 0)
+                cc = c[0] if c else (0, 0)
+                boxes.append((rr, cc))
+        return tuple(boxes)
+
+    old_boxes = grid_boxes(old_rows_split, old_cols_split)
+    new_boxes = grid_boxes(new_rows_split, new_cols_split)
+    src = {i: arr[b[0][0]:b[0][1], b[1][0]:b[1][1]].copy()
+           for i, b in enumerate(old_boxes)}
+    moves = planlib.mesh_moves(old_boxes, new_boxes)
+    got = planlib.apply_mesh_moves(src, moves, new_boxes, arr.dtype)
+    for i, b in enumerate(new_boxes):
+        want = arr[b[0][0]:b[0][1], b[1][0]:b[1][1]]
+        np.testing.assert_array_equal(got[i], want)
+
+
+def test_moves_bytes_accounting():
+    old = _desc(PartitionScheme.BLOCK, 2)
+    new = _desc(PartitionScheme.BLOCK, 4)
+    moves = planlib.redistribution_moves(100, old, new)
+    assert planlib.moves_bytes(moves, row_bytes=8) == 100 * 8

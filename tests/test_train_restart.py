@@ -1,0 +1,87 @@
+"""Fault tolerance: checkpoint/restart equivalence through iCheck.
+
+The restarted run must continue the *exact* trajectory of an uninterrupted
+run: same losses, same final params (CPU XLA is deterministic; snapshots
+are lossless raw bytes).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import ICheckCluster
+from repro.optim import AdamWConfig
+from repro.train import ElasticTrainer
+
+CFG = get_config("qwen2.5-3b", tiny=True)
+SHAPE = ShapeConfig("t", "train", 32, 4)
+OPT = AdamWConfig(lr=1e-3)
+
+
+def losses_of(trainer):
+    return [m["loss"] for m in trainer.metrics_log]
+
+
+@pytest.mark.slow
+def test_restart_equivalence():
+    # uninterrupted reference run: 20 steps
+    with ICheckCluster(n_icheck_nodes=2) as cluster:
+        ref = ElasticTrainer(CFG, SHAPE, cluster, app_id="ref", seed=3,
+                             opt_cfg=OPT, commit_every=100, probe_every=0,
+                             total_steps=20)
+        ref.run(20)
+        ref_losses = losses_of(ref)
+        ref_params = jax.tree.leaves(ref.state.params)
+        ref.finalize()
+
+    with ICheckCluster(n_icheck_nodes=2) as cluster:
+        # interrupted run: 10 steps, commit, "crash" (no finalize)
+        t1 = ElasticTrainer(CFG, SHAPE, cluster, app_id="app", seed=3,
+                            opt_cfg=OPT, commit_every=100, probe_every=0,
+                            total_steps=20)
+        assert not t1.restarted
+        t1.run(10)
+        first_losses = losses_of(t1)
+        t1.commit(blocking=True)
+
+        # new process-equivalent: fresh trainer, same app_id -> restart
+        t2 = ElasticTrainer(CFG, SHAPE, cluster, app_id="app", seed=3,
+                            opt_cfg=OPT, commit_every=100, probe_every=0,
+                            total_steps=20)
+        assert t2.restarted
+        assert int(t2.state.step) == 10
+        assert t2.data.state.step == 10
+        t2.run(10)
+        resumed_losses = losses_of(t2)
+        t2.finalize()
+
+    full = first_losses + resumed_losses
+    np.testing.assert_allclose(full, ref_losses, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(t2.state.params), ref_params):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_restart_from_l2_after_l1_loss():
+    """Kill every iCheck node after drain: restart must come from the PFS."""
+    with ICheckCluster(n_icheck_nodes=2, keep_l1=1) as cluster:
+        t1 = ElasticTrainer(CFG, SHAPE, cluster, app_id="app", seed=1,
+                            opt_cfg=OPT, commit_every=100, probe_every=0,
+                            total_steps=10)
+        t1.run(4)
+        t1.commit(blocking=True)
+        cluster.controller.wait_for_drains(timeout=30)
+        # simulate loss of all L1 replicas
+        for mgr in cluster.controller.managers():
+            for agent in list(mgr.agents()):
+                cluster.fault.kill_agent(agent.agent_id)
+
+        t2 = ElasticTrainer(CFG, SHAPE, cluster, app_id="app", seed=1,
+                            opt_cfg=OPT, commit_every=100, probe_every=0,
+                            total_steps=10)
+        assert t2.restarted
+        assert int(t2.state.step) == 4
+        t2.run(2)
+        assert np.isfinite(t2.metrics_log[-1]["loss"])
