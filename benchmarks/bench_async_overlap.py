@@ -22,20 +22,21 @@ NIC_BW = 25e9
 STEPS = 5
 
 
-def run(verbose: bool = True) -> dict:
+def run(verbose: bool = True, payload: int = PAYLOAD, parts_n: int = PARTS,
+        steps: int = STEPS, nodes: int = 4) -> dict:
     data = np.random.default_rng(0).standard_normal(
-        PAYLOAD // 4).astype(np.float32)
-    parts = block_parts(data, PARTS)
+        payload // 4).astype(np.float32)
+    parts = block_parts(data, parts_n)
 
-    with ICheckCluster(n_icheck_nodes=4, node_memory=8 << 30,
+    with ICheckCluster(n_icheck_nodes=nodes, node_memory=8 << 30,
                        nic_bandwidth=NIC_BW, pfs_bandwidth=PFS_BW) as c:
-        client = ICheckClient("app", c.controller, ranks=PARTS).init(
-            ckpt_bytes_estimate=PAYLOAD)
-        client.add_adapt("x", data.shape, "float32", num_parts=PARTS)
+        client = ICheckClient("app", c.controller, ranks=parts_n).init(
+            ckpt_bytes_estimate=payload)
+        client.add_adapt("x", data.shape, "float32", num_parts=parts_n)
 
         async_block_wall = []
         async_total_sim = []
-        for step in range(STEPS):
+        for step in range(steps):
             t0 = time.monotonic()
             sim0 = c.clock.now()
             h = client.commit(step, {"x": parts})   # returns immediately
@@ -49,12 +50,12 @@ def run(verbose: bool = True) -> dict:
 
     # blocking baseline: the app stalls for the fabric transfer AND the
     # PFS write before resuming (no agents, no overlap)
-    blocking_sim = PAYLOAD / NIC_BW + PAYLOAD / PFS_BW
+    blocking_sim = payload / NIC_BW + payload / PFS_BW
 
     wall = float(np.mean([w for w, _ in async_block_wall]))
     sim_stall = float(np.mean([s for _, s in async_block_wall]))
     out = {
-        "payload": PAYLOAD,
+        "payload": payload,
         "async_app_stall_sim_s": sim_stall,
         "async_host_serialize_wall_s": wall,
         "async_transfer_sim_s_hidden": float(np.mean(async_total_sim)),
@@ -63,7 +64,7 @@ def run(verbose: bool = True) -> dict:
     }
     save("b2_async_overlap", out)
     if verbose:
-        print(f"\nB2 app-perceived commit cost ({fmt_bytes(PAYLOAD)}):")
+        print(f"\nB2 app-perceived commit cost ({fmt_bytes(payload)}):")
         print(f"  blocking (NIC+PFS in the app's critical path): "
               f"{blocking_sim:.3f} s stall per checkpoint")
         print(f"  iCheck async commit: {sim_stall:.4f} s fabric stall "
@@ -71,6 +72,11 @@ def run(verbose: bool = True) -> dict:
               f"hidden behind compute; host-side snapshot serialize "
               f"{wall*1e3:.0f} ms wall, overlappable via D2H async copy)")
     return out
+
+
+def run_smoke(verbose: bool = True) -> dict:
+    """Seconds-scale perf canary for CI: tiny payload, two steps."""
+    return run(verbose=verbose, payload=4 << 20, parts_n=4, steps=2, nodes=2)
 
 
 if __name__ == "__main__":

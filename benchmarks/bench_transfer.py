@@ -18,22 +18,24 @@ NODES = 8
 NIC_BW = 25e9
 PAYLOAD = 256 << 20      # 256 MiB checkpoint
 PARTS = 32
+AGENT_SWEEP = (1, 2, 4, 6, 8, 12, 16)
 
 
-def run(verbose: bool = True) -> dict:
+def run(verbose: bool = True, payload: int = PAYLOAD, parts: int = PARTS,
+        nodes: int = NODES, agent_sweep=AGENT_SWEEP) -> dict:
     rows = []
     data = np.random.default_rng(0).standard_normal(
-        PAYLOAD // 4).astype(np.float32)
-    for n_agents in (1, 2, 4, 6, 8, 12, 16):
-        with ICheckCluster(n_icheck_nodes=NODES, n_spare_nodes=0,
+        payload // 4).astype(np.float32)
+    for n_agents in agent_sweep:
+        with ICheckCluster(n_icheck_nodes=nodes, n_spare_nodes=0,
                            node_memory=4 << 30, nic_bandwidth=NIC_BW) as c:
             c.controller.policy = FixedCountPolicy(n_agents)
-            client = ICheckClient("app", c.controller, ranks=PARTS).init(
-                ckpt_bytes_estimate=PAYLOAD)
-            client.add_adapt("x", data.shape, "float32", num_parts=PARTS)
-            h = client.commit(0, {"x": block_parts(data, PARTS)},
+            client = ICheckClient("app", c.controller, ranks=parts).init(
+                ckpt_bytes_estimate=payload)
+            client.add_adapt("x", data.shape, "float32", num_parts=parts)
+            h = client.commit(0, {"x": block_parts(data, parts)},
                               blocking=True, drain=False)
-            rate = PAYLOAD / max(h.sim_duration, 1e-9)
+            rate = payload / max(h.sim_duration, 1e-9)
             rows.append({"agents": n_agents, "sim_s": h.sim_duration,
                          "rate_Bps": rate})
             client.finalize()
@@ -41,17 +43,23 @@ def run(verbose: bool = True) -> dict:
     max_rate = max(r["rate_Bps"] for r in rows)
     knee = next(r["agents"] for r in rows
                 if r["rate_Bps"] >= 0.95 * max_rate)
-    out = {"nodes": NODES, "payload": PAYLOAD, "rows": rows, "knee": knee}
+    out = {"nodes": nodes, "payload": payload, "rows": rows, "knee": knee}
     save("b1_transfer", out)
     if verbose:
-        print(f"\nB1 transfer rate vs agents ({NODES} nodes, "
-              f"{fmt_bytes(PAYLOAD)} ckpt, NIC {fmt_bytes(NIC_BW)}/s):")
+        print(f"\nB1 transfer rate vs agents ({nodes} nodes, "
+              f"{fmt_bytes(payload)} ckpt, NIC {fmt_bytes(NIC_BW)}/s):")
         for r in rows:
             bar = "#" * int(r["rate_Bps"] / (NIC_BW / 4))
             print(f"  agents={r['agents']:3d}  rate={fmt_bytes(r['rate_Bps'])}/s "
                   f"({r['sim_s']:.3f}s sim)  {bar}")
         print(f"  knee at ~{knee} agents (= node count: NIC-bound beyond)")
     return out
+
+
+def run_smoke(verbose: bool = True) -> dict:
+    """Seconds-scale perf canary for CI: tiny payload, short sweep."""
+    return run(verbose=verbose, payload=4 << 20, parts=4, nodes=2,
+               agent_sweep=(1, 2, 4))
 
 
 if __name__ == "__main__":

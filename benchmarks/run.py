@@ -1,6 +1,9 @@
 """Benchmark driver: one benchmark per paper claim (DESIGN.md SS6).
 
-  PYTHONPATH=src python -m benchmarks.run [--only b1,b3]
+  PYTHONPATH=src python -m benchmarks.run [--only b1,b3] [--smoke]
+
+``--smoke`` runs the seconds-scale perf canary (b1 + b2 at tiny payloads)
+used by CI to catch control/data-plane throughput regressions.
 """
 from __future__ import annotations
 
@@ -24,17 +27,28 @@ ALL = {
     "b8": ("serving decode", bench_serving.run),
 }
 
+SMOKE = {
+    "b1": ("agent-count transfer knee (smoke)", bench_transfer.run_smoke),
+    "b2": ("async commit overlap (smoke)", bench_async_overlap.run_smoke),
+}
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. b1,b3")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale perf canary (CI)")
     args = ap.parse_args(argv)
-    names = list(ALL) if not args.only else args.only.split(",")
+    table = SMOKE if args.smoke else ALL
+    names = list(table) if not args.only else args.only.split(",")
+    unknown = [n for n in names if n not in table]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; have {sorted(table)}")
     failures = []
     t0 = time.monotonic()
     for name in names:
-        desc, fn = ALL[name]
+        desc, fn = table[name]
         print(f"\n===== {name.upper()}: {desc} =====")
         try:
             t = time.monotonic()

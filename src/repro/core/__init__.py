@@ -9,6 +9,7 @@ from .agent import Agent, AgentDead
 from .client import CommitHandle, ICheckClient
 from .cluster import ICheckCluster
 from .controller import Controller
+from .events import AuditLog, Event, EventBus
 from .malleable import MalleableApp, ProcType
 from .manager import Manager
 from .plan import (Move, MeshMove, apply_mesh_moves, apply_moves,
@@ -20,7 +21,10 @@ from .policies import (AdaptivePolicy, BandwidthBalancedPolicy,
 from .rm import ResizeEvent, ResourceManager
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
 from .snapshot import HostSnapshot, restore_pytree, snapshot_pytree
-from .store import MemoryStore, PFSStore, crc32
+from .tiers import (LocalDiskTier, MemoryTier, PFSTier, StorageTier,
+                    TierPipeline, crc32, decode_payload, encode_payload,
+                    resolve_codec)
+from .store import MemoryStore, PFSStore
 from .types import (AppRecord, AppStatus, CheckpointMeta, CkptStatus,
                     ICheckError, IntegrityError, CapacityError, NodeSpec,
                     PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
@@ -28,14 +32,17 @@ from .types import (AppRecord, AppStatus, CheckpointMeta, CkptStatus,
 
 __all__ = [
     "Agent", "AgentDead", "CommitHandle", "ICheckClient", "ICheckCluster",
-    "Controller", "MalleableApp", "ProcType", "Manager", "Move", "MeshMove",
+    "Controller", "AuditLog", "Event", "EventBus", "MalleableApp",
+    "ProcType", "Manager", "Move", "MeshMove",
     "apply_mesh_moves", "apply_moves", "assemble_array", "boxes_to_desc",
     "local_shape", "mesh_moves", "mesh_part_bounds", "partition_intervals",
     "redistribution_moves", "split_array", "AdaptivePolicy",
     "BandwidthBalancedPolicy", "MemoryAwarePolicy", "StaticPolicy",
     "get_policy", "ResizeEvent", "ResourceManager", "EWMA", "FaultInjector",
     "SimClock", "SimNIC", "HostSnapshot", "restore_pytree", "snapshot_pytree",
-    "MemoryStore", "PFSStore", "crc32", "AppRecord", "AppStatus",
+    "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
+    "StorageTier", "TierPipeline", "crc32", "encode_payload",
+    "decode_payload", "resolve_codec", "AppRecord", "AppStatus",
     "CheckpointMeta", "CkptStatus", "ICheckError", "IntegrityError",
     "CapacityError", "NodeSpec", "PartitionDesc", "PartitionScheme",
     "RegionMeta", "ShardInfo", "ShardKey",

@@ -5,10 +5,11 @@ libfabric) and data redistribution (for malleable implementations).  Multiple
 agents can be assigned to a single application, and iCheck can dynamically
 change the agent count to obtain an optimum checkpoint transfer rate." (§II)
 
-An Agent here is a worker thread bound to an iCheck node's memory store and
-NIC.  Writes (RDMA puts from the application) and L2 drains run through its
+An Agent here is a worker thread bound to an iCheck node's storage tiers
+(a ``TierPipeline``: L1 RAM + optional L0.5 local-disk spill) and NIC.
+Writes (RDMA puts from the application) and L2 drains run through its
 queue; reads for restart/redistribution are served concurrently off the
-thread-safe store with simulated NIC time.  All payloads are real bytes.
+thread-safe tiers with simulated NIC time.  All payloads are real bytes.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ from concurrent.futures import Future
 from typing import Callable, List, Optional
 
 from .simnet import EWMA, FaultInjector, SimNIC
-from .store import MemoryStore, PFSStore, crc32
+from .tiers import PFSTier, TierPipeline, crc32
 from .types import AgentId, NodeId, ShardKey, TransferRecord
 
 
@@ -43,7 +44,7 @@ class _Op:
 class Agent:
     """One checkpoint agent living on an iCheck node."""
 
-    def __init__(self, agent_id: AgentId, node_id: NodeId, store: MemoryStore,
+    def __init__(self, agent_id: AgentId, node_id: NodeId, store: TierPipeline,
                  nic: SimNIC, fault: Optional[FaultInjector] = None):
         self.agent_id = agent_id
         self.node_id = node_id
@@ -79,7 +80,7 @@ class Agent:
         return self.store.has(key)
 
     # ------------------------------------------------------------------ L2
-    def drain(self, keys: List[ShardKey], pfs: PFSStore,
+    def drain(self, keys: List[ShardKey], pfs: PFSTier,
               on_done: Optional[Callable] = None) -> Future:
         """Write the given L1 shards to the PFS (asynchronously)."""
         fut: Future = Future()

@@ -27,30 +27,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import events as E
 from . import plan as planlib
 from .agent import Agent, AgentDead
 from .controller import Controller
-from .store import crc32
+from .tiers import crc32, decode_payload, encode_payload, resolve_codec
 from .types import (AppId, CapacityError, CheckpointMeta, ICheckError,
                     PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
                     ShardKey)
-
-try:
-    import zstandard as _zstd
-except Exception:  # pragma: no cover
-    _zstd = None
-
-
-def _encode(payload: bytes, codec: str) -> bytes:
-    if codec == "zstd" and _zstd is not None:
-        return _zstd.ZstdCompressor(level=1).compress(bytes(payload))
-    return bytes(payload)
-
-
-def _decode(payload: bytes, codec: str) -> bytes:
-    if codec == "zstd" and _zstd is not None:
-        return _zstd.ZstdDecompressor().decompress(payload)
-    return payload
 
 
 class CommitHandle:
@@ -156,7 +140,13 @@ class ICheckClient:
         self.controller = controller
         self.ranks = ranks
         self.replication = max(1, replication)
-        self.codec = codec
+        # codec resolution is part of the tier pipeline now: a requested
+        # codec this process can't run (e.g. zstd without zstandard) degrades
+        # to "none" with an audit event instead of mis-labelling shards
+        self.codec = resolve_codec(codec, on_degrade=lambda req, actual:
+                                   controller.bus.publish(
+                                       E.CODEC_DEGRADED, app=app_id,
+                                       requested=req, actual=actual))
         self.ckpt_interval_s = ckpt_interval_s
         self.agents: List[Agent] = []
         self.regions: Dict[str, RegionMeta] = {}
@@ -241,8 +231,17 @@ class ICheckClient:
             raise ICheckError("no agents assigned")
         puts: List[Tuple[ShardKey, bytes, Agent]] = []
         for name, parts in parts_by_region.items():
+            # a region restored from a manifest may carry a codec this
+            # process can't run (e.g. zstd without zstandard): degrade it
+            # here so the new shards and manifest stay self-consistent
+            metas[name].codec = resolve_codec(
+                metas[name].codec, on_degrade=lambda req, actual:
+                self.controller.bus.publish(E.CODEC_DEGRADED, app=self.app_id,
+                                            region=name, requested=req,
+                                            actual=actual))
             for part, arr in parts.items():
-                payload = _encode(np.ascontiguousarray(arr).tobytes(), self.codec)
+                payload = encode_payload(np.ascontiguousarray(arr).tobytes(),
+                                         metas[name].codec, metas[name].dtype)
                 for rep in range(self.replication):
                     key = ShardKey(self.app_id, ckpt.ckpt_id, name, part, rep)
                     agent = agents[(self._rr + rep) % len(agents)]
@@ -275,10 +274,10 @@ class ICheckClient:
         for name, region in meta.regions.items():
             parts: Dict[int, np.ndarray] = {}
             for part in range(region.partition.num_parts):
-                payload = _decode(
+                payload = decode_payload(
                     self.controller.fetch_shard(self.app_id, meta.ckpt_id,
                                                 name, part),
-                    region.codec)
+                    region.codec, region.dtype)
                 arr = np.frombuffer(bytearray(payload),
                                     dtype=np.dtype(region.dtype))
                 parts[part] = arr.reshape(self._part_shape(region, part))
@@ -318,8 +317,8 @@ class ICheckClient:
         needed_src = sorted({mv.src for mv in moves if mv.dst in wanted})
         src_parts: Dict[int, np.ndarray] = {}
         for sp in needed_src:
-            payload = _decode(self.controller.fetch_shard(
-                self.app_id, ckpt_id, name, sp), region.codec)
+            payload = decode_payload(self.controller.fetch_shard(
+                self.app_id, ckpt_id, name, sp), region.codec, region.dtype)
             src_parts[sp] = np.frombuffer(bytearray(payload),
                                           dtype=np.dtype(region.dtype)) \
                 .reshape(self._part_shape(region, sp))
@@ -352,8 +351,8 @@ class ICheckClient:
         needed_src = sorted({mv.src for mv in moves})
         src_parts: Dict[int, np.ndarray] = {}
         for sp in needed_src:
-            payload = _decode(self.controller.fetch_shard(
-                self.app_id, ckpt_id, name, sp), region.codec)
+            payload = decode_payload(self.controller.fetch_shard(
+                self.app_id, ckpt_id, name, sp), region.codec, region.dtype)
             src_parts[sp] = np.frombuffer(bytearray(payload),
                                           dtype=np.dtype(region.dtype)) \
                 .reshape(self._part_shape(region, sp))

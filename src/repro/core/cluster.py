@@ -1,6 +1,6 @@
 """Convenience assembly of a full iCheck deployment for tests / examples /
-benchmarks: RM + controller + N iCheck nodes + PFS, all on one simulated
-fabric clock."""
+benchmarks: RM + controller (service core) + N iCheck nodes + PFS, all on
+one simulated fabric clock."""
 from __future__ import annotations
 
 import tempfile
@@ -9,7 +9,7 @@ from typing import Optional
 from .controller import Controller
 from .rm import ResourceManager
 from .simnet import FaultInjector, SimClock
-from .store import PFSStore
+from .tiers import PFSTier
 
 
 class ICheckCluster:
@@ -17,7 +17,8 @@ class ICheckCluster:
                  node_memory: int = 8 << 30, nic_bandwidth: float = 25e9,
                  pfs_bandwidth: float = 40e9, pfs_root: Optional[str] = None,
                  policy: str = "adaptive", time_scale: float = 0.0,
-                 keep_l1: int = 2, max_concurrent_drains: int = 2):
+                 keep_l1: int = 2, max_concurrent_drains: int = 2,
+                 spill_bytes: int = 0):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -26,13 +27,22 @@ class ICheckCluster:
                               nic_bandwidth=nic_bandwidth)
         self._tmp = None
         if pfs_root is None:
-            self._tmp = tempfile.TemporaryDirectory(prefix="icheck-pfs-")
+            # ignore_cleanup_errors: a drain/agent thread that outlives its
+            # join timeout must not turn teardown into an OSError
+            self._tmp = tempfile.TemporaryDirectory(
+                prefix="icheck-pfs-", ignore_cleanup_errors=True)
             pfs_root = self._tmp.name
-        self.pfs = PFSStore(pfs_root, bandwidth=pfs_bandwidth, clock=self.clock)
+        self.pfs = PFSTier(pfs_root, bandwidth=pfs_bandwidth, clock=self.clock)
         self.controller = Controller(
             self.rm, self.pfs, policy=policy, initial_nodes=n_icheck_nodes,
             clock=self.clock, fault=self.fault, keep_l1=keep_l1,
-            max_concurrent_drains=max_concurrent_drains)
+            max_concurrent_drains=max_concurrent_drains,
+            spill_bytes=spill_bytes)
+
+    @property
+    def bus(self):
+        """The controller's event bus (subscribe for telemetry)."""
+        return self.controller.bus
 
     def close(self) -> None:
         self.controller.close()

@@ -1,4 +1,4 @@
-"""The iCheck Controller.
+"""The iCheck Controller — a thin coordinator over the checkpoint services.
 
 "The controller has a global view and performs the agent and node selection
 for connected applications based on the iCheck agent scheduling policies ...
@@ -7,68 +7,79 @@ based on resource availability.  In addition, the controller will also
 orchestrate the writing of the checkpoint data into PFS by minimizing the
 effect on running applications." (§II)
 
-Implements:
-  * application registration and policy-driven agent placement (§II steps 1-6)
-  * checkpoint lifecycle: PENDING → IN_L1 → DRAINING → IN_L2, with L1 GC
-  * orchestrated PFS drains (bounded concurrency = interference control)
-  * agent-count adaptivity (``icheck_probe_agents`` handling)
-  * node grant/retake/migrate against the malleable RM (§III-A)
-  * failure detection (heartbeats) + shard re-replication, straggler advice
-  * resize forewarning → pre-staged redistribution plans (§III-A item 4)
+The behaviour itself lives in focused subsystems (see ARCHITECTURE.md):
+
+  * :class:`~.services.placement.PlacementService` — policy-driven agent
+    placement + ``icheck_probe_agents`` adaptivity (paper §II steps 1-6)
+  * :class:`~.services.catalog.CheckpointCatalog` — checkpoint lifecycle
+    (PENDING → IN_L1 → DRAINING → IN_L2) and the multi-level read path
+  * :class:`~.services.drain.DrainOrchestrator` — bounded-concurrency PFS
+    drains + L1 GC (interference control, §II)
+  * :class:`~.services.health.HealthMonitor` — heartbeats, re-replication,
+    straggler advice, RM node retake/migration (§III-A items 2-3)
+  * :class:`~.services.resize.ResizePlanner` — resize forewarning →
+    pre-staged redistribution plans (§III-A item 4)
+
+Services communicate through the :class:`~.events.EventBus`; the legacy
+``Controller.events`` audit list is an :class:`~.events.AuditLog` subscriber
+and stays byte-compatible with the pre-refactor format.
 """
 from __future__ import annotations
 
-import itertools
-import queue
 import threading
 from typing import Dict, List, Optional, Tuple
 
 from . import plan as planlib
 from .agent import Agent
+from .events import AuditLog, EventBus, NODE_ADDED, NODE_REQUEST_DENIED, \
+    APP_REGISTERED
 from .manager import Manager
-from .policies import NodeView, SchedulingPolicy, get_policy
+from .policies import NodeView, SchedulingPolicy
 from .rm import ResourceManager
+from .services import (CheckpointCatalog, DrainOrchestrator, HealthMonitor,
+                       PlacementService, ResizePlanner)
 from .simnet import FaultInjector, SimClock
-from .store import PFSStore
+from .tiers import PFSTier
 from .types import (AppId, AppRecord, AppStatus, CheckpointMeta, CkptId,
-                    CkptStatus, ICheckError, NodeSpec, PartitionDesc,
-                    PartitionScheme, RegionMeta, ShardInfo, ShardKey)
+                    ICheckError, NodeSpec, RegionMeta, ShardInfo)
 
 
 class Controller:
-    def __init__(self, rm: ResourceManager, pfs: PFSStore,
-                 policy: str | SchedulingPolicy = "adaptive",
+    def __init__(self, rm: ResourceManager, pfs: PFSTier,
+                 policy: "str | SchedulingPolicy" = "adaptive",
                  initial_nodes: int = 1, clock: Optional[SimClock] = None,
                  fault: Optional[FaultInjector] = None,
                  keep_l1: int = 2, max_concurrent_drains: int = 2,
-                 heartbeat_interval_s: float = 0.05):
+                 heartbeat_interval_s: float = 0.05,
+                 spill_bytes: int = 0):
         self.rm = rm
         self.pfs = pfs
         self.clock = clock or SimClock()
         self.fault = fault or FaultInjector()
-        self.policy = get_policy(policy) if isinstance(policy, str) else policy
         self.keep_l1 = keep_l1
+        self.spill_bytes = int(spill_bytes)
         self._managers: Dict[str, Manager] = {}
         self._apps: Dict[AppId, AppRecord] = {}
         self._regions: Dict[AppId, Dict[str, RegionMeta]] = {}
-        self._plans: Dict[Tuple[AppId, str, int], List[planlib.Move]] = {}
         self._lock = threading.RLock()
-        self._ckpt_seq: Dict[AppId, itertools.count] = {}
-        # flush orchestration
-        self._drain_q: "queue.Queue" = queue.Queue()
-        self._drain_sem = threading.Semaphore(max_concurrent_drains)
-        self._stop = threading.Event()
-        self._flusher = threading.Thread(target=self._flush_loop, daemon=True,
-                                         name="icheck-flusher")
-        self._monitor = threading.Thread(target=self._monitor_loop, daemon=True,
-                                         name="icheck-monitor")
-        self._hb_interval = heartbeat_interval_s
-        self.events: List[dict] = []          # audit log for tests/benchmarks
+
+        # control plane: event bus + audit log (legacy ``events`` list)
+        self.bus = EventBus(self.clock)
+        self.audit = AuditLog()
+        self.bus.subscribe(self.audit)
+
+        # service core
+        self.placement = PlacementService(self, policy)
+        self.catalog = CheckpointCatalog(self)
+        self.drains = DrainOrchestrator(self, max_concurrent=max_concurrent_drains,
+                                        keep_l1=keep_l1)
+        self.health = HealthMonitor(self, heartbeat_interval_s)
+        self.resize = ResizePlanner(self)
 
         # wire the RM plugin callbacks (§III-A)
-        rm.on_retake = self._on_rm_retake
-        rm.on_migrate = self._on_rm_migrate
-        rm.on_app_info = self._on_rm_app_info
+        rm.on_retake = self.health.on_rm_retake
+        rm.on_migrate = self.health.on_rm_migrate
+        rm.on_app_info = self.resize.on_app_info
 
         for _ in range(initial_nodes):
             spec = rm.request_icheck_node()
@@ -76,15 +87,34 @@ class Controller:
                 raise ICheckError("RM has no free nodes for iCheck bootstrap")
             self._add_node(spec)
 
-        self._flusher.start()
-        self._monitor.start()
+        self.drains.start()
+        self.health.start()
+
+    # ------------------------------------------------- legacy-compat surface
+    @property
+    def events(self) -> List[dict]:
+        """Audit log (byte-compatible with the pre-service-core format)."""
+        return self.audit.records
+
+    @property
+    def policy(self) -> SchedulingPolicy:
+        return self.placement.policy
+
+    @policy.setter
+    def policy(self, p: SchedulingPolicy) -> None:
+        self.placement.policy = p
+
+    @property
+    def _plans(self):
+        return self.resize.plans
 
     # ================================================================= nodes
     def _add_node(self, spec: NodeSpec) -> Manager:
-        mgr = Manager(spec, clock=self.clock, fault=self.fault)
+        mgr = Manager(spec, clock=self.clock, fault=self.fault, bus=self.bus,
+                      spill_bytes=self.spill_bytes)
         with self._lock:
             self._managers[spec.node_id] = mgr
-        self._log("node_added", node=spec.node_id)
+        self.bus.publish(NODE_ADDED, node=spec.node_id)
         return mgr
 
     def managers(self) -> List[Manager]:
@@ -98,7 +128,7 @@ class Controller:
         """Ask the RM for one more iCheck node (paper §III-A interaction 1)."""
         spec = self.rm.request_icheck_node()
         if spec is None:
-            self._log("node_request_denied")
+            self.bus.publish(NODE_REQUEST_DENIED)
             return False
         self._add_node(spec)
         return True
@@ -124,57 +154,16 @@ class Controller:
                             replication=replication)
             self._apps[app_id] = app
             self._regions[app_id] = {}
-            self._ckpt_seq[app_id] = itertools.count()
+            self.catalog.open_app(app_id)
         self.rm.register_app(app_id, ranks)
-        self._ensure_memory(app)
-        agents = self._place_agents(app)
+        self.placement.ensure_memory(app)
+        agents = self.placement.place_app(app)
         with self._lock:
             app.agents = [a.agent_id for a in agents]
             app.status = AppStatus.CONNECTED
-        self._log("app_registered", app=app_id, agents=[a.agent_id for a in agents])
+        self.bus.publish(APP_REGISTERED, app=app_id,
+                         agents=[a.agent_id for a in agents])
         return agents
-
-    def _ensure_memory(self, app: AppRecord) -> None:
-        need = app.ckpt_bytes_estimate * app.replication * max(1, self.keep_l1)
-        guard = 0
-        while self.total_free_memory() < need and guard < 16:
-            if not self.request_more_memory():
-                break
-            guard += 1
-
-    def _place_agents(self, app: AppRecord) -> List[Agent]:
-        placement = self.policy.place(self.node_views(), app)
-        agents: List[Agent] = []
-        for node_id, count in placement:
-            mgr = self._managers[node_id]
-            for _ in range(count):
-                agents.append(mgr.launch_agent(app.app_id))
-        return agents
-
-    def handle_capacity_pressure(self, app_id: AppId) -> List[Agent]:
-        """A commit hit a full node (paper SSIII-A: "when iCheck runs out of
-        memory in a node, the controller can request more memory and get
-        additional nodes from RM").  Grow by one node if the RM has any;
-        either way, give the app an agent on the freest node it doesn't
-        already use, and return the refreshed agent set."""
-        self.request_more_memory()
-        with self._lock:
-            have = set(self._apps[app_id].agents)
-        used_nodes = {aid.split("/")[0] for aid in have}
-        views = sorted(self.node_views(), key=lambda nv: -nv.free_memory)
-        for prefer_new in (True, False):
-            for nv in views:
-                if prefer_new and nv.node_id in used_nodes:
-                    continue
-                mgr = self._managers[nv.node_id]
-                if len(mgr.agents()) < mgr.spec.max_agents:
-                    agent = mgr.launch_agent(app_id)
-                    with self._lock:
-                        self._apps[app_id].agents.append(agent.agent_id)
-                    self._log("capacity_grow", app=app_id,
-                              node=nv.node_id, agent=agent.agent_id)
-                    return self.agents_for(app_id)
-        return self.agents_for(app_id)
 
     def agents_for(self, app_id: AppId) -> List[Agent]:
         with self._lock:
@@ -208,424 +197,52 @@ class Controller:
             if app:
                 app.status = AppStatus.FINISHED
 
-    # ============================================================ checkpoints
+    # =================================================== service delegation
+    # checkpoints (catalog)
     def new_checkpoint(self, app_id: AppId, step: int,
                        regions: Dict[str, RegionMeta],
                        userdata: bytes = b"") -> CheckpointMeta:
-        with self._lock:
-            app = self._apps[app_id]
-            ckpt_id = next(self._ckpt_seq[app_id])
-            meta = CheckpointMeta(app_id=app_id, ckpt_id=ckpt_id, step=step,
-                                  regions=dict(regions), userdata=userdata)
-            app.checkpoints[ckpt_id] = meta
-            total = sum(r.nbytes for r in regions.values())
-            app.ckpt_bytes_estimate = max(app.ckpt_bytes_estimate, total)
-        return meta
+        return self.catalog.new_checkpoint(app_id, step, regions, userdata)
 
     def record_shard(self, meta: CheckpointMeta, info: ShardInfo) -> None:
-        with self._lock:
-            meta.shards[info.key] = info
+        self.catalog.record_shard(meta, info)
 
     def finalize_checkpoint(self, meta: CheckpointMeta, drain: bool = True) -> None:
-        """All shards acked in L1 → durable pipeline."""
-        with self._lock:
-            if not meta.is_complete_in_l1():
-                raise ICheckError(
-                    f"checkpoint {meta.ckpt_id} incomplete: "
-                    f"{len(meta.shards)}/{meta.expected_shards()} shards")
-            meta.status = CkptStatus.IN_L1
-            meta.completed_at = self.clock.now()
-        self._log("ckpt_in_l1", app=meta.app_id, ckpt=meta.ckpt_id, step=meta.step)
-        if drain:
-            self._drain_q.put(meta)
+        self.catalog.finalize(meta, drain=drain)
 
     def latest_restartable(self, app_id: AppId) -> Optional[Tuple[CheckpointMeta, str]]:
-        """Newest usable checkpoint: L1 preferred (fast), else L2 (durable)."""
-        with self._lock:
-            app = self._apps.get(app_id)
-            metas = sorted(app.checkpoints.values(), key=lambda m: -m.ckpt_id) \
-                if app else []
-        for meta in metas:
-            if meta.status in (CkptStatus.IN_L1, CkptStatus.DRAINING) \
-                    and self._l1_complete(meta):
-                return meta, "l1"
-            if meta.status == CkptStatus.IN_L2:
-                if self._l1_complete(meta):
-                    return meta, "l1"
-                return meta, "l2"
-        # cold restart: nothing in memory (e.g. new controller) — scan PFS
-        for ckpt_id in reversed(self.pfs.list_checkpoints(app_id)):
-            meta = self.pfs.read_manifest(app_id, ckpt_id)
-            if meta is not None and self.pfs.checkpoint_complete(meta):
-                meta.status = CkptStatus.IN_L2
-                with self._lock:
-                    if app is not None:
-                        app.checkpoints.setdefault(ckpt_id, meta)
-                return meta, "l2"
-        return None
-
-    def _l1_complete(self, meta: CheckpointMeta) -> bool:
-        for name, region in meta.regions.items():
-            for part in range(region.partition.num_parts):
-                if next(self._agents_with(meta.app_id, meta.ckpt_id, name,
-                                          part), None) is None:
-                    return False
-        return True
-
-    def _agents_with(self, app_id: AppId, ckpt_id: CkptId, region: str,
-                     part: int):
-        """Live (agent, key) pairs holding any replica of the shard."""
-        for mgr in self.managers():
-            if not mgr.alive():
-                continue
-            for agent in mgr.agents():
-                if not agent.alive():        # failover: skip dead replicas
-                    continue
-                for rep in range(4):
-                    k = ShardKey(app_id, ckpt_id, region, part, rep)
-                    if agent.has(k):
-                        yield agent, k
+        return self.catalog.latest_restartable(app_id)
 
     def fetch_shard(self, app_id: AppId, ckpt_id: CkptId, region: str,
                     part: int) -> bytes:
-        """Restart/redistribution read path: L1 via any *live* holding agent
-        (replicas tried in turn), else L2 (PFS)."""
-        for agent, k in self._agents_with(app_id, ckpt_id, region, part):
-            try:
-                return agent.get(k)
-            except (AgentDead, ConnectionError):
-                continue                     # race with a failure: next copy
-        key = ShardKey(app_id, ckpt_id, region, part)
-        if self.pfs.has_shard(key):
-            return self.pfs.read_shard(key)
-        raise KeyError(f"shard {app_id}/{ckpt_id}/{region}/{part} lost")
+        return self.catalog.fetch_shard(app_id, ckpt_id, region, part)
 
-    # ------------------------------------------------------- drain / L1 GC
-    def _flush_loop(self) -> None:
-        while not self._stop.is_set():
-            try:
-                meta = self._drain_q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            self._drain_sem.acquire()
-            try:
-                self._drain_one(meta)
-            finally:
-                self._drain_sem.release()
-
-    def _drain_one(self, meta: CheckpointMeta) -> None:
-        with self._lock:
-            meta.status = CkptStatus.DRAINING
-        # each agent drains the shards it holds → parallel PFS writers
-        futures = []
-        for mgr in self.managers():
-            if not mgr.alive():
-                continue
-            for agent in mgr.agents():
-                keys = [k for k in agent.store.keys()
-                        if k.app_id == meta.app_id and k.ckpt_id == meta.ckpt_id
-                        and k.replica == 0]
-                if keys:
-                    futures.append(agent.drain(keys, self.pfs))
-        ok = True
-        for f in futures:
-            try:
-                f.result(timeout=60)
-            except Exception:
-                ok = False
-        if ok and self.pfs.checkpoint_complete(meta):
-            self.pfs.write_manifest(meta)
-            with self._lock:
-                meta.status = CkptStatus.IN_L2
-            self._log("ckpt_in_l2", app=meta.app_id, ckpt=meta.ckpt_id)
-            self._gc_l1(meta.app_id)
-        else:
-            self._log("drain_failed", app=meta.app_id, ckpt=meta.ckpt_id)
-
-    def _gc_l1(self, app_id: AppId) -> None:
-        """Keep only the newest ``keep_l1`` checkpoints in agent memory."""
-        with self._lock:
-            app = self._apps[app_id]
-            durable = sorted((m.ckpt_id for m in app.checkpoints.values()
-                              if m.status == CkptStatus.IN_L2))
-        evict = durable[:-self.keep_l1] if self.keep_l1 > 0 else durable
-        for ckpt_id in evict:
-            for mgr in self.managers():
-                mgr.store.drop_checkpoint(app_id, ckpt_id)
-
+    # drains
     def wait_for_drains(self, timeout: float = 30.0) -> None:
         """Testing/benchmark helper: block until the drain queue empties."""
-        import time as _t
-        deadline = _t.monotonic() + timeout
-        while _t.monotonic() < deadline:
-            with self._lock:
-                busy = any(m.status == CkptStatus.DRAINING
-                           for a in self._apps.values()
-                           for m in a.checkpoints.values())
-            if self._drain_q.empty() and not busy:
-                return
-            _t.sleep(0.01)
-        raise TimeoutError("drains did not settle")
+        self.drains.wait_idle(timeout)
 
-    # ======================================================== agent adaptivity
+    # placement / adaptivity
+    def handle_capacity_pressure(self, app_id: AppId) -> List[Agent]:
+        return self.placement.handle_capacity_pressure(app_id)
+
     def probe_agents(self, app_id: AppId,
                      last_commit_sim_s: Optional[float] = None) -> List[Agent]:
-        """``icheck_probe_agents``: re-tune the agent count for transfer rate.
+        return self.placement.probe(app_id, last_commit_sim_s)
 
-        Heuristic: a commit should take at most ``target_frac`` of the
-        checkpoint interval.  Too slow → add an agent on the least-loaded
-        node (requesting a new node from the RM if saturated).  More than 2×
-        over-provisioned → drop an agent, freeing resources for other apps.
-        """
-        target_frac = 0.25
-        with self._lock:
-            app = self._apps[app_id]
-        agents = self.agents_for(app_id)
-        if last_commit_sim_s is None or app.ckpt_interval_s <= 0 or not agents:
-            return agents
-        budget = app.ckpt_interval_s * target_frac
-        if last_commit_sim_s > budget:
-            added = self._scale_up(app, agents)
-            if added:
-                self._log("agents_scaled_up", app=app_id,
-                          n=len(self.agents_for(app_id)))
-        elif last_commit_sim_s < budget / 4 and len(agents) > 1:
-            victim = agents[-1]
-            mgr = self._managers[victim.node_id]
-            mgr.stop_agent(victim.agent_id)
-            with self._lock:
-                app.agents.remove(victim.agent_id)
-            self._log("agents_scaled_down", app=app_id,
-                      n=len(self.agents_for(app_id)))
-        return self.agents_for(app_id)
-
-    def _scale_up(self, app: AppRecord, agents: List[Agent]) -> bool:
-        # prefer a node not yet serving this app (fresh NIC)
-        used_nodes = {a.node_id for a in agents}
-        candidates = [nv for nv in self.node_views()
-                      if nv.n_agents < nv.max_agents]
-        fresh = [nv for nv in candidates if nv.node_id not in used_nodes]
-        if not fresh and not self.request_more_memory():
-            fresh = candidates     # fall back to sharing a NIC
-        else:
-            fresh = fresh or [nv for nv in self.node_views()
-                              if nv.node_id not in used_nodes]
-        if not fresh:
-            return False
-        nv = sorted(fresh, key=lambda v: (v.bw_load, v.n_agents))[0]
-        agent = self._managers[nv.node_id].launch_agent(app.app_id)
-        with self._lock:
-            app.agents.append(agent.agent_id)
-        return True
-
-    # ===================================================== straggler advice
+    # health / straggler advice
     def transfer_deadline(self, nbytes: int, agent: Agent,
                           factor: float = 4.0, slack: float = 1e-3) -> float:
-        """Sim-seconds after which a put to ``agent`` counts as straggling."""
-        rate = max(1.0, agent.observed_rate())
-        return factor * (nbytes / rate) + slack
+        return self.health.transfer_deadline(nbytes, agent, factor, slack)
 
-    # ================================================= RM plugin callbacks
-    def _on_rm_retake(self, node_id: str) -> None:
-        """RM pulls a node: migrate its shards to the remaining nodes, move
-        its agents, then let the RM have it (paper §III-A interaction 2)."""
-        with self._lock:
-            mgr = self._managers.get(node_id)
-        if mgr is None:
-            return
-        self._log("node_retaken", node=node_id)
-        others = [m for m in self.managers() if m.node_id != node_id and m.alive()]
-        if not others:
-            if self.request_more_memory():
-                others = [m for m in self.managers()
-                          if m.node_id != node_id and m.alive()]
-        # migrate shard bytes
-        for key in mgr.store.keys():
-            payload = mgr.store.get(key, verify=False)
-            dst = min(others, key=lambda m: m.store.used_bytes, default=None)
-            if dst is None:
-                self._log("migration_lost_shard", key=str(key))
-                continue
-            dst.store.put(key, payload)
-        # relocate agents app-by-app
-        with self._lock:
-            apps = list(self._apps.values())
-        for app in apps:
-            moved = [aid for aid in app.agents if aid.split("/")[0] == node_id]
-            for aid in moved:
-                mgr.stop_agent(aid)
-                with self._lock:
-                    app.agents.remove(aid)
-                if others:
-                    dst = min(others, key=lambda m: len(m.agents()))
-                    na = dst.launch_agent(app.app_id)
-                    with self._lock:
-                        app.agents.append(na.agent_id)
-        mgr.close()
-        with self._lock:
-            self._managers.pop(node_id, None)
-
-    def _on_rm_migrate(self, src: str, dst: str) -> None:
-        """RM-directed migration src → dst (paper §III-A interaction 3):
-        shard bytes AND the serving agents move, so L1 restart/redistribution
-        keeps working from the destination node."""
-        with self._lock:
-            src_mgr = self._managers.get(src)
-            dst_mgr = self._managers.get(dst)
-        if src_mgr is None or dst_mgr is None:
-            return
-        for key in src_mgr.store.keys():
-            payload = src_mgr.store.get(key, verify=False)
-            dst_mgr.store.put(key, payload)
-            src_mgr.store.drop(key)
-        with self._lock:
-            apps = list(self._apps.values())
-        for app in apps:
-            moved = [aid for aid in app.agents if aid.split("/")[0] == src]
-            for aid in moved:
-                src_mgr.stop_agent(aid)
-                with self._lock:
-                    app.agents.remove(aid)
-                na = dst_mgr.launch_agent(app.app_id)
-                with self._lock:
-                    app.agents.append(na.agent_id)
-        self._log("node_migrated", src=src, dst=dst)
-
-    def _on_rm_app_info(self, app_id: str, info: dict) -> None:
-        """Forewarning: pre-stage redistribution plans (§III-A interaction 4)."""
-        if info.get("event") != "impending_resize":
-            return
-        new_ranks = int(info["new_ranks"])
-        with self._lock:
-            app = self._apps.get(app_id)
-            if app is None:
-                return
-            app.pending_resize = new_ranks
-            regions = dict(self._regions.get(app_id, {}))
-        planned = 0
-        for name, region in regions.items():
-            # MESH regions replan against the *new mesh's* boxes, which only
-            # the application knows at adapt time (redistribute_mesh)
-            if region.partition.scheme == PartitionScheme.MESH:
-                continue
-            self.plan_for_resize(app_id, name, new_ranks)
-            planned += 1
-        self._log("resize_forewarned", app=app_id, new_ranks=new_ranks,
-                  plans=planned)
-
-    # ================================================ redistribution planning
+    # redistribution planning
     def plan_for_resize(self, app_id: AppId, region_name: str,
                         new_parts: int) -> List[planlib.Move]:
-        key = (app_id, region_name, new_parts)
-        with self._lock:
-            if key in self._plans:
-                return self._plans[key]
-            region = self._regions[app_id][region_name]
-        old = region.partition
-        new = old.renumbered(new_parts)
-        n = region.shape[old.axis] if old.scheme.value != "replicated" else 1
-        moves = planlib.redistribution_moves(n, old, new) \
-            if old.scheme.value != "replicated" else []
-        with self._lock:
-            self._plans[key] = moves
-        return moves
-
-    # ===================================================== failure monitoring
-    def _monitor_loop(self) -> None:
-        import time as _t
-        while not self._stop.is_set():
-            _t.sleep(self._hb_interval)
-            try:
-                self._check_health()
-            except Exception:   # monitor must never die
-                pass
-
-    def _check_health(self) -> None:
-        dead_nodes = [m.node_id for m in self.managers() if not m.alive()]
-        for node_id in dead_nodes:
-            self._handle_node_failure(node_id)
-        # single-agent failures (process died, node fine)
-        for mgr in self.managers():
-            if not mgr.alive():
-                continue
-            for agent in mgr.agents():
-                if self.fault.agent_dead(agent.agent_id):
-                    self._handle_agent_failure(mgr, agent)
-
-    def _handle_agent_failure(self, mgr: Manager, agent: Agent) -> None:
-        self._log("agent_failed", agent=agent.agent_id)
-        mgr.stop_agent(agent.agent_id)
-        with self._lock:
-            apps = [a for a in self._apps.values() if agent.agent_id in a.agents]
-        for app in apps:
-            with self._lock:
-                app.agents.remove(agent.agent_id)
-            if mgr.alive() and len(mgr.agents()) < mgr.spec.max_agents:
-                na = mgr.launch_agent(app.app_id)    # node memory survived
-                with self._lock:
-                    app.agents.append(na.agent_id)
-                self._log("agent_replaced", old=agent.agent_id, new=na.agent_id)
-
-    def _handle_node_failure(self, node_id: str) -> None:
-        with self._lock:
-            mgr = self._managers.pop(node_id, None)
-            if mgr is None:
-                return
-        self._log("node_failed", node=node_id)
-        mgr.close()
-        # re-replicate every shard that lived there from surviving replicas/L2
-        lost: List[ShardKey] = mgr.store.keys()
-        for key in lost:
-            base = key.base()
-            try:
-                payload = self.fetch_shard(base.app_id, base.ckpt_id,
-                                           base.region, base.part)
-            except KeyError:
-                self._mark_ckpt_failed(base.app_id, base.ckpt_id)
-                continue
-            dst = [m for m in self.managers() if m.alive()]
-            if dst:
-                d = min(dst, key=lambda m: m.store.used_bytes)
-                d.store.put(base, payload)
-        # replace the node's agents
-        with self._lock:
-            apps = list(self._apps.values())
-        for app in apps:
-            gone = [aid for aid in app.agents if aid.split("/")[0] == node_id]
-            if not gone:
-                continue
-            with self._lock:
-                for aid in gone:
-                    app.agents.remove(aid)
-            survivors = [m for m in self.managers() if m.alive()]
-            if not survivors and self.request_more_memory():
-                survivors = [m for m in self.managers() if m.alive()]
-            for _ in gone:
-                if survivors:
-                    d = min(survivors, key=lambda m: len(m.agents()))
-                    na = d.launch_agent(app.app_id)
-                    with self._lock:
-                        app.agents.append(na.agent_id)
-        self._log("node_recovered", node=node_id)
-
-    def _mark_ckpt_failed(self, app_id: AppId, ckpt_id: CkptId) -> None:
-        with self._lock:
-            app = self._apps.get(app_id)
-            meta = app.checkpoints.get(ckpt_id) if app else None
-            if meta is not None and meta.status != CkptStatus.IN_L2:
-                meta.status = CkptStatus.FAILED
-                self._log("ckpt_failed", app=app_id, ckpt=ckpt_id)
+        return self.resize.plan_for_resize(app_id, region_name, new_parts)
 
     # ================================================================== misc
-    def _log(self, event: str, **kw) -> None:
-        kw["event"] = event
-        kw["sim_t"] = self.clock.now()
-        with self._lock:
-            self.events.append(kw)
-
     def close(self) -> None:
-        self._stop.set()
-        self._flusher.join(timeout=5)
-        self._monitor.join(timeout=5)
+        self.drains.close()
+        self.health.close()
         for mgr in self.managers():
             mgr.close()

@@ -1,0 +1,133 @@
+"""Typed event bus — the control-plane spine of the checkpoint service core.
+
+The paper's controller is "a composition of independent services" (§II):
+agent placement, orchestrated PFS drains, failure detection, and resize
+forewarning.  Those services communicate through this bus instead of through
+a monolith's method calls: every subsystem *publishes* typed :class:`Event`s
+and anything — the audit log, the elastic trainer's metrics, a future
+Prometheus exporter — *subscribes*.
+
+The legacy ``Controller.events`` audit list is re-implemented here as just
+another subscriber (:class:`AuditLog`) that renders events into the exact
+dict format the old ``Controller._log`` produced, so existing tests and
+benchmarks keep working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Iterable, List, Mapping, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# canonical event names (the audit vocabulary)
+# --------------------------------------------------------------------------
+NODE_ADDED = "node_added"
+NODE_REQUEST_DENIED = "node_request_denied"
+NODE_RETAKEN = "node_retaken"
+NODE_MIGRATED = "node_migrated"
+NODE_FAILED = "node_failed"
+NODE_RECOVERED = "node_recovered"
+MIGRATION_LOST_SHARD = "migration_lost_shard"
+
+APP_REGISTERED = "app_registered"
+CAPACITY_GROW = "capacity_grow"
+AGENTS_SCALED_UP = "agents_scaled_up"
+AGENTS_SCALED_DOWN = "agents_scaled_down"
+AGENT_FAILED = "agent_failed"
+AGENT_REPLACED = "agent_replaced"
+
+CKPT_IN_L1 = "ckpt_in_l1"
+CKPT_IN_L2 = "ckpt_in_l2"
+CKPT_FAILED = "ckpt_failed"
+DRAIN_FAILED = "drain_failed"
+
+RESIZE_FOREWARNED = "resize_forewarned"
+CODEC_DEGRADED = "codec_degraded"
+SHARD_SPILLED = "shard_spilled"
+SHARD_PROMOTED = "shard_promoted"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One control-plane occurrence: a name, a sim timestamp, a payload."""
+
+    name: str
+    sim_t: float
+    payload: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def as_record(self) -> dict:
+        """Render to the legacy audit-dict format (payload keys first)."""
+        rec = dict(self.payload)
+        rec["event"] = self.name
+        rec["sim_t"] = self.sim_t
+        return rec
+
+
+Subscriber = Callable[[Event], None]
+
+
+class EventBus:
+    """Thread-safe publish/subscribe fan-out.
+
+    Subscribers must never take the control plane down: exceptions raised by
+    a handler are swallowed (the bus is telemetry, not a transaction log).
+    """
+
+    def __init__(self, clock=None):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._subs: List[Tuple[Optional[frozenset], Subscriber]] = []
+
+    def subscribe(self, handler: Subscriber,
+                  events: Optional[Iterable[str]] = None) -> Callable[[], None]:
+        """Register ``handler`` for ``events`` (None = all).
+
+        Returns an unsubscribe callable.
+        """
+        filt = frozenset(events) if events is not None else None
+        entry = (filt, handler)
+        with self._lock:
+            self._subs.append(entry)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                try:
+                    self._subs.remove(entry)
+                except ValueError:
+                    pass
+
+        return unsubscribe
+
+    def publish(self, name: str, **payload) -> Event:
+        sim_t = self.clock.now() if self.clock is not None else 0.0
+        ev = Event(name=name, sim_t=sim_t, payload=payload)
+        with self._lock:
+            subs = list(self._subs)
+        for filt, handler in subs:
+            if filt is None or name in filt:
+                try:
+                    handler(ev)
+                except Exception:   # noqa: BLE001 - telemetry must not break us
+                    pass
+        return ev
+
+
+class AuditLog:
+    """The old ``Controller.events`` list, rebuilt as a bus subscriber.
+
+    ``records`` is byte-compatible with what ``Controller._log`` used to
+    append: ``{**payload, "event": name, "sim_t": t}`` in that key order.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.records: List[dict] = []
+
+    def __call__(self, ev: Event) -> None:
+        rec = ev.as_record()
+        with self._lock:
+            self.records.append(rec)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return [r["event"] for r in self.records]

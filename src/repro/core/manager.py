@@ -4,31 +4,40 @@
 launching the agents and monitoring and predicting the node usage parameters
 (e.g., memory usage, bandwidth usage)." (§II)
 
-One Manager per iCheck node.  It owns the node's checkpoint RAM
-(``MemoryStore``) and NIC (``SimNIC``), launches/stops agents on request from
-the controller, and keeps EWMA predictors of memory and bandwidth usage that
-the controller's scheduling policies consume.
+One Manager per iCheck node.  It owns the node's storage tiers — a
+``TierPipeline`` of checkpoint RAM (``MemoryTier``, L1) plus an optional
+node-local disk spill (``LocalDiskTier``, L0.5) — and NIC (``SimNIC``),
+launches/stops agents on request from the controller, and keeps EWMA
+predictors of memory and bandwidth usage that the controller's scheduling
+policies consume.
 """
 from __future__ import annotations
 
 import itertools
+import tempfile
 import threading
 from typing import Dict, List, Optional
 
 from .agent import Agent
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
-from .store import MemoryStore
+from .tiers import LocalDiskTier, MemoryTier, TierPipeline
 from .types import AgentId, AppId, NodeSpec
 
 
 class Manager:
     def __init__(self, spec: NodeSpec, clock: Optional[SimClock] = None,
-                 fault: Optional[FaultInjector] = None):
+                 fault: Optional[FaultInjector] = None, bus=None,
+                 spill_bytes: int = 0, spill_dir: Optional[str] = None):
         self.spec = spec
         self.node_id = spec.node_id
         self.clock = clock or SimClock()
         self.fault = fault or FaultInjector()
-        self.store = MemoryStore(spec.memory_bytes)
+        tiers = [MemoryTier(spec.memory_bytes)]
+        if spill_bytes > 0:
+            root = spill_dir or tempfile.mkdtemp(
+                prefix=f"icheck-spill-{spec.node_id}-")
+            tiers.append(LocalDiskTier(root, spill_bytes))
+        self.store = TierPipeline(tiers, bus=bus, node_id=spec.node_id)
         self.nic = SimNIC(f"nic-{spec.node_id}", spec.nic_bandwidth,
                           spec.nic_latency, clock=self.clock)
         self._agents: Dict[AgentId, Agent] = {}
@@ -95,3 +104,4 @@ class Manager:
     def close(self) -> None:
         for a in self.agents():
             a.stop()
+        self.store.close()

@@ -1,0 +1,21 @@
+"""Focused subsystems of the checkpoint-service core.
+
+The paper describes the controller as a composition of independent services
+(§II, §III-A); each lives in its own module here and communicates through
+the :mod:`repro.core.events` bus:
+
+  * :mod:`placement` — policy-driven agent placement + agent-count adaptivity
+  * :mod:`catalog`   — checkpoint lifecycle registry and the restart read path
+  * :mod:`drain`     — bounded-concurrency L1→L2 drain orchestration + L1 GC
+  * :mod:`health`    — heartbeats, shard re-replication, straggler advice,
+                       RM node retake/migration handling
+  * :mod:`resize`    — resize forewarning → pre-staged redistribution plans
+"""
+from .catalog import CheckpointCatalog
+from .drain import DrainOrchestrator
+from .health import HealthMonitor
+from .placement import PlacementService
+from .resize import ResizePlanner
+
+__all__ = ["CheckpointCatalog", "DrainOrchestrator", "HealthMonitor",
+           "PlacementService", "ResizePlanner"]

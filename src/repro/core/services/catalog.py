@@ -1,0 +1,131 @@
+"""Checkpoint catalog: lifecycle registry + multi-level restart read path.
+
+Owns the PENDING → IN_L1 → DRAINING → IN_L2 state machine of every
+checkpoint (paper §II) and answers "what is the newest restartable
+checkpoint and where does each shard live" — L1 via any live holding agent
+(replicas tried in turn), else L2 (PFS), including the cold-restart scan of
+PFS manifests when a fresh controller knows nothing yet.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, Optional, Tuple
+
+from .. import events as E
+from ..types import (AppId, CheckpointMeta, CkptId, CkptStatus, ICheckError,
+                     RegionMeta, ShardInfo, ShardKey)
+
+
+class CheckpointCatalog:
+    def __init__(self, ctl):
+        self.ctl = ctl
+        self._seq: Dict[AppId, itertools.count] = {}
+
+    # ------------------------------------------------------------- lifecycle
+    def open_app(self, app_id: AppId) -> None:
+        self._seq[app_id] = itertools.count()
+
+    def new_checkpoint(self, app_id: AppId, step: int,
+                       regions: Dict[str, RegionMeta],
+                       userdata: bytes = b"") -> CheckpointMeta:
+        ctl = self.ctl
+        with ctl._lock:
+            app = ctl._apps[app_id]
+            ckpt_id = next(self._seq[app_id])
+            meta = CheckpointMeta(app_id=app_id, ckpt_id=ckpt_id, step=step,
+                                  regions=dict(regions), userdata=userdata)
+            app.checkpoints[ckpt_id] = meta
+            total = sum(r.nbytes for r in regions.values())
+            app.ckpt_bytes_estimate = max(app.ckpt_bytes_estimate, total)
+        return meta
+
+    def record_shard(self, meta: CheckpointMeta, info: ShardInfo) -> None:
+        with self.ctl._lock:
+            meta.shards[info.key] = info
+
+    def finalize(self, meta: CheckpointMeta, drain: bool = True) -> None:
+        """All shards acked in L1 → durable pipeline."""
+        ctl = self.ctl
+        with ctl._lock:
+            if not meta.is_complete_in_l1():
+                raise ICheckError(
+                    f"checkpoint {meta.ckpt_id} incomplete: "
+                    f"{len(meta.shards)}/{meta.expected_shards()} shards")
+            meta.status = CkptStatus.IN_L1
+            meta.completed_at = ctl.clock.now()
+        ctl.bus.publish(E.CKPT_IN_L1, app=meta.app_id, ckpt=meta.ckpt_id,
+                        step=meta.step)
+        if drain:
+            ctl.drains.submit(meta)
+
+    def mark_failed(self, app_id: AppId, ckpt_id: CkptId) -> None:
+        ctl = self.ctl
+        with ctl._lock:
+            app = ctl._apps.get(app_id)
+            meta = app.checkpoints.get(ckpt_id) if app else None
+            if meta is not None and meta.status != CkptStatus.IN_L2:
+                meta.status = CkptStatus.FAILED
+                ctl.bus.publish(E.CKPT_FAILED, app=app_id, ckpt=ckpt_id)
+
+    # ------------------------------------------------------------- read path
+    def latest_restartable(self, app_id: AppId) -> Optional[Tuple[CheckpointMeta, str]]:
+        """Newest usable checkpoint: L1 preferred (fast), else L2 (durable)."""
+        ctl = self.ctl
+        with ctl._lock:
+            app = ctl._apps.get(app_id)
+            metas = sorted(app.checkpoints.values(), key=lambda m: -m.ckpt_id) \
+                if app else []
+        for meta in metas:
+            if meta.status in (CkptStatus.IN_L1, CkptStatus.DRAINING) \
+                    and self.l1_complete(meta):
+                return meta, "l1"
+            if meta.status == CkptStatus.IN_L2:
+                if self.l1_complete(meta):
+                    return meta, "l1"
+                return meta, "l2"
+        # cold restart: nothing in memory (e.g. new controller) — scan PFS
+        for ckpt_id in reversed(ctl.pfs.list_checkpoints(app_id)):
+            meta = ctl.pfs.read_manifest(app_id, ckpt_id)
+            if meta is not None and ctl.pfs.checkpoint_complete(meta):
+                meta.status = CkptStatus.IN_L2
+                with ctl._lock:
+                    if app is not None:
+                        app.checkpoints.setdefault(ckpt_id, meta)
+                return meta, "l2"
+        return None
+
+    def l1_complete(self, meta: CheckpointMeta) -> bool:
+        for name, region in meta.regions.items():
+            for part in range(region.partition.num_parts):
+                if next(self.agents_with(meta.app_id, meta.ckpt_id, name,
+                                         part), None) is None:
+                    return False
+        return True
+
+    def agents_with(self, app_id: AppId, ckpt_id: CkptId, region: str,
+                    part: int) -> Iterator:
+        """Live (agent, key) pairs holding any replica of the shard."""
+        for mgr in self.ctl.managers():
+            if not mgr.alive():
+                continue
+            for agent in mgr.agents():
+                if not agent.alive():        # failover: skip dead replicas
+                    continue
+                for rep in range(4):
+                    k = ShardKey(app_id, ckpt_id, region, part, rep)
+                    if agent.has(k):
+                        yield agent, k
+
+    def fetch_shard(self, app_id: AppId, ckpt_id: CkptId, region: str,
+                    part: int) -> bytes:
+        """Restart/redistribution read path: L1 via any *live* holding agent
+        (replicas tried in turn), else L2 (PFS)."""
+        for agent, k in self.agents_with(app_id, ckpt_id, region, part):
+            try:
+                return agent.get(k)
+            except (ConnectionError, KeyError):
+                continue                     # race with a failure: next copy
+        key = ShardKey(app_id, ckpt_id, region, part)
+        if self.ctl.pfs.has_shard(key):
+            return self.ctl.pfs.read_shard(key)
+        raise KeyError(f"shard {app_id}/{ckpt_id}/{region}/{part} lost")

@@ -1,0 +1,189 @@
+"""Failure detection + node lifecycle.
+
+Heartbeat-style monitoring (agent/node death), shard re-replication from
+surviving replicas or L2, straggler advice for the client's
+first-completion-wins retry, and the RM plugin's node retake / migration
+interactions (paper §III-A interactions 2-3).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+from .. import events as E
+from ..agent import Agent
+from ..manager import Manager
+from ..types import ShardKey
+
+
+class HealthMonitor:
+    def __init__(self, ctl, heartbeat_interval_s: float = 0.05):
+        self.ctl = ctl
+        self.interval = heartbeat_interval_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="icheck-monitor")
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+    # ----------------------------------------------------- straggler advice
+    def transfer_deadline(self, nbytes: int, agent: Agent,
+                          factor: float = 4.0, slack: float = 1e-3) -> float:
+        """Sim-seconds after which a put to ``agent`` counts as straggling."""
+        rate = max(1.0, agent.observed_rate())
+        return factor * (nbytes / rate) + slack
+
+    # ------------------------------------------------------------ monitoring
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.interval)
+            try:
+                self.check()
+            except Exception:   # monitor must never die
+                pass
+
+    def check(self) -> None:
+        ctl = self.ctl
+        dead_nodes = [m.node_id for m in ctl.managers() if not m.alive()]
+        for node_id in dead_nodes:
+            self.handle_node_failure(node_id)
+        # single-agent failures (process died, node fine)
+        for mgr in ctl.managers():
+            if not mgr.alive():
+                continue
+            for agent in mgr.agents():
+                if ctl.fault.agent_dead(agent.agent_id):
+                    self.handle_agent_failure(mgr, agent)
+
+    def handle_agent_failure(self, mgr: Manager, agent: Agent) -> None:
+        ctl = self.ctl
+        ctl.bus.publish(E.AGENT_FAILED, agent=agent.agent_id)
+        mgr.stop_agent(agent.agent_id)
+        with ctl._lock:
+            apps = [a for a in ctl._apps.values() if agent.agent_id in a.agents]
+        for app in apps:
+            with ctl._lock:
+                app.agents.remove(agent.agent_id)
+            if mgr.alive() and len(mgr.agents()) < mgr.spec.max_agents:
+                na = mgr.launch_agent(app.app_id)    # node memory survived
+                with ctl._lock:
+                    app.agents.append(na.agent_id)
+                ctl.bus.publish(E.AGENT_REPLACED, old=agent.agent_id,
+                                new=na.agent_id)
+
+    def handle_node_failure(self, node_id: str) -> None:
+        ctl = self.ctl
+        with ctl._lock:
+            mgr = ctl._managers.pop(node_id, None)
+            if mgr is None:
+                return
+        ctl.bus.publish(E.NODE_FAILED, node=node_id)
+        mgr.close()
+        # re-replicate every shard that lived there from surviving replicas/L2
+        lost: List[ShardKey] = mgr.store.keys()
+        for key in lost:
+            base = key.base()
+            try:
+                payload = ctl.catalog.fetch_shard(base.app_id, base.ckpt_id,
+                                                  base.region, base.part)
+            except KeyError:
+                ctl.catalog.mark_failed(base.app_id, base.ckpt_id)
+                continue
+            dst = [m for m in ctl.managers() if m.alive()]
+            if dst:
+                d = min(dst, key=lambda m: m.store.used_bytes)
+                d.store.put(base, payload)
+        # replace the node's agents
+        with ctl._lock:
+            apps = list(ctl._apps.values())
+        for app in apps:
+            gone = [aid for aid in app.agents if aid.split("/")[0] == node_id]
+            if not gone:
+                continue
+            with ctl._lock:
+                for aid in gone:
+                    app.agents.remove(aid)
+            survivors = [m for m in ctl.managers() if m.alive()]
+            if not survivors and ctl.request_more_memory():
+                survivors = [m for m in ctl.managers() if m.alive()]
+            for _ in gone:
+                if survivors:
+                    d = min(survivors, key=lambda m: len(m.agents()))
+                    na = d.launch_agent(app.app_id)
+                    with ctl._lock:
+                        app.agents.append(na.agent_id)
+        ctl.bus.publish(E.NODE_RECOVERED, node=node_id)
+
+    # ------------------------------------------------ RM plugin interactions
+    def on_rm_retake(self, node_id: str) -> None:
+        """RM pulls a node: migrate its shards to the remaining nodes, move
+        its agents, then let the RM have it (paper §III-A interaction 2)."""
+        ctl = self.ctl
+        with ctl._lock:
+            mgr = ctl._managers.get(node_id)
+        if mgr is None:
+            return
+        ctl.bus.publish(E.NODE_RETAKEN, node=node_id)
+        others = [m for m in ctl.managers() if m.node_id != node_id and m.alive()]
+        if not others:
+            if ctl.request_more_memory():
+                others = [m for m in ctl.managers()
+                          if m.node_id != node_id and m.alive()]
+        # migrate shard bytes
+        for key in mgr.store.keys():
+            payload = mgr.store.get(key, verify=False)
+            dst = min(others, key=lambda m: m.store.used_bytes, default=None)
+            if dst is None:
+                ctl.bus.publish(E.MIGRATION_LOST_SHARD, key=str(key))
+                continue
+            dst.store.put(key, payload)
+        # relocate agents app-by-app
+        with ctl._lock:
+            apps = list(ctl._apps.values())
+        for app in apps:
+            moved = [aid for aid in app.agents if aid.split("/")[0] == node_id]
+            for aid in moved:
+                mgr.stop_agent(aid)
+                with ctl._lock:
+                    app.agents.remove(aid)
+                if others:
+                    dst = min(others, key=lambda m: len(m.agents()))
+                    na = dst.launch_agent(app.app_id)
+                    with ctl._lock:
+                        app.agents.append(na.agent_id)
+        mgr.close()
+        with ctl._lock:
+            ctl._managers.pop(node_id, None)
+
+    def on_rm_migrate(self, src: str, dst: str) -> None:
+        """RM-directed migration src → dst (paper §III-A interaction 3):
+        shard bytes AND the serving agents move, so L1 restart/redistribution
+        keeps working from the destination node."""
+        ctl = self.ctl
+        with ctl._lock:
+            src_mgr = ctl._managers.get(src)
+            dst_mgr = ctl._managers.get(dst)
+        if src_mgr is None or dst_mgr is None:
+            return
+        for key in src_mgr.store.keys():
+            payload = src_mgr.store.get(key, verify=False)
+            dst_mgr.store.put(key, payload)
+            src_mgr.store.drop(key)
+        with ctl._lock:
+            apps = list(ctl._apps.values())
+        for app in apps:
+            moved = [aid for aid in app.agents if aid.split("/")[0] == src]
+            for aid in moved:
+                src_mgr.stop_agent(aid)
+                with ctl._lock:
+                    app.agents.remove(aid)
+                na = dst_mgr.launch_agent(app.app_id)
+                with ctl._lock:
+                    app.agents.append(na.agent_id)
+        ctl.bus.publish(E.NODE_MIGRATED, src=src, dst=dst)

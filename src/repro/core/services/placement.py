@@ -1,0 +1,119 @@
+"""Policy-driven agent placement + agent-count adaptivity.
+
+Implements paper §II steps 2-6 (node/agent selection via the scheduling
+policies) and the ``icheck_probe_agents`` adaptivity loop ("iCheck can
+dynamically change the agent count to obtain an optimum checkpoint transfer
+rate"), plus capacity-pressure escalation to the RM (§III-A interaction 1).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .. import events as E
+from ..agent import Agent
+from ..policies import SchedulingPolicy, get_policy
+from ..types import AppId, AppRecord
+
+
+class PlacementService:
+    def __init__(self, ctl, policy: "str | SchedulingPolicy" = "adaptive"):
+        self.ctl = ctl
+        self.policy = get_policy(policy) if isinstance(policy, str) else policy
+
+    # -------------------------------------------------------------- placement
+    def place_app(self, app: AppRecord) -> List[Agent]:
+        placement = self.policy.place(self.ctl.node_views(), app)
+        agents: List[Agent] = []
+        for node_id, count in placement:
+            mgr = self.ctl._managers[node_id]
+            for _ in range(count):
+                agents.append(mgr.launch_agent(app.app_id))
+        return agents
+
+    def ensure_memory(self, app: AppRecord) -> None:
+        ctl = self.ctl
+        need = app.ckpt_bytes_estimate * app.replication * max(1, ctl.keep_l1)
+        guard = 0
+        while ctl.total_free_memory() < need and guard < 16:
+            if not ctl.request_more_memory():
+                break
+            guard += 1
+
+    def handle_capacity_pressure(self, app_id: AppId) -> List[Agent]:
+        """A commit hit a full node (paper §III-A: "when iCheck runs out of
+        memory in a node, the controller can request more memory and get
+        additional nodes from RM").  Grow by one node if the RM has any;
+        either way, give the app an agent on the freest node it doesn't
+        already use, and return the refreshed agent set."""
+        ctl = self.ctl
+        ctl.request_more_memory()
+        with ctl._lock:
+            have = set(ctl._apps[app_id].agents)
+        used_nodes = {aid.split("/")[0] for aid in have}
+        views = sorted(ctl.node_views(), key=lambda nv: -nv.free_memory)
+        for prefer_new in (True, False):
+            for nv in views:
+                if prefer_new and nv.node_id in used_nodes:
+                    continue
+                mgr = ctl._managers[nv.node_id]
+                if len(mgr.agents()) < mgr.spec.max_agents:
+                    agent = mgr.launch_agent(app_id)
+                    with ctl._lock:
+                        ctl._apps[app_id].agents.append(agent.agent_id)
+                    ctl.bus.publish(E.CAPACITY_GROW, app=app_id,
+                                    node=nv.node_id, agent=agent.agent_id)
+                    return ctl.agents_for(app_id)
+        return ctl.agents_for(app_id)
+
+    # ------------------------------------------------------------ adaptivity
+    def probe(self, app_id: AppId,
+              last_commit_sim_s: Optional[float] = None) -> List[Agent]:
+        """``icheck_probe_agents``: re-tune the agent count for transfer rate.
+
+        Heuristic: a commit should take at most ``target_frac`` of the
+        checkpoint interval.  Too slow → add an agent on the least-loaded
+        node (requesting a new node from the RM if saturated).  More than 2×
+        over-provisioned → drop an agent, freeing resources for other apps.
+        """
+        ctl = self.ctl
+        target_frac = 0.25
+        with ctl._lock:
+            app = ctl._apps[app_id]
+        agents = ctl.agents_for(app_id)
+        if last_commit_sim_s is None or app.ckpt_interval_s <= 0 or not agents:
+            return agents
+        budget = app.ckpt_interval_s * target_frac
+        if last_commit_sim_s > budget:
+            added = self._scale_up(app, agents)
+            if added:
+                ctl.bus.publish(E.AGENTS_SCALED_UP, app=app_id,
+                                n=len(ctl.agents_for(app_id)))
+        elif last_commit_sim_s < budget / 4 and len(agents) > 1:
+            victim = agents[-1]
+            mgr = ctl._managers[victim.node_id]
+            mgr.stop_agent(victim.agent_id)
+            with ctl._lock:
+                app.agents.remove(victim.agent_id)
+            ctl.bus.publish(E.AGENTS_SCALED_DOWN, app=app_id,
+                            n=len(ctl.agents_for(app_id)))
+        return ctl.agents_for(app_id)
+
+    def _scale_up(self, app: AppRecord, agents: List[Agent]) -> bool:
+        ctl = self.ctl
+        # prefer a node not yet serving this app (fresh NIC)
+        used_nodes = {a.node_id for a in agents}
+        candidates = [nv for nv in ctl.node_views()
+                      if nv.n_agents < nv.max_agents]
+        fresh = [nv for nv in candidates if nv.node_id not in used_nodes]
+        if not fresh and not ctl.request_more_memory():
+            fresh = candidates     # fall back to sharing a NIC
+        else:
+            fresh = fresh or [nv for nv in ctl.node_views()
+                              if nv.node_id not in used_nodes]
+        if not fresh:
+            return False
+        nv = sorted(fresh, key=lambda v: (v.bw_load, v.n_agents))[0]
+        agent = ctl._managers[nv.node_id].launch_agent(app.app_id)
+        with ctl._lock:
+            app.agents.append(agent.agent_id)
+        return True

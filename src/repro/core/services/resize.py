@@ -1,0 +1,62 @@
+"""Resize forewarning → pre-staged redistribution plans.
+
+Paper §III-A interaction 4: the RM "informs the controller about an
+impending resource change of an application so that agents can prepare ...
+ahead of time".  Plans are cached per (app, region, new_parts) so the
+adapt-window redistribution (client.redistribute) reuses the pre-staged
+moves instead of re-planning under time pressure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .. import events as E
+from .. import plan as planlib
+from ..types import AppId, PartitionScheme
+
+
+class ResizePlanner:
+    def __init__(self, ctl):
+        self.ctl = ctl
+        # (app_id, region_name, new_parts) -> [Move]
+        self.plans: Dict[Tuple[AppId, str, int], List[planlib.Move]] = {}
+
+    def plan_for_resize(self, app_id: AppId, region_name: str,
+                        new_parts: int) -> List[planlib.Move]:
+        ctl = self.ctl
+        key = (app_id, region_name, new_parts)
+        with ctl._lock:
+            if key in self.plans:
+                return self.plans[key]
+            region = ctl._regions[app_id][region_name]
+        old = region.partition
+        new = old.renumbered(new_parts)
+        n = region.shape[old.axis] if old.scheme.value != "replicated" else 1
+        moves = planlib.redistribution_moves(n, old, new) \
+            if old.scheme.value != "replicated" else []
+        with ctl._lock:
+            self.plans[key] = moves
+        return moves
+
+    def on_app_info(self, app_id: str, info: dict) -> None:
+        """RM forewarning callback: pre-stage plans for every region."""
+        if info.get("event") != "impending_resize":
+            return
+        ctl = self.ctl
+        new_ranks = int(info["new_ranks"])
+        with ctl._lock:
+            app = ctl._apps.get(app_id)
+            if app is None:
+                return
+            app.pending_resize = new_ranks
+            regions = dict(ctl._regions.get(app_id, {}))
+        planned = 0
+        for name, region in regions.items():
+            # MESH regions replan against the *new mesh's* boxes, which only
+            # the application knows at adapt time (redistribute_mesh)
+            if region.partition.scheme == PartitionScheme.MESH:
+                continue
+            self.plan_for_resize(app_id, name, new_ranks)
+            planned += 1
+        ctl.bus.publish(E.RESIZE_FOREWARNED, app=app_id, new_ranks=new_ranks,
+                        plans=planned)

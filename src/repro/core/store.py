@@ -1,255 +1,23 @@
-"""Checkpoint storage levels.
+"""Backwards-compat shim: checkpoint storage moved to ``repro.core.tiers``.
 
-L1 — ``MemoryStore``: the iCheck-node RAM agents put RDMA'd shards into.
-L2 — ``PFSStore``: the parallel-file-system container format the controller
-orchestrates drains into (paper §II: "later written into the Parallel File
-System").  Every shard is crc32-protected; the PFS layout is one file per
-shard so that thousands of hosts can restore in parallel, plus a JSON
-manifest per checkpoint.
+The old two-level layout (L1 ``MemoryStore`` → L2 ``PFSStore``) is now the
+pluggable :class:`~repro.core.tiers.StorageTier` pipeline — see
+``tiers.py`` and ARCHITECTURE.md.  The historical names remain importable:
+
+    MemoryStore  -> tiers.MemoryTier      (L1)
+    PFSStore     -> tiers.PFSTier         (L2)
 """
 from __future__ import annotations
 
-import json
-import os
-import threading
-import zlib
-from typing import Dict, Iterable, List, Optional
+from .tiers import (LocalDiskTier, MemoryTier, PFSTier, StorageTier,  # noqa: F401
+                    TierPipeline, crc32, decode_payload, encode_payload,
+                    resolve_codec)
 
-import numpy as np
+MemoryStore = MemoryTier
+PFSStore = PFSTier
 
-from .simnet import SimNIC
-from .types import (CapacityError, CheckpointMeta, CkptStatus, IntegrityError,
-                    PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
-                    ShardKey)
-
-try:
-    import zstandard as _zstd
-except Exception:  # pragma: no cover - zstandard is installed in this env
-    _zstd = None
-
-
-def crc32(buf) -> int:
-    return zlib.crc32(memoryview(buf).cast("B")) & 0xFFFFFFFF
-
-
-def _tupled(x):
-    """JSON round-trips tuples as lists; restore nested tuples."""
-    if isinstance(x, list):
-        return tuple(_tupled(v) for v in x)
-    return x
-
-
-# --------------------------------------------------------------------------
-# L1: in-memory shard store with capacity accounting
-# --------------------------------------------------------------------------
-class MemoryStore:
-    def __init__(self, capacity_bytes: int):
-        self.capacity = int(capacity_bytes)
-        self._lock = threading.Lock()
-        self._data: Dict[ShardKey, bytes] = {}
-        self._crc: Dict[ShardKey, int] = {}
-        self._used = 0
-
-    @property
-    def used_bytes(self) -> int:
-        with self._lock:
-            return self._used
-
-    @property
-    def free_bytes(self) -> int:
-        with self._lock:
-            return self.capacity - self._used
-
-    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
-        payload = bytes(payload)
-        with self._lock:
-            old = len(self._data.get(key, b""))
-            if self._used - old + len(payload) > self.capacity:
-                raise CapacityError(
-                    f"store over capacity: used={self._used} cap={self.capacity} "
-                    f"put={len(payload)}")
-            self._data[key] = payload
-            self._crc[key] = crc32(payload) if crc is None else crc
-            self._used += len(payload) - old
-
-    def get(self, key: ShardKey, verify: bool = True) -> bytes:
-        with self._lock:
-            if key not in self._data:
-                raise KeyError(key)
-            payload = self._data[key]
-            crc = self._crc[key]
-        if verify and crc32(payload) != crc:
-            raise IntegrityError(f"crc mismatch for {key}")
-        return payload
-
-    def has(self, key: ShardKey) -> bool:
-        with self._lock:
-            return key in self._data
-
-    def drop(self, key: ShardKey) -> None:
-        with self._lock:
-            payload = self._data.pop(key, None)
-            self._crc.pop(key, None)
-            if payload is not None:
-                self._used -= len(payload)
-
-    def keys(self) -> List[ShardKey]:
-        with self._lock:
-            return list(self._data.keys())
-
-    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
-        """Evict all shards of one checkpoint; returns bytes freed."""
-        freed = 0
-        for k in self.keys():
-            if k.app_id == app_id and k.ckpt_id == ckpt_id:
-                with self._lock:
-                    payload = self._data.pop(k, None)
-                    self._crc.pop(k, None)
-                    if payload is not None:
-                        self._used -= len(payload)
-                        freed += len(payload)
-        return freed
-
-
-# --------------------------------------------------------------------------
-# L2: PFS container
-# --------------------------------------------------------------------------
-_SHARD_MAGIC = b"ICK1"
-
-
-def _shard_path(root: str, key: ShardKey) -> str:
-    return os.path.join(root, key.app_id, f"ckpt_{key.ckpt_id:08d}",
-                        key.region.replace("/", "__"), f"part_{key.part:05d}.bin")
-
-
-def _manifest_path(root: str, app_id: str, ckpt_id: int) -> str:
-    return os.path.join(root, app_id, f"ckpt_{ckpt_id:08d}", "MANIFEST.json")
-
-
-class PFSStore:
-    """Bandwidth-limited parallel-file-system model.
-
-    ``ingest`` is the aggregate PFS bandwidth all concurrent drains share —
-    the resource the controller's flush orchestration rations (paper §II:
-    "orchestrate the writing of the checkpoint data into PFS by minimizing
-    the effect on running applications").
-    """
-
-    def __init__(self, root: str, bandwidth: float = 40e9, compress: bool = False,
-                 clock=None):
-        self.root = root
-        os.makedirs(root, exist_ok=True)
-        self.ingest = SimNIC("pfs", bandwidth, latency=1e-4, clock=clock)
-        self.compress = bool(compress and _zstd is not None)
-        self._lock = threading.Lock()
-
-    # -- shard IO ----------------------------------------------------------
-    def write_shard(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> float:
-        raw_len = len(payload)
-        if self.compress:
-            payload = _zstd.ZstdCompressor(level=3).compress(bytes(payload))
-        crc = crc32(payload)
-        # simulate PFS ingest time on the *written* bytes
-        dur = self.ingest.transfer(len(payload))
-        path = _shard_path(self.root, key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        header = _SHARD_MAGIC + crc.to_bytes(4, "little") + raw_len.to_bytes(8, "little") \
-            + (b"Z" if self.compress else b"R")
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(header)
-            f.write(payload)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)       # atomic publish
-        return dur
-
-    def read_shard(self, key: ShardKey) -> bytes:
-        path = _shard_path(self.root, key)
-        with open(path, "rb") as f:
-            blob = f.read()
-        if blob[:4] != _SHARD_MAGIC:
-            raise IntegrityError(f"bad magic in {path}")
-        crc = int.from_bytes(blob[4:8], "little")
-        raw_len = int.from_bytes(blob[8:16], "little")
-        mode = blob[16:17]
-        payload = blob[17:]
-        if crc32(payload) != crc:
-            raise IntegrityError(f"crc mismatch in {path}")
-        self.ingest.transfer(len(payload))
-        if mode == b"Z":
-            payload = _zstd.ZstdDecompressor().decompress(payload, max_output_size=raw_len)
-        return payload
-
-    def has_shard(self, key: ShardKey) -> bool:
-        return os.path.exists(_shard_path(self.root, key))
-
-    # -- manifests -----------------------------------------------------------
-    def write_manifest(self, meta: CheckpointMeta) -> None:
-        doc = {
-            "app_id": meta.app_id,
-            "ckpt_id": meta.ckpt_id,
-            "step": meta.step,
-            "status": meta.status.value,
-            "userdata_hex": meta.userdata.hex(),
-            "regions": {
-                name: {
-                    "shape": list(r.shape),
-                    "dtype": r.dtype,
-                    "nbytes": r.nbytes,
-                    "codec": r.codec,
-                    "partition": {
-                        "scheme": r.partition.scheme.value,
-                        "axis": r.partition.axis,
-                        "num_parts": r.partition.num_parts,
-                        "block": r.partition.block,
-                        "bounds": r.partition.bounds,
-                    },
-                }
-                for name, r in meta.regions.items()
-            },
-        }
-        path = _manifest_path(self.root, meta.app_id, meta.ckpt_id)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f)
-        os.replace(tmp, path)
-
-    def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
-        path = _manifest_path(self.root, app_id, ckpt_id)
-        if not os.path.exists(path):
-            return None
-        with open(path) as f:
-            doc = json.load(f)
-        meta = CheckpointMeta(app_id=doc["app_id"], ckpt_id=doc["ckpt_id"],
-                              step=doc["step"], status=CkptStatus(doc["status"]),
-                              userdata=bytes.fromhex(doc.get("userdata_hex", "")))
-        for name, r in doc["regions"].items():
-            meta.regions[name] = RegionMeta(
-                name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
-                nbytes=r["nbytes"], codec=r.get("codec", "raw"),
-                partition=PartitionDesc(
-                    scheme=PartitionScheme(r["partition"]["scheme"]),
-                    axis=r["partition"]["axis"],
-                    num_parts=r["partition"]["num_parts"],
-                    block=r["partition"]["block"],
-                    bounds=_tupled(r["partition"].get("bounds"))))
-        return meta
-
-    def list_checkpoints(self, app_id: str) -> List[int]:
-        base = os.path.join(self.root, app_id)
-        if not os.path.isdir(base):
-            return []
-        out = []
-        for d in os.listdir(base):
-            if d.startswith("ckpt_") and os.path.exists(os.path.join(base, d, "MANIFEST.json")):
-                out.append(int(d.split("_")[1]))
-        return sorted(out)
-
-    def checkpoint_complete(self, meta: CheckpointMeta) -> bool:
-        for name, region in meta.regions.items():
-            for part in range(region.partition.num_parts):
-                if not self.has_shard(ShardKey(meta.app_id, meta.ckpt_id, name, part)):
-                    return False
-        return True
+__all__ = [
+    "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
+    "StorageTier", "TierPipeline", "crc32", "encode_payload",
+    "decode_payload", "resolve_codec",
+]

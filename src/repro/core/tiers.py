@@ -1,0 +1,732 @@
+"""Pluggable checkpoint storage tiers.
+
+The paper's two-level hierarchy — agent RAM (L1) drained into the parallel
+file system (L2, §II) — is generalised into a :class:`StorageTier` protocol
+so new levels can be added without touching the controller:
+
+  * :class:`MemoryTier`    — L1, iCheck-node RAM agents RDMA shards into
+  * :class:`LocalDiskTier` — L0.5, node-local spill (NVMe burst-buffer
+    analogue) that absorbs capacity pressure before the RM must grow us
+  * :class:`PFSTier`       — L2, the bandwidth-limited PFS container format
+
+Every tier does crc32 + capacity accounting.  A per-node
+:class:`TierPipeline` owns shard placement across its tiers (spill on
+capacity pressure, promotion back to RAM on read) and is a drop-in for the
+old ``MemoryStore`` mapping interface.
+
+The pipeline also owns the *codec path*: ``encode_payload`` /
+``decode_payload`` thread the ``zstd`` and ``q8`` (blockwise int8, mirrors
+``kernels/ckpt_codec``) codecs uniformly through puts, degrading gracefully
+to ``"none"`` when ``zstandard`` is not installed instead of raising.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+import numpy as np
+
+from . import events as _events
+from .simnet import SimNIC
+from .types import (CapacityError, CheckpointMeta, CkptStatus, ICheckError,
+                    IntegrityError, PartitionDesc, PartitionScheme,
+                    RegionMeta, ShardKey)
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover - optional dependency
+    _zstd = None
+
+
+def crc32(buf) -> int:
+    return zlib.crc32(memoryview(buf).cast("B")) & 0xFFFFFFFF
+
+
+def _tupled(x):
+    """JSON round-trips tuples as lists; restore nested tuples."""
+    if isinstance(x, list):
+        return tuple(_tupled(v) for v in x)
+    return x
+
+
+# ==========================================================================
+# codecs — applied on the transfer path, uniformly for every put
+# ==========================================================================
+_Q8_BLOCK = 256            # values per scale block (mirrors kernels/ckpt_codec)
+_Q8_QUANT = b"Q"
+_Q8_RAW = b"R"
+
+
+def zstd_available() -> bool:
+    return _zstd is not None
+
+
+def resolve_codec(codec: str,
+                  on_degrade: Optional[Callable[[str, str], None]] = None) -> str:
+    """Map a requested codec to one this process can actually run.
+
+    ``zstd`` without the ``zstandard`` module degrades to ``"none"``;
+    ``on_degrade(requested, actual)`` is invoked so the caller can log an
+    event instead of the old behaviour of silently mis-labelling (or, worse,
+    raising mid-commit).
+    """
+    if codec in ("zstd",) and _zstd is None:
+        if on_degrade is not None:
+            on_degrade(codec, "none")
+        return "none"
+    if codec not in ("raw", "none", "zstd", "q8"):
+        raise ICheckError(f"unknown codec {codec!r}")
+    return codec
+
+
+def _q8_encode(data: bytes, dtype: str) -> bytes:
+    try:
+        dt = np.dtype(dtype)
+        is_float = dt.kind == "f"
+    except TypeError:
+        is_float = False
+    if not is_float:
+        return _Q8_RAW + bytes(data)
+    x = np.frombuffer(data, dtype=dt).astype(np.float32)
+    n = x.size
+    nb = -(-n // _Q8_BLOCK)
+    blocks = np.zeros((nb, _Q8_BLOCK), np.float32)
+    blocks.reshape(-1)[:n] = x
+    absmax = np.max(np.abs(blocks), axis=-1, keepdims=True)
+    scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(blocks / scale), -127, 127).astype(np.int8)
+    return (_Q8_QUANT + int(n).to_bytes(8, "little")
+            + scale.tobytes() + q.tobytes())
+
+
+def _q8_decode(blob: bytes, dtype: str) -> bytes:
+    mode, blob = blob[:1], blob[1:]
+    if mode == _Q8_RAW:
+        return bytes(blob)
+    n = int.from_bytes(blob[:8], "little")
+    nb = -(-n // _Q8_BLOCK)
+    scales = np.frombuffer(blob[8:8 + 4 * nb], np.float32).reshape(nb, 1)
+    q = np.frombuffer(blob[8 + 4 * nb:], np.int8).reshape(nb, _Q8_BLOCK)
+    x = (q.astype(np.float32) * scales).reshape(-1)[:n]
+    return x.astype(np.dtype(dtype)).tobytes()
+
+
+def encode_payload(data: bytes, codec: str, dtype: str = "uint8") -> bytes:
+    """Codec step of every put (client commit → agent → tier)."""
+    if codec in ("raw", "none"):
+        return bytes(data)
+    if codec == "zstd":
+        if _zstd is None:
+            raise ICheckError("zstandard not installed; resolve_codec() first")
+        return _zstd.ZstdCompressor(level=1).compress(bytes(data))
+    if codec == "q8":
+        return _q8_encode(data, dtype)
+    raise ICheckError(f"unknown codec {codec!r}")
+
+
+def decode_payload(blob: bytes, codec: str, dtype: str = "uint8") -> bytes:
+    if codec in ("raw", "none"):
+        return bytes(blob)
+    if codec == "zstd":
+        if _zstd is None:
+            raise ICheckError(
+                "shard was zstd-compressed but zstandard is not installed")
+        return _zstd.ZstdDecompressor().decompress(blob)
+    if codec == "q8":
+        return _q8_decode(blob, dtype)
+    raise ICheckError(f"unknown codec {codec!r}")
+
+
+# ==========================================================================
+# the tier protocol
+# ==========================================================================
+@runtime_checkable
+class StorageTier(Protocol):
+    """What the pipeline (and the controller's migration paths) rely on."""
+
+    name: str
+    level: float                 # 1.0 = RAM, 1.5 = local disk, 2.0 = PFS
+
+    @property
+    def capacity(self) -> float: ...
+    @property
+    def used_bytes(self) -> int: ...
+    @property
+    def free_bytes(self) -> float: ...
+
+    def put(self, key: ShardKey, payload: bytes,
+            crc: Optional[int] = None) -> None: ...
+    def get(self, key: ShardKey, verify: bool = True) -> bytes: ...
+    def has(self, key: ShardKey) -> bool: ...
+    def drop(self, key: ShardKey) -> None: ...
+    def keys(self) -> List[ShardKey]: ...
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int: ...
+
+
+# --------------------------------------------------------------------------
+# L1: in-memory shard tier with capacity accounting
+# --------------------------------------------------------------------------
+class MemoryTier:
+    name = "memory"
+    level = 1.0
+
+    def __init__(self, capacity_bytes: int):
+        self._capacity = int(capacity_bytes)
+        self._lock = threading.Lock()
+        self._data: Dict[ShardKey, bytes] = {}
+        self._crc: Dict[ShardKey, int] = {}
+        self._used = 0
+
+    @property
+    def capacity(self) -> float:
+        return self._capacity
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> float:
+        with self._lock:
+            return self._capacity - self._used
+
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        payload = bytes(payload)
+        with self._lock:
+            old = len(self._data.get(key, b""))
+            if self._used - old + len(payload) > self._capacity:
+                raise CapacityError(
+                    f"{self.name} tier over capacity: used={self._used} "
+                    f"cap={self._capacity} put={len(payload)}")
+            self._data[key] = payload
+            self._crc[key] = crc32(payload) if crc is None else crc
+            self._used += len(payload) - old
+
+    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+        with self._lock:
+            if key not in self._data:
+                raise KeyError(key)
+            payload = self._data[key]
+            crc = self._crc[key]
+        if verify and crc32(payload) != crc:
+            raise IntegrityError(f"crc mismatch for {key}")
+        return payload
+
+    def has(self, key: ShardKey) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def drop(self, key: ShardKey) -> None:
+        with self._lock:
+            payload = self._data.pop(key, None)
+            self._crc.pop(key, None)
+            if payload is not None:
+                self._used -= len(payload)
+
+    def keys(self) -> List[ShardKey]:
+        with self._lock:
+            return list(self._data.keys())
+
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
+        freed = 0
+        for k in self.keys():
+            if k.app_id == app_id and k.ckpt_id == ckpt_id:
+                with self._lock:
+                    payload = self._data.pop(k, None)
+                    self._crc.pop(k, None)
+                    if payload is not None:
+                        self._used -= len(payload)
+                        freed += len(payload)
+        return freed
+
+
+# --------------------------------------------------------------------------
+# L0.5: node-local disk spill (burst-buffer analogue)
+# --------------------------------------------------------------------------
+_SPILL_MAGIC = b"ICS1"
+
+
+class LocalDiskTier:
+    name = "local_disk"
+    level = 1.5
+
+    def __init__(self, root: str, capacity_bytes: int):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._capacity = int(capacity_bytes)
+        self._lock = threading.Lock()
+        self._index: Dict[ShardKey, int] = {}     # key -> payload nbytes
+        self._used = 0
+
+    @property
+    def capacity(self) -> float:
+        return self._capacity
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> float:
+        with self._lock:
+            return self._capacity - self._used
+
+    def _path(self, key: ShardKey) -> str:
+        return os.path.join(
+            self.root, key.app_id, f"ckpt_{key.ckpt_id:08d}",
+            key.region.replace("/", "__"),
+            f"part_{key.part:05d}_r{key.replica}.bin")
+
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        payload = bytes(payload)
+        with self._lock:
+            old = self._index.get(key, 0)
+            had = key in self._index
+            if self._used - old + len(payload) > self._capacity:
+                raise CapacityError(
+                    f"{self.name} tier over capacity: used={self._used} "
+                    f"cap={self._capacity} put={len(payload)}")
+            self._index[key] = len(payload)
+            self._used += len(payload) - old
+        crc = crc32(payload) if crc is None else crc
+        path = self._path(key)
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(_SPILL_MAGIC + crc.to_bytes(4, "little"))
+                f.write(payload)
+            os.replace(tmp, path)
+        except OSError:
+            # roll back the reservation: the tier must not claim a shard
+            # (or capacity) that has no backing file
+            with self._lock:
+                if had:
+                    self._index[key] = old
+                    self._used += old - len(payload)
+                else:
+                    self._index.pop(key, None)
+                    self._used -= len(payload)
+            raise
+
+    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+        with self._lock:
+            if key not in self._index:
+                raise KeyError(key)
+        with open(self._path(key), "rb") as f:
+            blob = f.read()
+        if blob[:4] != _SPILL_MAGIC:
+            raise IntegrityError(f"bad spill magic for {key}")
+        crc = int.from_bytes(blob[4:8], "little")
+        payload = blob[8:]
+        if verify and crc32(payload) != crc:
+            raise IntegrityError(f"crc mismatch for spilled {key}")
+        return payload
+
+    def has(self, key: ShardKey) -> bool:
+        with self._lock:
+            return key in self._index
+
+    def drop(self, key: ShardKey) -> None:
+        with self._lock:
+            nbytes = self._index.pop(key, None)
+            if nbytes is not None:
+                self._used -= nbytes
+        if nbytes is not None:
+            try:
+                os.remove(self._path(key))
+            except OSError:
+                pass
+
+    def keys(self) -> List[ShardKey]:
+        with self._lock:
+            return list(self._index.keys())
+
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
+        freed = 0
+        for k in self.keys():
+            if k.app_id == app_id and k.ckpt_id == ckpt_id:
+                with self._lock:
+                    nbytes = self._index.pop(k, None)
+                if nbytes is not None:
+                    freed += nbytes
+                    with self._lock:
+                        self._used -= nbytes
+                    try:
+                        os.remove(self._path(k))
+                    except OSError:
+                        pass
+        return freed
+
+    def close(self) -> None:
+        shutil.rmtree(self.root, ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
+# L2: PFS container
+# --------------------------------------------------------------------------
+_SHARD_MAGIC = b"ICK1"
+
+
+def _shard_path(root: str, key: ShardKey) -> str:
+    return os.path.join(root, key.app_id, f"ckpt_{key.ckpt_id:08d}",
+                        key.region.replace("/", "__"), f"part_{key.part:05d}.bin")
+
+
+def _manifest_path(root: str, app_id: str, ckpt_id: int) -> str:
+    return os.path.join(root, app_id, f"ckpt_{ckpt_id:08d}", "MANIFEST.json")
+
+
+class PFSTier:
+    """Bandwidth-limited parallel-file-system tier.
+
+    ``ingest`` is the aggregate PFS bandwidth all concurrent drains share —
+    the resource the drain orchestrator rations (paper §II: "orchestrate the
+    writing of the checkpoint data into PFS by minimizing the effect on
+    running applications").  One file per shard so thousands of hosts can
+    restore in parallel, plus a JSON manifest per checkpoint.
+    """
+
+    name = "pfs"
+    level = 2.0
+
+    def __init__(self, root: str, bandwidth: float = 40e9, compress: bool = False,
+                 clock=None):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.ingest = SimNIC("pfs", bandwidth, latency=1e-4, clock=clock)
+        self.compress = bool(compress and _zstd is not None)
+        self._lock = threading.Lock()
+
+    # -- StorageTier protocol ---------------------------------------------
+    @property
+    def capacity(self) -> float:
+        return float("inf")
+
+    @property
+    def used_bytes(self) -> int:
+        total = 0
+        for key in self.keys():
+            try:
+                total += os.path.getsize(_shard_path(self.root, key))
+            except OSError:
+                pass
+        return total
+
+    @property
+    def free_bytes(self) -> float:
+        return float("inf")
+
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        self.write_shard(key, payload, crc)
+
+    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+        return self.read_shard(key)
+
+    def has(self, key: ShardKey) -> bool:
+        return self.has_shard(key)
+
+    def drop(self, key: ShardKey) -> None:
+        try:
+            os.remove(_shard_path(self.root, key))
+        except OSError:
+            pass
+
+    def keys(self) -> List[ShardKey]:
+        out: List[ShardKey] = []
+        if not os.path.isdir(self.root):
+            return out
+        for app_id in os.listdir(self.root):
+            base = os.path.join(self.root, app_id)
+            if not os.path.isdir(base):
+                continue
+            for d in os.listdir(base):
+                if not d.startswith("ckpt_"):
+                    continue
+                ckpt_id = int(d.split("_")[1])
+                cdir = os.path.join(base, d)
+                for region in os.listdir(cdir):
+                    rdir = os.path.join(cdir, region)
+                    if not os.path.isdir(rdir):
+                        continue
+                    for fn in os.listdir(rdir):
+                        if fn.startswith("part_") and fn.endswith(".bin"):
+                            part = int(fn[5:-4])
+                            out.append(ShardKey(app_id, ckpt_id,
+                                                region.replace("__", "/"), part))
+        return out
+
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
+        base = os.path.join(self.root, app_id, f"ckpt_{ckpt_id:08d}")
+        freed = 0
+        if os.path.isdir(base):
+            for dirpath, _, files in os.walk(base):
+                for fn in files:
+                    try:
+                        freed += os.path.getsize(os.path.join(dirpath, fn))
+                    except OSError:
+                        pass
+            shutil.rmtree(base, ignore_errors=True)
+        return freed
+
+    # -- shard IO ----------------------------------------------------------
+    def write_shard(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> float:
+        raw_len = len(payload)
+        if self.compress:
+            payload = _zstd.ZstdCompressor(level=3).compress(bytes(payload))
+        crc = crc32(payload)
+        # simulate PFS ingest time on the *written* bytes
+        dur = self.ingest.transfer(len(payload))
+        path = _shard_path(self.root, key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        header = _SHARD_MAGIC + crc.to_bytes(4, "little") + raw_len.to_bytes(8, "little") \
+            + (b"Z" if self.compress else b"R")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(header)
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)       # atomic publish
+        return dur
+
+    def read_shard(self, key: ShardKey) -> bytes:
+        path = _shard_path(self.root, key)
+        with open(path, "rb") as f:
+            blob = f.read()
+        if blob[:4] != _SHARD_MAGIC:
+            raise IntegrityError(f"bad magic in {path}")
+        crc = int.from_bytes(blob[4:8], "little")
+        raw_len = int.from_bytes(blob[8:16], "little")
+        mode = blob[16:17]
+        payload = blob[17:]
+        if crc32(payload) != crc:
+            raise IntegrityError(f"crc mismatch in {path}")
+        self.ingest.transfer(len(payload))
+        if mode == b"Z":
+            payload = _zstd.ZstdDecompressor().decompress(payload, max_output_size=raw_len)
+        return payload
+
+    def has_shard(self, key: ShardKey) -> bool:
+        return os.path.exists(_shard_path(self.root, key))
+
+    # -- manifests -----------------------------------------------------------
+    def write_manifest(self, meta: CheckpointMeta) -> None:
+        doc = {
+            "app_id": meta.app_id,
+            "ckpt_id": meta.ckpt_id,
+            "step": meta.step,
+            "status": meta.status.value,
+            "userdata_hex": meta.userdata.hex(),
+            "regions": {
+                name: {
+                    "shape": list(r.shape),
+                    "dtype": r.dtype,
+                    "nbytes": r.nbytes,
+                    "codec": r.codec,
+                    "partition": {
+                        "scheme": r.partition.scheme.value,
+                        "axis": r.partition.axis,
+                        "num_parts": r.partition.num_parts,
+                        "block": r.partition.block,
+                        "bounds": r.partition.bounds,
+                    },
+                }
+                for name, r in meta.regions.items()
+            },
+        }
+        path = _manifest_path(self.root, meta.app_id, meta.ckpt_id)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, path)
+
+    def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
+        path = _manifest_path(self.root, app_id, ckpt_id)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            doc = json.load(f)
+        meta = CheckpointMeta(app_id=doc["app_id"], ckpt_id=doc["ckpt_id"],
+                              step=doc["step"], status=CkptStatus(doc["status"]),
+                              userdata=bytes.fromhex(doc.get("userdata_hex", "")))
+        for name, r in doc["regions"].items():
+            meta.regions[name] = RegionMeta(
+                name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
+                nbytes=r["nbytes"], codec=r.get("codec", "raw"),
+                partition=PartitionDesc(
+                    scheme=PartitionScheme(r["partition"]["scheme"]),
+                    axis=r["partition"]["axis"],
+                    num_parts=r["partition"]["num_parts"],
+                    block=r["partition"]["block"],
+                    bounds=_tupled(r["partition"].get("bounds"))))
+        return meta
+
+    def list_checkpoints(self, app_id: str) -> List[int]:
+        base = os.path.join(self.root, app_id)
+        if not os.path.isdir(base):
+            return []
+        out = []
+        for d in os.listdir(base):
+            if d.startswith("ckpt_") and os.path.exists(os.path.join(base, d, "MANIFEST.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def checkpoint_complete(self, meta: CheckpointMeta) -> bool:
+        for name, region in meta.regions.items():
+            for part in range(region.partition.num_parts):
+                if not self.has_shard(ShardKey(meta.app_id, meta.ckpt_id, name, part)):
+                    return False
+        return True
+
+
+# ==========================================================================
+# the per-node pipeline
+# ==========================================================================
+class TierPipeline:
+    """Ordered storage tiers of one iCheck node, fastest first.
+
+    Drop-in for the old single-level ``MemoryStore``: puts land in the
+    fastest tier with room (spilling down on :class:`CapacityError`), reads
+    search top-down and promote a hit back into the fastest tier when it
+    fits.  With a single :class:`MemoryTier` this degenerates to exactly the
+    old behaviour, including raising ``CapacityError`` when full — which is
+    what lets the controller escalate to the RM for more nodes (§III-A).
+    """
+
+    def __init__(self, tiers: Sequence[StorageTier], bus=None,
+                 node_id: str = "?"):
+        if not tiers:
+            raise ICheckError("TierPipeline needs at least one tier")
+        self.tiers = list(tiers)
+        self.bus = bus
+        self.node_id = node_id
+        # compound operations (spill on put, promote on get) span tiers;
+        # this lock makes them atomic w.r.t. each other, like the single
+        # MemoryStore lock they replace (tier-internal locks are not enough:
+        # a concurrent reader could observe a shard mid-promotion as absent
+        # from both tiers)
+        self._lock = threading.RLock()
+
+    # -- capacity accounting (aggregated) ----------------------------------
+    @property
+    def capacity(self) -> float:
+        return sum(t.capacity for t in self.tiers)
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(t.used_bytes for t in self.tiers)
+
+    @property
+    def free_bytes(self) -> float:
+        return sum(t.free_bytes for t in self.tiers)
+
+    def _publish(self, name: str, **kw) -> None:
+        if self.bus is not None:
+            self.bus.publish(name, **kw)
+
+    # -- mapping interface (MemoryStore-compatible) ------------------------
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        with self._lock:
+            last_err: Optional[CapacityError] = None
+            for i, tier in enumerate(self.tiers):
+                try:
+                    tier.put(key, payload, crc)
+                except CapacityError as e:
+                    last_err = e
+                    continue
+                if i > 0:
+                    self._publish(_events.SHARD_SPILLED, node=self.node_id,
+                                  tier=tier.name, key=str(key),
+                                  nbytes=len(payload))
+                # a put supersedes any stale copy in other tiers
+                for j, other in enumerate(self.tiers):
+                    if j != i and other.has(key):
+                        other.drop(key)
+                return
+            raise last_err if last_err is not None else CapacityError("no tiers")
+
+    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+        with self._lock:
+            for i, tier in enumerate(self.tiers):
+                if not tier.has(key):
+                    continue
+                payload = tier.get(key, verify=verify)
+                if i > 0:
+                    self.promote(key, payload=payload, src=tier)
+                return payload
+            raise KeyError(key)
+
+    def has(self, key: ShardKey) -> bool:
+        with self._lock:
+            return any(t.has(key) for t in self.tiers)
+
+    def drop(self, key: ShardKey) -> None:
+        with self._lock:
+            for tier in self.tiers:
+                tier.drop(key)
+
+    def keys(self) -> List[ShardKey]:
+        with self._lock:
+            seen: Dict[ShardKey, None] = {}
+            for tier in self.tiers:
+                for k in tier.keys():
+                    seen.setdefault(k, None)
+            return list(seen.keys())
+
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
+        with self._lock:
+            return sum(t.drop_checkpoint(app_id, ckpt_id) for t in self.tiers)
+
+    # -- promotion / demotion ----------------------------------------------
+    def promote(self, key: ShardKey, payload: Optional[bytes] = None,
+                src: Optional[StorageTier] = None) -> bool:
+        """Move a shard up into the fastest tier (best effort)."""
+        with self._lock:
+            top = self.tiers[0]
+            if top.has(key):
+                return False
+            if src is None:
+                src = next((t for t in self.tiers[1:] if t.has(key)), None)
+                if src is None:
+                    return False
+            if payload is None:
+                payload = src.get(key, verify=False)
+            try:
+                top.put(key, payload)
+            except CapacityError:
+                return False
+            src.drop(key)
+        self._publish(_events.SHARD_PROMOTED, node=self.node_id, key=str(key),
+                      src=src.name, dst=top.name, nbytes=len(payload))
+        return True
+
+    def demote(self, key: ShardKey) -> bool:
+        """Push a shard from the fastest tier one level down (free RAM)."""
+        with self._lock:
+            if len(self.tiers) < 2 or not self.tiers[0].has(key):
+                return False
+            payload = self.tiers[0].get(key, verify=False)
+            try:
+                self.tiers[1].put(key, payload)
+            except CapacityError:
+                return False
+            self.tiers[0].drop(key)
+        self._publish(_events.SHARD_SPILLED, node=self.node_id,
+                      tier=self.tiers[1].name, key=str(key),
+                      nbytes=len(payload))
+        return True
+
+    def close(self) -> None:
+        for tier in self.tiers:
+            closer = getattr(tier, "close", None)
+            if closer is not None:
+                closer()

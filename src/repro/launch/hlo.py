@@ -150,7 +150,10 @@ def _multipliers(comps: Dict[str, Computation]
     Control edges (while body/cond) scale by trip count and propagate both
     multipliers; fusion/to_apply edges propagate only the flop multiplier
     (fusion internals' bytes are accounted at the fusion boundary, matching
-    XLA's fused cost model).
+    XLA's fused cost model).  Plain ``call`` wrappers (the CPU thunk runtime
+    wraps each fusion in a ``parallel_*`` called computation) are
+    transparent: they propagate bytes too, since the call instruction
+    itself is byte-skipped and the boundary lives inside the callee.
     """
     edges: Dict[str, List[Tuple[str, float, bool]]] = {n: [] for n in comps}
     callees: set = set()
@@ -168,7 +171,8 @@ def _multipliers(comps: Dict[str, Computation]
             for rx in (_CALLS_RE, _TO_APPLY_RE):
                 mm = rx.search(ins.line)
                 if mm:
-                    edges[name].append((mm.group(1), 1.0, False))
+                    edges[name].append((mm.group(1), 1.0,
+                                        ins.opcode == "call"))
                     callees.add(mm.group(1))
     roots = set(comps) - callees
     flop_mult = {n: 0.0 for n in comps}

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import snapshot_pytree
+from repro.core import restore_pytree, snapshot_pytree
 from repro.models import decode_step, init_cache, prefill
 from repro.sharding import get_rules, use_rules
 
@@ -43,6 +43,7 @@ class ServeEngine:
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=1)
+        self.last_commit = None     # CommitHandle of the newest cache commit
 
     def generate(self, batch: Dict, gen_len: int = 16,
                  checkpoint_client=None) -> np.ndarray:
@@ -57,10 +58,28 @@ class ServeEngine:
         if checkpoint_client is not None:
             snap = snapshot_pytree(cache, step=0)
             checkpoint_client.add_adapt_snapshot(snap)
-            checkpoint_client.commit(
+            self.last_commit = checkpoint_client.commit(
                 0, {n: r.parts for n, r in snap.regions.items()})
         out = [jnp.argmax(logits, -1)[:, None].astype(jnp.int32)]
         for _ in range(gen_len - 1):
             logits, cache = self._decode(self.params, cache, out[-1])
             out.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
         return np.concatenate([np.asarray(t) for t in out], axis=1)
+
+    def restore_serving_state(self, checkpoint_client, batch_size: int):
+        """Rebuild the prefilled cache from the checkpoint service.
+
+        The restart half of serving-state fault tolerance: a preempted
+        inference node fetches the committed KV/recurrent cache from the
+        agents (L1) or the PFS (L2) instead of re-running prefill.  Returns
+        the restored cache pytree, or None when nothing was committed.
+        """
+        found = checkpoint_client.restart()
+        if found is None:
+            return None
+        meta, regions, _level = found
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            init_cache(self.cfg, batch_size, self.max_len))
+        region_meta = {name: meta.regions[name] for name in regions}
+        return restore_pytree(template, regions, region_meta)

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import (ICheckClient, ICheckCluster, MalleableApp,
                         snapshot_pytree)
+from repro.core import events as icheck_events
 from repro.core import plan as planlib
 from repro.core.snapshot import leaf_names, restore_pytree
 from repro.data import SyntheticLMData
@@ -81,6 +82,15 @@ class ElasticTrainer:
         self.metrics_log: list = []
         self.resizes = 0
         self._pending_commits: list = []
+        # checkpoint-service telemetry: observe the controller's event bus
+        # instead of polling its audit list (drain completions, forewarnings,
+        # codec degradations all land here asynchronously)
+        self.ckpt_events: list = []
+        self._unsubscribe = cluster.controller.bus.subscribe(
+            lambda ev: self.ckpt_events.append(ev.as_record()),
+            events=(icheck_events.CKPT_IN_L1, icheck_events.CKPT_IN_L2,
+                    icheck_events.DRAIN_FAILED, icheck_events.CODEC_DEGRADED,
+                    icheck_events.RESIZE_FOREWARNED))
 
         key = jax.random.key(seed)
         self.state = make_train_state(cfg, key, self.opt_cfg)
@@ -211,3 +221,4 @@ class ElasticTrainer:
             if not h.done():
                 h.wait(timeout=60)
         self.client.finalize()
+        self._unsubscribe()

@@ -1,0 +1,131 @@
+"""Unit tests for the event bus (core/events.py) and the storage-tier
+pipeline + codec path (core/tiers.py)."""
+import numpy as np
+import pytest
+
+from repro.core import events as E
+from repro.core.events import AuditLog, EventBus
+from repro.core.simnet import SimClock
+from repro.core.tiers import (LocalDiskTier, MemoryTier, TierPipeline,
+                              decode_payload, encode_payload, resolve_codec,
+                              zstd_available)
+from repro.core.types import CapacityError, ShardKey
+
+
+def _key(i=0, rep=0):
+    return ShardKey("app", 0, "x", i, rep)
+
+
+# ------------------------------------------------------------------- events
+def test_bus_filtering_and_unsubscribe():
+    bus = EventBus(SimClock())
+    seen, all_seen = [], []
+    unsub = bus.subscribe(lambda ev: seen.append(ev.name),
+                          events=(E.CKPT_IN_L1,))
+    bus.subscribe(lambda ev: all_seen.append(ev.name))
+    bus.publish(E.CKPT_IN_L1, app="a", ckpt=0)
+    bus.publish(E.CKPT_IN_L2, app="a", ckpt=0)
+    assert seen == [E.CKPT_IN_L1]
+    assert all_seen == [E.CKPT_IN_L1, E.CKPT_IN_L2]
+    unsub()
+    bus.publish(E.CKPT_IN_L1, app="a", ckpt=1)
+    assert seen == [E.CKPT_IN_L1]
+
+
+def test_audit_log_record_format():
+    """Byte-compat with the pre-refactor Controller._log dicts."""
+    bus = EventBus(SimClock())
+    audit = AuditLog()
+    bus.subscribe(audit)
+    bus.publish("node_added", node="icn0")
+    rec = audit.records[0]
+    assert rec == {"node": "icn0", "event": "node_added", "sim_t": 0.0}
+    assert list(rec.keys()) == ["node", "event", "sim_t"]
+
+
+def test_bus_survives_broken_subscriber():
+    bus = EventBus()
+    bus.subscribe(lambda ev: (_ for _ in ()).throw(RuntimeError("boom")))
+    got = []
+    bus.subscribe(lambda ev: got.append(ev.name))
+    bus.publish("x")
+    assert got == ["x"]
+
+
+# -------------------------------------------------------------------- tiers
+def test_pipeline_spills_then_promotes(tmp_path):
+    mem = MemoryTier(100)
+    disk = LocalDiskTier(str(tmp_path / "spill"), 10_000)
+    pipe = TierPipeline([mem, disk])
+    big = bytes(80)
+    pipe.put(_key(0), big)
+    pipe.put(_key(1), big)          # over RAM capacity -> spills to disk
+    assert mem.has(_key(0)) and not mem.has(_key(1))
+    assert disk.has(_key(1))
+    assert pipe.has(_key(1)) and pipe.get(_key(1)) == big
+    # freeing RAM lets the next read promote the spilled shard back up
+    pipe.drop(_key(0))
+    assert pipe.get(_key(1)) == big
+    assert mem.has(_key(1)) and not disk.has(_key(1))
+
+
+def test_pipeline_full_raises_capacity_error(tmp_path):
+    pipe = TierPipeline([MemoryTier(64),
+                         LocalDiskTier(str(tmp_path / "s"), 64)])
+    with pytest.raises(CapacityError):
+        pipe.put(_key(0), bytes(100))
+
+
+def test_pipeline_accounting_and_gc(tmp_path):
+    mem = MemoryTier(100)
+    disk = LocalDiskTier(str(tmp_path / "spill"), 1000)
+    pipe = TierPipeline([mem, disk])
+    pipe.put(_key(0), bytes(60))
+    pipe.put(_key(1), bytes(60))    # spilled
+    assert pipe.used_bytes == 120
+    freed = pipe.drop_checkpoint("app", 0)
+    assert freed == 120
+    assert pipe.used_bytes == 0 and not pipe.keys()
+
+
+def test_demote_frees_ram(tmp_path):
+    mem = MemoryTier(100)
+    disk = LocalDiskTier(str(tmp_path / "spill"), 1000)
+    pipe = TierPipeline([mem, disk])
+    pipe.put(_key(0), bytes(60))
+    assert pipe.demote(_key(0))
+    assert not mem.has(_key(0)) and disk.has(_key(0))
+    assert pipe.get(_key(0)) == bytes(60)     # promoted back
+
+
+# ------------------------------------------------------------------- codecs
+def test_codec_raw_roundtrip():
+    data = np.arange(100, dtype=np.int64).tobytes()
+    assert decode_payload(encode_payload(data, "raw"), "raw") == data
+
+
+def test_codec_q8_roundtrip_lossy():
+    x = np.random.default_rng(0).normal(size=1000).astype(np.float32)
+    blob = encode_payload(x.tobytes(), "q8", "float32")
+    assert len(blob) < x.nbytes          # ~4x smaller plus scales
+    y = np.frombuffer(decode_payload(blob, "q8", "float32"), np.float32)
+    assert np.max(np.abs(x - y)) <= np.max(np.abs(x)) / 127 + 1e-6
+
+
+def test_codec_q8_non_float_falls_back_raw():
+    data = np.arange(50, dtype=np.int32).tobytes()
+    blob = encode_payload(data, "q8", "int32")
+    assert decode_payload(blob, "q8", "int32") == data
+
+
+def test_resolve_codec_degrades_without_zstd():
+    calls = []
+    actual = resolve_codec("zstd", on_degrade=lambda req, act:
+                           calls.append((req, act)))
+    if zstd_available():
+        assert actual == "zstd" and not calls
+        data = np.arange(999, dtype=np.float64).tobytes()
+        assert decode_payload(encode_payload(data, "zstd"), "zstd") == data
+    else:
+        assert actual == "none"
+        assert calls == [("zstd", "none")]

@@ -80,8 +80,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+try:    # axis_types / AxisType only exist on newer jax
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+except (AttributeError, TypeError):
+    mesh = jax.make_mesh((8,), ("model",))
 sh = NamedSharding(mesh, P(None, "model"))
 f = jax.jit(lambda a, b: (a @ b).sum(), in_shardings=(None, sh))
 a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
