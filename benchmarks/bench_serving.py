@@ -3,7 +3,6 @@ the dry-run-derived v5e decode latency bounds (full configs), including
 the int8-KV (H8) variant where it changes the bound."""
 from __future__ import annotations
 
-import glob
 import json
 import os
 import time

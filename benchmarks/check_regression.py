@@ -1,0 +1,89 @@
+"""CI perf regression gate.
+
+Compares the metrics block of a fresh ``BENCH_smoke.json`` (written by
+``python -m benchmarks.run --smoke``) against the committed baseline and
+fails (exit 1) when any throughput metric regresses by more than the
+threshold (default 15%).  All smoke metrics are simulated-time derived and
+therefore deterministic across machines — a regression means the code got
+slower in sim terms (extra copies, broken overlap, serialized transfers),
+not that the runner was noisy.
+
+  python benchmarks/check_regression.py \
+      --baseline benchmarks/baseline_smoke.json --current BENCH_smoke.json
+
+Exit codes: 0 ok, 1 regression/crashed run, 2 usage or malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# every smoke metric is higher-is-better; a new metric added to the current
+# file without a baseline entry is reported but does not fail the gate (the
+# baseline must be refreshed deliberately to start tracking it)
+DEFAULT_THRESHOLD = 0.15
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ERROR: cannot read {path}: {e}")
+        sys.exit(2)
+    if not isinstance(data.get("metrics"), dict):
+        print(f"ERROR: {path} has no 'metrics' block")
+        sys.exit(2)
+    return data
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated fractional regression (0.15 = 15%%)")
+    args = ap.parse_args(argv)
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    if not cur.get("ok", True) or cur.get("failures"):
+        print(f"FAIL: current run reports failures: {cur.get('failures')}")
+        sys.exit(1)
+
+    regressions = []
+    print(f"{'metric':35s} {'baseline':>14s} {'current':>14s} {'delta':>8s}")
+    for name, base_val in sorted(base["metrics"].items()):
+        cur_val = cur["metrics"].get(name)
+        if cur_val is None:
+            regressions.append(f"{name}: missing from current run")
+            print(f"{name:35s} {base_val:14.4g} {'MISSING':>14s}")
+            continue
+        if base_val <= 0:
+            print(f"{name:35s} {base_val:14.4g} {cur_val:14.4g}   (skip)")
+            continue
+        delta = (cur_val - base_val) / base_val
+        flag = ""
+        if delta < -args.threshold:
+            regressions.append(
+                f"{name}: {base_val:.4g} -> {cur_val:.4g} "
+                f"({100 * delta:+.1f}% < -{100 * args.threshold:.0f}%)")
+            flag = "  << REGRESSION"
+        print(f"{name:35s} {base_val:14.4g} {cur_val:14.4g} "
+              f"{100 * delta:+7.1f}%{flag}")
+    for name in sorted(set(cur["metrics"]) - set(base["metrics"])):
+        print(f"{name:35s} {'(new)':>14s} {cur['metrics'][name]:14.4g}")
+
+    if regressions:
+        print("\nPERF REGRESSION (threshold "
+              f"{100 * args.threshold:.0f}%):")
+        for r in regressions:
+            print(f"  - {r}")
+        sys.exit(1)
+    print("\nperf gate OK: no metric regressed beyond "
+          f"{100 * args.threshold:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

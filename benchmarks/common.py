@@ -1,10 +1,15 @@
-"""Shared benchmark helpers: fixed-count placement policy, result I/O."""
+"""Shared benchmark helpers: fixed-count placement policy, result I/O, and
+the failure-injected compute/checkpoint workload used by the adaptive
+interval benchmarks (bench_restart / bench_multiapp ``--adaptive``)."""
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence
 
+import numpy as np
+
+from repro.core import events as icheck_events
 from repro.core.policies import NodeView, SchedulingPolicy
 from repro.core.types import AppRecord
 
@@ -50,3 +55,103 @@ def block_parts(arr, ranks: int):
 
     desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=ranks)
     return {i: p for i, p in enumerate(split_array(arr, desc))}
+
+
+def failure_schedule(mtbf_s: float, horizon_s: float, seed: int = 0,
+                     t0: float = 0.0) -> List[float]:
+    """Absolute failure times: exponential inter-arrivals, mean ``mtbf_s``.
+
+    The same schedule is replayed against every policy under comparison so
+    fixed vs adaptive intervals see identical fault sequences.
+    """
+    rng = np.random.default_rng(seed)
+    times, t = [], t0
+    while t < t0 + 3.0 * horizon_s:
+        t += float(rng.exponential(mtbf_s))
+        times.append(t)
+    return times
+
+
+def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
+                      total_work_s: float, failure_times: Sequence[float],
+                      interval_fn: Callable[[], float],
+                      work_slice_s: float = 0.05, keep_l1: int = 2) -> dict:
+    """Drive a simulated compute loop with checkpoints on the cluster clock.
+
+    The application "computes" by advancing the sim clock in slices; every
+    ``interval_fn()`` sim-seconds it commits (blocking, so commit cost lands
+    on the clock too).  Injected rank failures (absolute sim times from
+    ``failure_times``) are published on the controller bus — exactly what
+    feeds the TelemetryService's MTBF estimate — and roll the app back to
+    its latest checkpoint: everything computed since is *wasted work*.
+
+    Returns the wasted-work / checkpoint-overhead / restart-cost accounting
+    that the adaptive-interval benchmarks compare across policies.
+    """
+    clock, bus = cluster.clock, cluster.controller.bus
+    app_id = client.app_id
+    step = 0
+    start_t = clock.now()
+    # priming commit: gives the telemetry its first commit-cost sample and
+    # the workload a time-zero restart point
+    t0 = clock.now()
+    client.commit(step, parts, blocking=True, drain=False)
+    step += 1
+    ckpt_overhead_s = clock.now() - t0
+    commits, failures = 1, 0
+    wasted_s = restart_s = 0.0
+    work_done = 0.0
+    work_at_ckpt = 0.0
+    last_ckpt_t = clock.now()
+    ckpt_ids = [0]
+    fail_iter = iter(sorted(failure_times))
+    next_fail = next(fail_iter, float("inf"))
+
+    while work_done < total_work_s:
+        now = clock.now()
+        if now >= next_fail:
+            # the rank dies: lose all work since the last checkpoint
+            bus.publish(icheck_events.APP_RANK_FAILED, app=app_id, rank=0)
+            failures += 1
+            wasted_s += work_done - work_at_ckpt
+            work_done = work_at_ckpt
+            t0 = clock.now()
+            client.restart()
+            restart_s += clock.now() - t0
+            next_fail = next(fail_iter, float("inf"))
+            last_ckpt_t = clock.now()
+            continue
+        if now - last_ckpt_t >= interval_fn():
+            t0 = clock.now()
+            client.commit(step, parts, blocking=True, drain=False)
+            ckpt_overhead_s += clock.now() - t0
+            ckpt_ids.append(step)
+            step += 1
+            commits += 1
+            work_at_ckpt = work_done
+            last_ckpt_t = clock.now()
+            # keep L1 bounded without involving the drain path (drain=False
+            # keeps the PFS out of the timeline): drop all but the newest
+            # keep_l1 checkpoints from every node's tier pipeline
+            for old in ckpt_ids[:-keep_l1]:
+                for mgr in cluster.controller.managers():
+                    mgr.store.drop_checkpoint(app_id, old)
+            del ckpt_ids[:-keep_l1]
+            continue
+        dt = min(work_slice_s, total_work_s - work_done,
+                 max(next_fail - now, 1e-9))
+        clock.sleep(dt)
+        work_done += dt
+
+    elapsed = clock.now() - start_t
+    return {
+        "total_work_s": total_work_s,
+        "elapsed_sim_s": elapsed,
+        "commits": commits,
+        "failures": failures,
+        "wasted_work_s": wasted_s,
+        "ckpt_overhead_s": ckpt_overhead_s,
+        "restart_s": restart_s,
+        "total_overhead_s": wasted_s + ckpt_overhead_s + restart_s,
+        "final_interval_s": interval_fn(),
+    }

@@ -3,11 +3,16 @@
   PYTHONPATH=src python -m benchmarks.run [--only b1,b3] [--smoke]
 
 ``--smoke`` runs the seconds-scale perf canary (b1 + b2 at tiny payloads)
-used by CI to catch control/data-plane throughput regressions.
+used by CI to catch control/data-plane throughput regressions.  It writes
+``BENCH_smoke.json`` (deterministic sim-time metrics; compared against the
+committed baseline by ``benchmarks/check_regression.py``) and exits
+non-zero the moment any sub-benchmark raises — a crashed benchmark must
+fail the CI perf job, not green-wash it.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,7 +26,9 @@ ALL = {
     "b2": ("async commit overlap", bench_async_overlap.run),
     "b3": ("redistribution", bench_redistribution.run),
     "b4": ("multi-app adaptivity", bench_multiapp.run),
+    "b4a": ("adaptive per-app ckpt intervals", bench_multiapp.run_adaptive),
     "b5": ("multilevel restart", bench_restart.run),
+    "b5a": ("adaptive ckpt interval vs fixed", bench_restart.run_adaptive),
     "b6": ("checkpoint codec", bench_codec.run),
     "b7": ("roofline table", roofline.run),
     "b8": ("serving decode", bench_serving.run),
@@ -31,6 +38,36 @@ SMOKE = {
     "b1": ("agent-count transfer knee (smoke)", bench_transfer.run_smoke),
     "b2": ("async commit overlap (smoke)", bench_async_overlap.run_smoke),
 }
+
+SMOKE_JSON = "BENCH_smoke.json"
+
+
+def smoke_metrics(results: dict) -> dict:
+    """Flat, deterministic (sim-time-derived) metrics for the CI regression
+    gate.  All are higher-is-better throughput/overlap numbers."""
+    metrics = {}
+    b1 = results.get("b1")
+    if b1:
+        metrics["b1_max_rate_Bps"] = max(r["rate_Bps"] for r in b1["rows"])
+        metrics["b1_single_agent_rate_Bps"] = b1["rows"][0]["rate_Bps"]
+    b2 = results.get("b2")
+    if b2:
+        metrics["b2_hidden_fraction"] = b2["hidden_fraction"]
+        metrics["b2_commit_rate_Bps"] = b2["payload"] / max(
+            b2["async_transfer_sim_s_hidden"], 1e-12)
+    return metrics
+
+
+def _write_smoke_json(results: dict, failures: list) -> None:
+    payload = {
+        "metrics": smoke_metrics(results),
+        "results": results,
+        "failures": failures,
+        "ok": not failures,
+    }
+    with open(SMOKE_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[smoke metrics written to {SMOKE_JSON}]")
 
 
 def main(argv=None):
@@ -46,17 +83,26 @@ def main(argv=None):
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; have {sorted(table)}")
     failures = []
+    results = {}
     t0 = time.monotonic()
     for name in names:
         desc, fn = table[name]
         print(f"\n===== {name.upper()}: {desc} =====")
         try:
             t = time.monotonic()
-            fn(verbose=True)
+            results[name] = fn(verbose=True)
             print(f"[{name} done in {time.monotonic() - t:.1f}s]")
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
-            failures.append((name, repr(e)))
+            failures.append({"bench": name, "error": repr(e)})
+            if args.smoke:
+                # CI perf canary: a crashed sub-benchmark must abort the
+                # run with a non-zero exit, never print-and-continue
+                _write_smoke_json(results, failures)
+                print(f"SMOKE FAILED at {name}: {e!r}")
+                sys.exit(1)
+    if args.smoke:
+        _write_smoke_json(results, failures)
     print(f"\n===== benchmarks finished in {time.monotonic() - t0:.1f}s =====")
     if failures:
         print("FAILURES:", failures)

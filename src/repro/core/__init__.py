@@ -19,6 +19,8 @@ from .plan import (Move, MeshMove, apply_mesh_moves, apply_moves,
 from .policies import (AdaptivePolicy, BandwidthBalancedPolicy,
                        MemoryAwarePolicy, StaticPolicy, get_policy)
 from .rm import ResizeEvent, ResourceManager
+from .services import (IntervalController, TelemetryService, daly_interval,
+                       young_interval)
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
 from .snapshot import HostSnapshot, restore_pytree, snapshot_pytree
 from .tiers import (LocalDiskTier, MemoryTier, PFSTier, StorageTier,
@@ -38,7 +40,9 @@ __all__ = [
     "local_shape", "mesh_moves", "mesh_part_bounds", "partition_intervals",
     "redistribution_moves", "split_array", "AdaptivePolicy",
     "BandwidthBalancedPolicy", "MemoryAwarePolicy", "StaticPolicy",
-    "get_policy", "ResizeEvent", "ResourceManager", "EWMA", "FaultInjector",
+    "get_policy", "ResizeEvent", "ResourceManager",
+    "IntervalController", "TelemetryService", "daly_interval",
+    "young_interval", "EWMA", "FaultInjector",
     "SimClock", "SimNIC", "HostSnapshot", "restore_pytree", "snapshot_pytree",
     "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
     "StorageTier", "TierPipeline", "crc32", "encode_payload",

@@ -19,7 +19,7 @@ from concurrent.futures import Future
 from typing import Callable, List, Optional
 
 from .simnet import EWMA, FaultInjector, SimNIC
-from .tiers import PFSTier, TierPipeline, crc32
+from .tiers import PFSTier, TierPipeline
 from .types import AgentId, NodeId, ShardKey, TransferRecord
 
 

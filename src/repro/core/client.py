@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -88,6 +87,11 @@ class CommitHandle:
             self.sim_duration = max(per_node_sim.values(), default=0.0)
             ctl.finalize_checkpoint(self.meta, drain=self._drain)
             self.client._last_commit_sim_s = self.sim_duration
+            ctl.bus.publish(E.COMMIT_DONE, app=self.meta.app_id,
+                            ckpt=self.meta.ckpt_id, step=self.meta.step,
+                            bytes=sum(len(p) for k, p, _ in self._puts
+                                      if k.replica == 0),
+                            sim_s=self.sim_duration, retries=self.retries)
         except BaseException as e:  # noqa: BLE001
             self._error = e
         finally:
@@ -148,6 +152,11 @@ class ICheckClient:
                                        E.CODEC_DEGRADED, app=app_id,
                                        requested=req, actual=actual))
         self.ckpt_interval_s = ckpt_interval_s
+        # adaptive loop: the IntervalController re-solves our cadence from
+        # observed commit cost + failure rate; track its announcements so
+        # application-side pacing (`ckpt_interval_s`) follows the solution
+        self._unsub_interval = controller.bus.subscribe(
+            self._on_interval_changed, events=(E.INTERVAL_CHANGED,))
         self.agents: List[Agent] = []
         self.regions: Dict[str, RegionMeta] = {}
         self._rr = 0
@@ -168,10 +177,15 @@ class ICheckClient:
         self._initialized = True
         return self
 
+    def _on_interval_changed(self, ev: E.Event) -> None:
+        if ev.payload.get("app") == self.app_id:
+            self.ckpt_interval_s = float(ev.payload["interval_s"])
+
     def finalize(self) -> None:
         """icheck_finalize()."""
         self._commit_q.put(None)
         self._completer.join(timeout=10)
+        self._unsub_interval()
         self.controller.notify_finished(self.app_id)
 
     # ----------------------------------------------------------- add_adapt

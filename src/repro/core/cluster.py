@@ -1,6 +1,13 @@
 """Convenience assembly of a full iCheck deployment for tests / examples /
 benchmarks: RM + controller (service core) + N iCheck nodes + PFS, all on
-one simulated fabric clock."""
+one simulated fabric clock.
+
+``adaptive_interval`` (default True — adaptivity is the system's headline
+behavior): the IntervalController treats each app's registered
+``ckpt_interval_s`` as a starting hint and re-solves it (Young/Daly) from
+observed commit cost and failure rate, announcing changes as
+``interval_changed`` events.  Pass ``adaptive_interval=False`` for
+experiments that need the registered interval to stay fixed."""
 from __future__ import annotations
 
 import tempfile
@@ -18,7 +25,8 @@ class ICheckCluster:
                  pfs_bandwidth: float = 40e9, pfs_root: Optional[str] = None,
                  policy: str = "adaptive", time_scale: float = 0.0,
                  keep_l1: int = 2, max_concurrent_drains: int = 2,
-                 spill_bytes: int = 0):
+                 spill_bytes: int = 0, adaptive_interval: bool = True,
+                 default_mtbf_s: float = 3600.0):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -37,7 +45,13 @@ class ICheckCluster:
             self.rm, self.pfs, policy=policy, initial_nodes=n_icheck_nodes,
             clock=self.clock, fault=self.fault, keep_l1=keep_l1,
             max_concurrent_drains=max_concurrent_drains,
-            spill_bytes=spill_bytes)
+            spill_bytes=spill_bytes, adaptive_interval=adaptive_interval,
+            default_mtbf_s=default_mtbf_s)
+
+    @property
+    def telemetry(self):
+        """The controller's TelemetryService (structured + Prometheus)."""
+        return self.controller.telemetry
 
     @property
     def bus(self):

@@ -37,7 +37,8 @@ from .manager import Manager
 from .policies import NodeView, SchedulingPolicy
 from .rm import ResourceManager
 from .services import (CheckpointCatalog, DrainOrchestrator, HealthMonitor,
-                       PlacementService, ResizePlanner)
+                       IntervalController, PlacementService, ResizePlanner,
+                       TelemetryService)
 from .simnet import FaultInjector, SimClock
 from .tiers import PFSTier
 from .types import (AppId, AppRecord, AppStatus, CheckpointMeta, CkptId,
@@ -51,7 +52,8 @@ class Controller:
                  fault: Optional[FaultInjector] = None,
                  keep_l1: int = 2, max_concurrent_drains: int = 2,
                  heartbeat_interval_s: float = 0.05,
-                 spill_bytes: int = 0):
+                 spill_bytes: int = 0, adaptive_interval: bool = True,
+                 default_mtbf_s: float = 3600.0):
         self.rm = rm
         self.pfs = pfs
         self.clock = clock or SimClock()
@@ -75,6 +77,12 @@ class Controller:
                                         keep_l1=keep_l1)
         self.health = HealthMonitor(self, heartbeat_interval_s)
         self.resize = ResizePlanner(self)
+        # adaptive loop: telemetry must subscribe before the interval
+        # controller so a COMMIT_DONE updates the estimates first and the
+        # solver then reads the fresh values (bus fans out in order)
+        self.telemetry = TelemetryService(self, default_mtbf_s=default_mtbf_s)
+        self.intervals = IntervalController(self, self.telemetry) \
+            if adaptive_interval else None
 
         # wire the RM plugin callbacks (§III-A)
         rm.on_retake = self.health.on_rm_retake
@@ -244,5 +252,8 @@ class Controller:
     def close(self) -> None:
         self.drains.close()
         self.health.close()
+        if self.intervals is not None:
+            self.intervals.close()
+        self.telemetry.close()
         for mgr in self.managers():
             mgr.close()

@@ -40,11 +40,23 @@ CKPT_IN_L1 = "ckpt_in_l1"
 CKPT_IN_L2 = "ckpt_in_l2"
 CKPT_FAILED = "ckpt_failed"
 DRAIN_FAILED = "drain_failed"
+# commit fully acked in L1, with the client-observed cost attached
+# (bytes moved, busiest-NIC sim seconds, straggler retries) — the
+# TelemetryService's commit-latency/-cost signal
+COMMIT_DONE = "commit_done"
 
 RESIZE_FOREWARNED = "resize_forewarned"
 CODEC_DEGRADED = "codec_degraded"
 SHARD_SPILLED = "shard_spilled"
 SHARD_PROMOTED = "shard_promoted"
+
+# an application rank died (injected by tests/benchmarks or reported by the
+# RM plugin): the application loses all work since its last checkpoint.
+# Feeds the TelemetryService's failure inter-arrival (MTBF) estimate.
+APP_RANK_FAILED = "app_rank_failed"
+# the IntervalController re-solved an application's checkpoint cadence
+# (Young/Daly over telemetry estimates); clients/trainers re-pace on this
+INTERVAL_CHANGED = "interval_changed"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,6 +18,7 @@ import tempfile
 import threading
 from typing import Dict, List, Optional
 
+from . import events as E
 from .agent import Agent
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
 from .tiers import LocalDiskTier, MemoryTier, TierPipeline
@@ -41,10 +42,20 @@ class Manager:
         self.nic = SimNIC(f"nic-{spec.node_id}", spec.nic_bandwidth,
                           spec.nic_latency, clock=self.clock)
         self._agents: Dict[AgentId, Agent] = {}
+        self._agent_apps: Dict[AgentId, AppId] = {}
         self._lock = threading.Lock()
         self._agent_seq = itertools.count()
         self.mem_ewma = EWMA(alpha=0.3)
         self.bw_ewma = EWMA(alpha=0.3)
+        # adaptive loop: per-app checkpoint duty cycle (commit cost over the
+        # solved interval) announced by the IntervalController; the manager
+        # folds the duty of the apps *it serves* into its bandwidth
+        # prediction so placement steers new agents away from NICs that the
+        # retuned cadence is about to keep busy
+        self._app_duty: Dict[AppId, float] = {}
+        self._unsub_interval = bus.subscribe(
+            self._on_interval_changed, events=(E.INTERVAL_CHANGED,)) \
+            if bus is not None else None
 
     # ----------------------------------------------------------------- agents
     def launch_agent(self, app_id: AppId) -> Agent:
@@ -55,11 +66,13 @@ class Manager:
             agent_id = f"{self.node_id}/a{next(self._agent_seq)}"
             agent = Agent(agent_id, self.node_id, self.store, self.nic, self.fault)
             self._agents[agent_id] = agent
+            self._agent_apps[agent_id] = app_id
         return agent
 
     def stop_agent(self, agent_id: AgentId) -> None:
         with self._lock:
             agent = self._agents.pop(agent_id, None)
+            self._agent_apps.pop(agent_id, None)
         if agent is not None:
             agent.stop()
 
@@ -91,7 +104,22 @@ class Manager:
             "nic_active": self.nic.active_streams,
             "nic_busy_sim_s": busy,
             "n_agents": len(self._agents),
+            "ckpt_duty_pred": self.ckpt_duty_pred(),
         }
+
+    # ------------------------------------------------------- adaptive hints
+    def _on_interval_changed(self, ev) -> None:
+        p = ev.payload
+        interval = max(float(p.get("interval_s", 0.0)), 1e-9)
+        with self._lock:
+            self._app_duty[p["app"]] = \
+                float(p.get("commit_cost_s", 0.0)) / interval
+
+    def ckpt_duty_pred(self) -> float:
+        """Predicted NIC duty from the solved cadences of apps served here."""
+        with self._lock:
+            served = set(self._agent_apps.values())
+            return sum(self._app_duty.get(a, 0.0) for a in served)
 
     # predicted headroom used by policies
     def predicted_free_memory(self) -> float:
@@ -99,9 +127,11 @@ class Manager:
                                             self.mem_ewma.predict())
 
     def predicted_bw_load(self) -> float:
-        return self.bw_ewma.predict()
+        return self.bw_ewma.predict() + self.ckpt_duty_pred()
 
     def close(self) -> None:
+        if self._unsub_interval is not None:
+            self._unsub_interval()
         for a in self.agents():
             a.stop()
         self.store.close()

@@ -10,12 +10,20 @@ the :mod:`repro.core.events` bus:
   * :mod:`health`    — heartbeats, shard re-replication, straggler advice,
                        RM node retake/migration handling
   * :mod:`resize`    — resize forewarning → pre-staged redistribution plans
+  * :mod:`telemetry` — bus-fed per-app EWMA estimates (commit cost, drain
+                       throughput, failure inter-arrival) + Prometheus export
+  * :mod:`interval`  — Young/Daly checkpoint-interval re-solver publishing
+                       ``INTERVAL_CHANGED`` events (the adaptive loop)
 """
 from .catalog import CheckpointCatalog
 from .drain import DrainOrchestrator
 from .health import HealthMonitor
+from .interval import IntervalController, daly_interval, young_interval
 from .placement import PlacementService
 from .resize import ResizePlanner
+from .telemetry import AppTelemetry, TelemetryService
 
 __all__ = ["CheckpointCatalog", "DrainOrchestrator", "HealthMonitor",
-           "PlacementService", "ResizePlanner"]
+           "IntervalController", "PlacementService", "ResizePlanner",
+           "TelemetryService", "AppTelemetry", "daly_interval",
+           "young_interval"]

@@ -99,8 +99,11 @@ class DrainOrchestrator:
 
     def _drain_one(self, meta: CheckpointMeta, attempt: int) -> None:
         ctl = self.ctl
+        t0 = ctl.clock.now()
         with ctl._lock:
             meta.status = CkptStatus.DRAINING
+            drained_bytes = sum(s.nbytes for k, s in meta.shards.items()
+                                if k.replica == 0)
         # each agent drains the shards it holds → parallel PFS writers
         futures = []
         for mgr in ctl.managers():
@@ -124,7 +127,9 @@ class DrainOrchestrator:
                 meta.status = CkptStatus.IN_L2
             with self._lock:
                 self._completed += 1
-            ctl.bus.publish(E.CKPT_IN_L2, app=meta.app_id, ckpt=meta.ckpt_id)
+            ctl.bus.publish(E.CKPT_IN_L2, app=meta.app_id, ckpt=meta.ckpt_id,
+                            bytes=drained_bytes,
+                            sim_s=max(ctl.clock.now() - t0, 0.0))
             self.gc_l1(meta.app_id)
         elif attempt + 1 < self.max_attempts:
             # transient failure (e.g. an agent died mid-drain): give the

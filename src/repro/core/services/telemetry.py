@@ -1,0 +1,268 @@
+"""Event-bus telemetry: the observation half of the adaptive loop.
+
+The paper's controller "monitors the applications and the system state to
+adapt the checkpoint strategy at runtime" (§II).  This service is that
+observer: it subscribes to the commit / drain / failure / resize events every
+subsystem already publishes and maintains per-application estimates —
+
+  * EWMA commit latency and commit size (the Young/Daly commit cost ``C``),
+  * EWMA L1→L2 drain throughput,
+  * failure inter-arrival times (the MTBF estimate), seeded by a
+    configurable prior until real failures are observed,
+
+plus cluster-wide failure counters and on-demand tier occupancy sampled from
+the node managers.  Everything is exported two ways: :meth:`snapshot` (a
+structured dict for benchmarks / the IntervalController) and
+:meth:`prometheus` (Prometheus text exposition format for scraping).
+
+Resize-class events (forewarnings, agent scale-up/down, node add/retake/
+migrate) mark the affected apps' commit-cost estimates *stale*: the node set
+changed, so the next observed commit replaces the estimate instead of being
+blended into it.  That is what lets the IntervalController re-solve quickly
+after a reconfiguration.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from .. import events as E
+from ..simnet import EWMA
+from ..types import AppId
+
+# events that mean "the node set / agent set serving an app changed, so the
+# commit cost C it observes is about to change too"
+RESIZE_EVENTS = (E.RESIZE_FOREWARNED, E.AGENTS_SCALED_UP,
+                 E.AGENTS_SCALED_DOWN, E.NODE_ADDED, E.NODE_RETAKEN,
+                 E.NODE_MIGRATED, E.CAPACITY_GROW)
+# cluster-level failures count against every connected app's MTBF
+CLUSTER_FAILURE_EVENTS = (E.NODE_FAILED, E.AGENT_FAILED)
+
+
+class AppTelemetry:
+    """Per-application aggregates, all updated from bus events."""
+
+    def __init__(self, alpha: float):
+        self.commit_latency_s = EWMA(alpha=alpha)
+        self.commit_bytes = EWMA(alpha=alpha)
+        self.drain_rate_Bps = EWMA(alpha=alpha)
+        self.failure_gap_s = EWMA(alpha=alpha)
+        self.commit_latency_sum_s = 0.0      # for the unbiased mean
+        self.commits = 0
+        self.drains = 0
+        self.drain_failures = 0
+        self.ckpt_failures = 0
+        self.failures = 0
+        self.retries = 0
+        self.last_commit_t: Optional[float] = None
+        self.last_failure_t: Optional[float] = None
+        self.commit_cost_stale = False
+
+    def as_dict(self) -> dict:
+        return {
+            "commits": self.commits,
+            "commit_latency_s": self.commit_latency_s.predict(),
+            "mean_commit_latency_s": self.commit_latency_sum_s
+            / self.commits if self.commits else 0.0,
+            "commit_bytes": self.commit_bytes.predict(),
+            "drains": self.drains,
+            "drain_rate_Bps": self.drain_rate_Bps.predict(),
+            "drain_failures": self.drain_failures,
+            "ckpt_failures": self.ckpt_failures,
+            "failures": self.failures,
+            "retries": self.retries,
+            "failure_gap_s": self.failure_gap_s.predict(),
+            "commit_cost_stale": self.commit_cost_stale,
+        }
+
+
+class TelemetryService:
+    """Bus subscriber aggregating the signals the adaptive loop runs on."""
+
+    def __init__(self, ctl, alpha: float = 0.3,
+                 default_mtbf_s: float = 3600.0):
+        self.ctl = ctl
+        self.alpha = float(alpha)
+        self.default_mtbf_s = float(default_mtbf_s)
+        self._lock = threading.Lock()
+        self._apps: Dict[AppId, AppTelemetry] = {}
+        self._cluster_failures = 0
+        self._events_seen = 0
+        self._unsubscribe = ctl.bus.subscribe(
+            self._on_event,
+            events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
+                    E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED)
+            + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS)
+
+    def close(self) -> None:
+        self._unsubscribe()
+
+    # ----------------------------------------------------------- ingestion
+    def _app(self, app_id: AppId) -> AppTelemetry:
+        # callers hold self._lock
+        tel = self._apps.get(app_id)
+        if tel is None:
+            tel = self._apps[app_id] = AppTelemetry(self.alpha)
+        return tel
+
+    def _on_event(self, ev: E.Event) -> None:
+        with self._lock:
+            self._events_seen += 1
+            name, p = ev.name, ev.payload
+            if name == E.APP_REGISTERED:
+                self._app(p["app"])
+            elif name == E.COMMIT_DONE:
+                tel = self._app(p["app"])
+                if tel.commit_cost_stale:
+                    # first commit on the new node set: replace, don't blend
+                    tel.commit_latency_s = EWMA(self.alpha)
+                    tel.commit_bytes = EWMA(self.alpha)
+                    tel.commit_cost_stale = False
+                tel.commits += 1
+                tel.retries += int(p.get("retries", 0))
+                tel.commit_latency_sum_s += float(p.get("sim_s", 0.0))
+                tel.commit_latency_s.update(float(p.get("sim_s", 0.0)))
+                tel.commit_bytes.update(float(p.get("bytes", 0)))
+                tel.last_commit_t = ev.sim_t
+            elif name == E.CKPT_IN_L2:
+                tel = self._app(p["app"])
+                tel.drains += 1
+                nbytes, sim_s = p.get("bytes"), p.get("sim_s")
+                if nbytes and sim_s:
+                    tel.drain_rate_Bps.update(float(nbytes) / max(
+                        float(sim_s), 1e-12))
+            elif name == E.DRAIN_FAILED:
+                self._app(p["app"]).drain_failures += 1
+            elif name == E.CKPT_FAILED:
+                self._app(p["app"]).ckpt_failures += 1
+            elif name == E.APP_RANK_FAILED:
+                self._record_failure(self._app(p["app"]), ev.sim_t)
+            elif name in CLUSTER_FAILURE_EVENTS:
+                self._cluster_failures += 1
+                for tel in self._apps.values():
+                    self._record_failure(tel, ev.sim_t)
+            elif name in RESIZE_EVENTS:
+                app_id = p.get("app")
+                targets = [self._app(app_id)] if app_id \
+                    else list(self._apps.values())
+                for tel in targets:
+                    tel.commit_cost_stale = True
+
+    def _record_failure(self, tel: AppTelemetry, t: float) -> None:
+        tel.failures += 1
+        if tel.last_failure_t is not None and t > tel.last_failure_t:
+            tel.failure_gap_s.update(t - tel.last_failure_t)
+        tel.last_failure_t = t
+
+    # ------------------------------------------------------------ estimates
+    def commit_cost_s(self, app_id: AppId) -> Optional[float]:
+        """EWMA commit cost C (sim seconds), or None before any commit."""
+        with self._lock:
+            tel = self._apps.get(app_id)
+            if tel is None or tel.commits == 0:
+                return None
+            return tel.commit_latency_s.predict()
+
+    def commit_cost_stale(self, app_id: AppId) -> bool:
+        with self._lock:
+            tel = self._apps.get(app_id)
+            return bool(tel and tel.commit_cost_stale)
+
+    def mtbf_s(self, app_id: AppId) -> float:
+        """Failure inter-arrival estimate (sim s); prior until ≥2 failures."""
+        with self._lock:
+            tel = self._apps.get(app_id)
+            if tel is None or tel.failures < 2:
+                return self.default_mtbf_s
+            return max(tel.failure_gap_s.predict(), 1e-9)
+
+    def drain_rate_Bps(self, app_id: AppId) -> Optional[float]:
+        with self._lock:
+            tel = self._apps.get(app_id)
+            if tel is None or tel.drains == 0:
+                return None
+            return tel.drain_rate_Bps.predict()
+
+    def app_ids(self) -> List[AppId]:
+        with self._lock:
+            return list(self._apps)
+
+    # -------------------------------------------------------------- export
+    def tier_occupancy(self) -> List[dict]:
+        """Per-node, per-tier occupancy sampled live from the managers."""
+        rows = []
+        for mgr in self.ctl.managers():
+            for tier in mgr.store.tiers:
+                cap = tier.capacity
+                used = tier.used_bytes
+                rows.append({
+                    "node": mgr.node_id,
+                    "tier": tier.name,
+                    "used_bytes": used,
+                    "capacity_bytes": cap,
+                    "occupancy": used / cap if cap else 0.0,
+                })
+        return rows
+
+    def snapshot(self) -> dict:
+        """Structured telemetry: per-app estimates + cluster + occupancy."""
+        with self._lock:
+            per_app = {a: t.as_dict() for a, t in self._apps.items()}
+            cluster_failures = self._cluster_failures
+            events_seen = self._events_seen
+        for app_id, row in per_app.items():
+            row["mtbf_s"] = self.mtbf_s(app_id)
+        return {
+            "per_app": per_app,
+            "cluster": {
+                "failures_total": cluster_failures,
+                "events_seen": events_seen,
+                "default_mtbf_s": self.default_mtbf_s,
+            },
+            "tiers": self.tier_occupancy(),
+        }
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        snap = self.snapshot()
+        out: List[str] = []
+
+        def metric(name: str, mtype: str, help_: str, rows) -> None:
+            out.append(f"# HELP {name} {help_}")
+            out.append(f"# TYPE {name} {mtype}")
+            for labels, value in rows:
+                lbl = ",".join(f'{k}="{v}"' for k, v in labels.items())
+                lbl = "{" + lbl + "}" if lbl else ""
+                out.append(f"{name}{lbl} {value:.9g}")
+
+        apps = snap["per_app"]
+        metric("icheck_commits_total", "counter",
+               "Completed checkpoint commits per application",
+               [({"app": a}, t["commits"]) for a, t in apps.items()])
+        metric("icheck_commit_latency_seconds", "gauge",
+               "EWMA commit latency (sim seconds)",
+               [({"app": a}, t["commit_latency_s"]) for a, t in apps.items()])
+        metric("icheck_commit_bytes", "gauge",
+               "EWMA checkpoint size per commit",
+               [({"app": a}, t["commit_bytes"]) for a, t in apps.items()])
+        metric("icheck_drain_throughput_bytes_per_second", "gauge",
+               "EWMA L1->L2 drain throughput",
+               [({"app": a}, t["drain_rate_Bps"]) for a, t in apps.items()])
+        metric("icheck_failures_total", "counter",
+               "Failures charged to each application",
+               [({"app": a}, t["failures"]) for a, t in apps.items()])
+        metric("icheck_mtbf_seconds", "gauge",
+               "Failure inter-arrival estimate (sim seconds)",
+               [({"app": a}, t["mtbf_s"]) for a, t in apps.items()])
+        metric("icheck_cluster_failures_total", "counter",
+               "Cluster-level node/agent failures",
+               [({}, snap["cluster"]["failures_total"])])
+        metric("icheck_tier_used_bytes", "gauge",
+               "Bytes resident per node storage tier",
+               [({"node": r["node"], "tier": r["tier"]}, r["used_bytes"])
+                for r in snap["tiers"]])
+        metric("icheck_tier_occupancy_ratio", "gauge",
+               "Fill fraction per node storage tier",
+               [({"node": r["node"], "tier": r["tier"]}, r["occupancy"])
+                for r in snap["tiers"]])
+        return "\n".join(out) + "\n"

@@ -33,8 +33,6 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    import dataclasses
-
     import jax
 
     from repro.configs import get_config

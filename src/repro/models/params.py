@@ -1,7 +1,6 @@
 """Parameter accounting + sharding-spec resolution for whole param trees."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -203,14 +203,19 @@ def _write_prefill_cache(cache: attn.KVCache, kvc: attn.KVCache, window):
         # ring buffer: keep the last `s_max` positions, rotated so absolute
         # position p lives in slot p % s_max (matching decode's ring writes)
         shift = (t - s_max) % s_max
-        roll = lambda x: jnp.roll(x[:, :, t - s_max:, :], shift, axis=2)
+
+        def roll(x):
+            return jnp.roll(x[:, :, t - s_max:, :], shift, axis=2)
+
         return attn.KVCache(
             k=roll(k_in).astype(cache.k.dtype),
             v=roll(v_in).astype(cache.v.dtype),
             ks=None if ks is None else roll(ks),
             vs=None if vs is None else roll(vs))
-    dus = lambda buf, val: jax.lax.dynamic_update_slice(
-        buf, val.astype(buf.dtype), (0, 0, 0, 0))
+    def dus(buf, val):
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, 0, 0, 0))
+
     return attn.KVCache(
         k=dus(cache.k, k_in), v=dus(cache.v, v_in),
         ks=None if ks is None else dus(cache.ks, ks),
@@ -479,8 +484,6 @@ def _kind_cache_axes(kind: str, quant: bool = False):
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=None) -> Dict[str, Any]:
     """Decode cache pytree for a batch of ``batch`` sequences."""
-    import numpy as np  # dtype resolution only
-
     dtype = dtype or jnp.dtype(cfg.dtype)
     plan = stack_plan(cfg)
     single = {f"b{i}": _kind_cache_init(cfg, kind, batch, max_len, dtype)

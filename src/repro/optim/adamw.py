@@ -8,7 +8,7 @@ always sharded over ("pod", "data") on the param's embed axis (ZeRO-1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ def warmup_cosine(base_lr: float, warmup: int, total: int,
 
 
 def adamw_init(params, compress: bool = False) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         mu=jax.tree.map(zeros, params),
         nu=jax.tree.map(zeros, params),
@@ -54,8 +55,8 @@ def adamw_init(params, compress: bool = False) -> AdamWState:
 
 def _global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def _compress_decompress(g, err):

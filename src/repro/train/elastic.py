@@ -62,7 +62,8 @@ class ElasticTrainer:
                  global_batch: Optional[int] = None,
                  make_mesh: Callable[[int], Mesh] = default_make_mesh,
                  codec: str = "raw", replication: int = 1,
-                 total_steps: int = 1000):
+                 total_steps: int = 1000, adaptive_interval: bool = False,
+                 step_sim_s: float = 0.0):
         self.cfg = cfg
         self.shape = shape
         self.app = MalleableApp(app_id, cluster.rm, ranks)
@@ -82,15 +83,33 @@ class ElasticTrainer:
         self.metrics_log: list = []
         self.resizes = 0
         self._pending_commits: list = []
+        # adaptive checkpoint pacing: when enabled, commits follow the
+        # IntervalController's solved cadence (sim-time based, re-announced
+        # via INTERVAL_CHANGED events) instead of the static commit_every
+        # step count; step_sim_s is the simulated compute cost per training
+        # step, which is what advances the cadence clock in tests/benchmarks
+        self.adaptive_interval = adaptive_interval
+        self.step_sim_s = float(step_sim_s)
+        self._clock = cluster.controller.clock
+        if adaptive_interval and self.step_sim_s <= 0 \
+                and self._clock.time_scale == 0:
+            # nothing would ever advance the cadence clock between commits:
+            # the trainer would silently never checkpoint
+            raise ValueError(
+                "adaptive_interval=True needs step_sim_s > 0 (or a cluster "
+                "with time_scale > 0) so sim time advances between steps")
+        self._last_commit_t = self._clock.now()
+        self.interval_changes = 0
         # checkpoint-service telemetry: observe the controller's event bus
         # instead of polling its audit list (drain completions, forewarnings,
         # codec degradations all land here asynchronously)
         self.ckpt_events: list = []
         self._unsubscribe = cluster.controller.bus.subscribe(
-            lambda ev: self.ckpt_events.append(ev.as_record()),
+            self._on_ckpt_event,
             events=(icheck_events.CKPT_IN_L1, icheck_events.CKPT_IN_L2,
                     icheck_events.DRAIN_FAILED, icheck_events.CODEC_DEGRADED,
-                    icheck_events.RESIZE_FOREWARNED))
+                    icheck_events.RESIZE_FOREWARNED,
+                    icheck_events.INTERVAL_CHANGED))
 
         key = jax.random.key(seed)
         self.state = make_train_state(cfg, key, self.opt_cfg)
@@ -98,12 +117,26 @@ class ElasticTrainer:
         self._jit_step()
 
         # icheck_init + add_adapt + (maybe) restart -- paper lines 5..9
-        est = sum(np.prod(l.shape) * l.dtype.itemsize
-                  for l in jax.tree.leaves(self.state))
+        est = sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                  for leaf in jax.tree.leaves(self.state))
         self.client.init(ckpt_bytes_estimate=int(est))
         self._register_regions()
         restored = self.restart_if_available()
         self.restarted = restored
+
+    def _on_ckpt_event(self, ev) -> None:
+        self.ckpt_events.append(ev.as_record())
+        if ev.name == icheck_events.INTERVAL_CHANGED \
+                and ev.payload.get("app") == self.client.app_id:
+            # the client already re-paced its own ckpt_interval_s; count the
+            # announcement so runs can report how often the loop retuned us
+            self.interval_changes += 1
+
+    def _commit_due(self, step: int) -> bool:
+        if self.adaptive_interval:
+            return (self._clock.now() - self._last_commit_t
+                    >= self.client.ckpt_interval_s)
+        return self.commit_every > 0 and step % self.commit_every == 0
 
     # ----------------------------------------------------------------- setup
     def _batch_sharding(self):
@@ -140,6 +173,7 @@ class ElasticTrainer:
         parts[DATA_REGION] = {0: self.data.state_array()}
         h = self.client.commit(int(self.state.step), parts, blocking=blocking)
         self._pending_commits.append(h)
+        self._last_commit_t = self._clock.now()
         return h
 
     def restart_if_available(self) -> bool:
@@ -208,13 +242,17 @@ class ElasticTrainer:
             step = int(self.state.step)
             self.metrics_log.append(
                 {"step": step, "loss": float(metrics["loss"])})
-            if step % self.commit_every == 0:
+            if self.step_sim_s > 0:
+                self._clock.sleep(self.step_sim_s)
+            if self._commit_due(step):
                 self.commit()
             if self.probe_every and step % self.probe_every == 0:
                 self.client.probe_agents()
         return {"steps": steps, "wall_s": time.monotonic() - t0,
                 "final_loss": self.metrics_log[-1]["loss"],
-                "resizes": self.resizes}
+                "resizes": self.resizes,
+                "interval_changes": self.interval_changes,
+                "ckpt_interval_s": self.client.ckpt_interval_s}
 
     def finalize(self):
         for h in self._pending_commits:

@@ -3,8 +3,6 @@ agent-side redistribution; training continues with identical state."""
 import numpy as np
 import pytest
 
-import jax
-
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core import ICheckCluster

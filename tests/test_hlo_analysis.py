@@ -1,10 +1,8 @@
 """HLO analyzer: while-loop trip scaling, dot FLOP counting, collective
 parsing -- validated against modules with known costs."""
-import re
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 import jax

@@ -80,7 +80,7 @@ def test_drain_to_l2_and_restart_from_pfs(cluster, tmp_path):
     assert cluster.pfs.checkpoint_complete(h.meta)
 
     # cold restart: new controller process over the same PFS
-    from repro.core import Controller, ResourceManager
+    from repro.core import ResourceManager
     rm2 = ResourceManager()
     rm2.make_node()
     ctl2 = None

@@ -1,5 +1,4 @@
 """ckpt_codec kernel: shape/dtype sweeps vs the jnp oracle + properties."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -51,6 +51,8 @@ def test_int8_kv_matches_exact(arch):
 def test_int8_cache_is_smaller():
     cfg = get_config("deepseek-7b", tiny=True)
     cfgq = dataclasses.replace(cfg, kv_quant=True)
-    nbytes = lambda c: sum(np.asarray(x).nbytes for x in
-                           jax.tree.leaves(init_cache(c, 4, 256)))
+    def nbytes(c):
+        return sum(np.asarray(x).nbytes for x in
+                   jax.tree.leaves(init_cache(c, 4, 256)))
+
     assert nbytes(cfgq) < 0.45 * nbytes(cfg)

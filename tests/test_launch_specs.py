@@ -7,9 +7,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
 from repro.configs import get_config, get_shape
-from repro.launch.specs import (cell_rules, cell_shardings,
-                                default_microbatches, input_specs)
-from repro.optim import AdamWConfig
+from repro.launch.specs import cell_shardings, input_specs
 
 
 def mesh1():

@@ -6,7 +6,6 @@ dependence).  Sliding-window/ring caches must stay finite and sane at
 arbitrary positions.
 """
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -3,13 +3,12 @@ shape + NaN assertions, decode consistency, and a short learning run."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import (decode_step, forward, init_cache, init_params,
-                          loss_fn, prefill)
+                          prefill)
 from repro.optim import AdamWConfig
 from repro.train import make_train_state, make_train_step
 

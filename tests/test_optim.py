@@ -1,5 +1,4 @@
 """AdamW + schedules + int8 gradient compression with error feedback."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

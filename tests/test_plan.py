@@ -5,7 +5,6 @@ with hypothesis that for arbitrary sizes and part counts, executing a plan
 produces exactly the arrays a fresh split of the global array would.
 """
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

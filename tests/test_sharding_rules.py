@@ -1,11 +1,9 @@
 """Logical-axis rules: resolution, fallbacks, divisibility, mesh subsets."""
 import numpy as np
-import pytest
-
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.sharding import FSDP_RULES, TP_RULES, get_rules, spec
+from repro.sharding import FSDP_RULES, TP_RULES, spec
 
 
 def mesh2d():

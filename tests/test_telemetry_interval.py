@@ -1,0 +1,229 @@
+"""Adaptive-loop unit tests: TelemetryService EWMA estimates under scripted
+event sequences, Young/Daly formula properties, resize-forced re-solves, and
+the Prometheus text exposition format."""
+import math
+import re
+import threading
+
+import numpy as np
+
+from repro.core import events as E
+from repro.core.events import EventBus
+from repro.core.services.interval import (IntervalController, daly_interval,
+                                          young_interval)
+from repro.core.services.telemetry import TelemetryService
+from repro.core.simnet import SimClock
+from repro.core.types import AppRecord
+
+
+class FakeCtl:
+    """Just enough controller surface for the telemetry/interval services."""
+
+    def __init__(self):
+        self.clock = SimClock()
+        self.bus = EventBus(self.clock)
+        self._lock = threading.RLock()
+        self._apps = {}
+
+    def add_app(self, app_id, interval_s=60.0):
+        self._apps[app_id] = AppRecord(app_id=app_id, ranks=1,
+                                       ckpt_interval_s=interval_s)
+
+    def managers(self):
+        return []
+
+
+def _loop(alpha=0.3, mtbf=1000.0, hysteresis=0.1):
+    ctl = FakeCtl()
+    ctl.add_app("app")
+    tel = TelemetryService(ctl, alpha=alpha, default_mtbf_s=mtbf)
+    ic = IntervalController(ctl, tel, hysteresis=hysteresis)
+    return ctl, tel, ic
+
+
+# ---------------------------------------------------------------- telemetry
+def test_ewma_commit_latency_converges():
+    ctl, tel, _ = _loop(alpha=0.3)
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=0, bytes=100, sim_s=10.0)
+    assert tel.commit_cost_s("app") == 10.0      # first sample seeds the EWMA
+    errs = []
+    for i in range(30):
+        ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=i + 1, bytes=100,
+                        sim_s=2.0)
+        errs.append(abs(tel.commit_cost_s("app") - 2.0))
+    assert errs == sorted(errs, reverse=True)    # monotone approach
+    assert errs[-1] < 1e-3                       # converged onto the signal
+
+
+def test_mtbf_prior_until_two_failures_then_interarrival():
+    ctl, tel, _ = _loop(mtbf=777.0)
+    ctl.add_app("b")
+    ctl.bus.publish(E.APP_REGISTERED, app="b", agents=[])
+    assert tel.mtbf_s("b") == 777.0              # no failures: prior
+    ctl.clock.sleep(5.0)
+    ctl.bus.publish(E.APP_RANK_FAILED, app="b", rank=0)
+    assert tel.mtbf_s("b") == 777.0              # one failure: still prior
+    ctl.clock.sleep(20.0)
+    ctl.bus.publish(E.APP_RANK_FAILED, app="b", rank=0)
+    assert tel.mtbf_s("b") == 20.0               # first inter-arrival sample
+    # cluster-level failures count against every app's MTBF too
+    ctl.clock.sleep(10.0)
+    ctl.bus.publish(E.NODE_FAILED, node="icn0")
+    assert tel.mtbf_s("b") < 20.0
+
+
+def test_drain_throughput_estimate():
+    ctl, tel, _ = _loop()
+    ctl.bus.publish(E.CKPT_IN_L2, app="app", ckpt=0, bytes=1000, sim_s=2.0)
+    assert tel.drain_rate_Bps("app") == 500.0
+    snap = tel.snapshot()
+    assert snap["per_app"]["app"]["drains"] == 1
+
+
+# -------------------------------------------------------------- Young/Daly
+def test_interval_shrinks_with_mtbf():
+    c = 1.0
+    prev = float("inf")
+    for mtbf in (10_000.0, 1000.0, 100.0, 10.0):
+        t = daly_interval(c, mtbf)
+        assert t < prev
+        prev = t
+    # Young likewise
+    assert young_interval(c, 100.0) < young_interval(c, 10_000.0)
+
+
+def test_interval_grows_with_sqrt_of_commit_cost():
+    mtbf = 1e6                                   # C << M regime
+    for c in (0.01, 0.1, 1.0, 10.0):
+        ratio = daly_interval(4.0 * c, mtbf) / daly_interval(c, mtbf)
+        # sqrt scaling: quadrupling C should double T (Daly's correction
+        # terms perturb it only slightly in this regime)
+        assert 1.9 < ratio < 2.1
+    assert math.isclose(young_interval(4.0, 1e6) / young_interval(1.0, 1e6),
+                        2.0)
+
+
+def test_daly_degenerate_regime_caps_at_mtbf():
+    # failing faster than we can checkpoint: interval pegs to the MTBF
+    assert daly_interval(50.0, 10.0) == 10.0
+    assert daly_interval(20.0, 10.0) == 10.0
+
+
+def test_daly_matches_young_asymptotically():
+    # C/M -> 0: the correction terms vanish
+    c, m = 1e-6, 1e6
+    assert abs(daly_interval(c, m) / young_interval(c, m) - 1.0) < 1e-3
+
+
+# ----------------------------------------------------- interval controller
+def test_commit_drives_interval_changed_and_applies():
+    ctl, tel, ic = _loop(mtbf=200.0)
+    seen = []
+    ctl.bus.subscribe(lambda ev: seen.append(ev.payload),
+                      events=(E.INTERVAL_CHANGED,))
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=0, bytes=1, sim_s=2.0)
+    assert len(seen) == 1
+    expect = daly_interval(2.0, 200.0)
+    assert math.isclose(seen[0]["interval_s"], expect)
+    assert math.isclose(ctl._apps["app"].ckpt_interval_s, expect)
+    assert math.isclose(ic.interval_for("app"), expect)
+    # identical cost again: inside hysteresis, no re-publish
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=1, bytes=1, sim_s=2.0)
+    assert len(seen) == 1
+
+
+def test_failures_shrink_the_interval():
+    ctl, tel, ic = _loop(mtbf=1000.0)
+    intervals = []
+    ctl.bus.subscribe(lambda ev: intervals.append(ev.payload["interval_s"]),
+                      events=(E.INTERVAL_CHANGED,))
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=0, bytes=1, sim_s=1.0)
+    for _ in range(4):
+        ctl.clock.sleep(10.0)
+        ctl.bus.publish(E.APP_RANK_FAILED, app="app", rank=0)
+    assert len(intervals) >= 2
+    assert intervals[-1] < intervals[0]          # MTBF 1000 -> ~10s estimate
+    assert math.isclose(tel.mtbf_s("app"), 10.0)
+
+
+def test_resize_forces_resolve_and_stales_commit_cost():
+    ctl, tel, ic = _loop(mtbf=400.0)
+    seen = []
+    ctl.bus.subscribe(lambda ev: seen.append(ev.payload),
+                      events=(E.INTERVAL_CHANGED,))
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=0, bytes=1, sim_s=3.0)
+    assert len(seen) == 1
+    # estimates unchanged -> a plain resolve would sit inside hysteresis,
+    # but a resize-class event must force a fresh announcement
+    ctl.bus.publish(E.AGENTS_SCALED_UP, app="app", n=4)
+    assert len(seen) == 2
+    assert seen[-1]["reason"] == "resize"
+    assert tel.commit_cost_stale("app")
+    # the next commit replaces the stale estimate instead of blending:
+    # EWMA(0.3) would give 0.3*9 + 0.7*3 = 4.8, replacement gives 9.0
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=1, bytes=1, sim_s=9.0)
+    assert tel.commit_cost_s("app") == 9.0
+    assert not tel.commit_cost_stale("app")
+    assert math.isclose(seen[-1]["interval_s"], daly_interval(9.0, 400.0))
+
+
+def test_no_solve_before_first_commit():
+    ctl, tel, ic = _loop()
+    seen = []
+    ctl.bus.subscribe(lambda ev: seen.append(ev.name),
+                      events=(E.INTERVAL_CHANGED,))
+    ctl.bus.publish(E.AGENTS_SCALED_UP, app="app", n=2)   # no cost estimate
+    ctl.bus.publish(E.NODE_FAILED, node="icn0")
+    assert seen == []
+    assert ic.interval_for("app") is None
+
+
+# ------------------------------------------------------------- prometheus
+PROM_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""
+    r"(,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})? -?\d+(\.\d+)?([eE][-+]?\d+)?$")
+
+
+def test_prometheus_output_parses():
+    ctl, tel, _ = _loop()
+    ctl.bus.publish(E.COMMIT_DONE, app="app", ckpt=0, bytes=64, sim_s=0.5)
+    ctl.bus.publish(E.CKPT_IN_L2, app="app", ckpt=0, bytes=64, sim_s=0.1)
+    ctl.clock.sleep(1.0)
+    ctl.bus.publish(E.APP_RANK_FAILED, app="app", rank=0)
+    text = tel.prometheus()
+    assert text.endswith("\n")
+    names_typed = set()
+    for line in text.splitlines():
+        if line.startswith("# TYPE"):
+            _, _, name, mtype = line.split()
+            assert mtype in ("gauge", "counter")
+            names_typed.add(name)
+        elif line.startswith("# HELP"):
+            continue
+        else:
+            assert PROM_LINE.match(line), f"unparseable sample: {line!r}"
+            assert line.split("{")[0].split(" ")[0] in names_typed
+    assert 'icheck_commits_total{app="app"} 1' in text
+    assert 'icheck_mtbf_seconds{app="app"}' in text
+
+
+def test_prometheus_includes_tier_occupancy_from_live_cluster():
+    from repro.core import ICheckCluster
+
+    with ICheckCluster(n_icheck_nodes=2, node_memory=64 << 20) as c:
+        from repro.core import ICheckClient
+
+        cl = ICheckClient("app", c.controller, ranks=2).init()
+        cl.add_adapt("x", (1024,), "float32", num_parts=2)
+        arr = np.zeros(1024, np.float32)
+        cl.commit(0, {"x": {0: arr[:512], 1: arr[512:]}}, blocking=True,
+                  drain=False)
+        text = c.telemetry.prometheus()
+        assert re.search(r'icheck_tier_used_bytes\{node="[^"]+",'
+                         r'tier="memory"\} \d+', text)
+        snap = c.telemetry.snapshot()
+        assert snap["per_app"]["app"]["commits"] == 1
+        assert any(r["used_bytes"] > 0 for r in snap["tiers"])
+        # the client's pacing followed the solved interval
+        assert cl.ckpt_interval_s == c.controller.intervals.interval_for("app")
+        cl.finalize()
