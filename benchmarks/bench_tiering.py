@@ -1,0 +1,214 @@
+"""B9 -- storage lifecycle tiering: watermark demotion vs reactive RM
+escalation, and the L3 (remote object store) cold-restart path.
+
+Two experiments:
+
+  * **capacity pressure** (paper §III-A interaction 1): the same commit
+    workload runs against (a) the reactive baseline — L1 only, a full node
+    raises ``CapacityError`` mid-commit and the controller escalates to the
+    RM for more nodes — and (b) the lifecycle subsystem — a node-local
+    spill tier plus watermark-driven demotion that moves cold shards down
+    *before* commits hit the wall.  The lifecycle leg must finish with
+    **zero** RM escalations (and a single node) where the reactive leg
+    pays for extra nodes and straggler-retried commits.
+
+  * **L3 cold restart**: after a checkpoint trickles L2→L3, L1 and the PFS
+    copies are dropped; the restart must be served from the object store
+    (request-latency bound), and promote-on-read must repopulate the PFS so
+    the *next* restart runs at PFS speed again.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from repro.core import ICheckClient, ICheckCluster
+
+from .common import block_parts, fmt_bytes, save
+
+# capacity-pressure experiment
+PRESSURE_NODE_MEM = 8 << 20
+PRESSURE_PAYLOAD = 5 << 20
+PRESSURE_COMMITS = 6
+PRESSURE_PARTS = 4
+
+# L3 restart experiment
+RESTART_PAYLOAD = 32 << 20
+RESTART_PARTS = 8
+PFS_BW = 10e9
+L3_BW = 2e9
+L3_LATENCY = 0.03
+
+ESCALATION_EVENTS = ("capacity_grow", "node_request_denied")
+
+
+def _pressure_leg(lifecycle: bool, payload: int, n_commits: int,
+                  node_mem: int) -> dict:
+    """One leg of the capacity-pressure comparison; only the storage
+    lifecycle config differs (spill tier + watermarks vs bare L1)."""
+    data = np.arange(payload // 4, dtype=np.float32)
+    kwargs = dict(spill_bytes=16 * payload, watermark_high=0.5,
+                  watermark_low=0.2) if lifecycle else {}
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=2,
+                       node_memory=node_mem, keep_l1=1,
+                       adaptive_interval=False, **kwargs) as c:
+        client = ICheckClient("app", c.controller,
+                              ranks=PRESSURE_PARTS).init(
+            ckpt_bytes_estimate=payload)
+        client.add_adapt("x", data.shape, "float32",
+                         num_parts=PRESSURE_PARTS)
+        commit_sim_s = 0.0
+        retries = 0
+        for step in range(n_commits):
+            h = client.commit(step, {"x": block_parts(data + step,
+                                                      PRESSURE_PARTS)},
+                              blocking=True)
+            commit_sim_s += h.sim_duration
+            retries += h.retries
+            c.controller.wait_for_drains(timeout=60)
+        events = [e["event"] for e in c.controller.events]
+        meta, parts, level = client.restart()
+        got = np.concatenate([parts["x"][i] for i in range(PRESSURE_PARTS)])
+        np.testing.assert_array_equal(got, data + meta.step)
+        life = c.telemetry.snapshot()["lifecycle"]
+        client.finalize()
+        return {
+            "escalations": sum(events.count(n) for n in ESCALATION_EVENTS),
+            "nodes": len(c.controller.managers()),
+            "commit_sim_s": commit_sim_s,
+            "commit_rate_Bps": n_commits * payload / max(commit_sim_s, 1e-12),
+            "retries": retries,
+            "demotions": life["shard_demotions"],
+            "watermark_crossings": life["watermark_crossings_high"],
+        }
+
+
+def _l3_restart_legs(payload: int, parts: int) -> dict:
+    """Commit → drain → trickle, then time restarts as tiers are evicted:
+    L2, then L3 (cold), then L2 again via promote-on-read."""
+    data = np.arange(payload // 4, dtype=np.float32)
+    rows = {}
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=4 * payload, pfs_bandwidth=PFS_BW,
+                       l3=True, l3_bandwidth=L3_BW,
+                       l3_request_latency=L3_LATENCY,
+                       adaptive_interval=False) as c:
+        client = ICheckClient("app", c.controller, ranks=parts).init(
+            ckpt_bytes_estimate=payload)
+        client.add_adapt("x", data.shape, "float32", num_parts=parts)
+        client.commit(0, {"x": block_parts(data, parts)}, blocking=True)
+        c.controller.wait_for_drains(timeout=60)
+        c.controller.wait_for_uploads(timeout=60)
+
+        def timed_restart(expect_level: str) -> dict:
+            t0 = c.clock.now()
+            meta, out, level = client.restart()
+            dur = c.clock.now() - t0
+            assert level == expect_level, (level, expect_level)
+            got = np.concatenate([out["x"][i] for i in range(parts)])
+            np.testing.assert_array_equal(got, data)
+            return {"sim_s": dur, "level": level,
+                    "rate_Bps": payload / max(dur, 1e-12)}
+
+        # evict L1 everywhere (kill agents and scrub node stores — the
+        # health monitor would otherwise re-serve RAM through replacements)
+        for mgr in c.controller.managers():
+            for agent in list(mgr.agents()):
+                c.fault.kill_agent(agent.agent_id)
+            mgr.store.drop_checkpoint("app", 0)
+        rows["l2"] = timed_restart("l2")
+
+        # evict the PFS copy: only the object store can serve it now
+        c.pfs.drop_checkpoint("app", 0)
+        rows["l3_cold"] = timed_restart("l3")
+
+        # promote-on-read repopulated the PFS: next restart is L2 again
+        rows["l2_after_promote"] = timed_restart("l2")
+
+        snap = c.telemetry.snapshot()
+        rows["l3_cost"] = snap["l3"]
+        rows["prometheus"] = c.telemetry.prometheus()
+        client.finalize()
+    return rows
+
+
+def _run(payload_pressure: int, n_commits: int, payload_restart: int,
+         parts_restart: int, verbose: bool, tag: str,
+         node_mem: int = PRESSURE_NODE_MEM,
+         prometheus_out: str = "") -> dict:
+    reactive = _pressure_leg(False, payload_pressure, n_commits, node_mem)
+    lifecycle = _pressure_leg(True, payload_pressure, n_commits, node_mem)
+    restart = _l3_restart_legs(payload_restart, parts_restart)
+    prometheus = restart.pop("prometheus")
+    if prometheus_out:
+        with open(prometheus_out, "w") as f:
+            f.write(prometheus)
+    out = {
+        "pressure": {
+            "node_memory": node_mem,
+            "payload": payload_pressure,
+            "commits": n_commits,
+            "reactive": reactive,
+            "lifecycle": lifecycle,
+        },
+        "l3_restart": {"payload": payload_restart, **restart},
+    }
+    save(f"b9_tiering{tag}", out)
+    if verbose:
+        print(f"\nB9 capacity pressure ({fmt_bytes(payload_pressure)} ckpt "
+              f"x{n_commits} on a {fmt_bytes(node_mem)} node):")
+        for name, leg in (("reactive", reactive), ("lifecycle", lifecycle)):
+            print(f"  {name:10s} escalations={leg['escalations']} "
+                  f"nodes={leg['nodes']} retries={leg['retries']} "
+                  f"demotions={leg['demotions']} "
+                  f"commit={fmt_bytes(leg['commit_rate_Bps'])}/s")
+        print(f"B9 restart ladder ({fmt_bytes(payload_restart)}):")
+        for name in ("l2", "l3_cold", "l2_after_promote"):
+            r = restart[name]
+            print(f"  {name:17s}: {r['sim_s']:.3f}s sim "
+                  f"({fmt_bytes(r['rate_Bps'])}/s, from {r['level']})")
+        cost = restart["l3_cost"]
+        print(f"  L3 bill: ${cost['total_usd']:.6f} "
+              f"({cost['put_requests']} PUT / {cost['get_requests']} GET, "
+              f"{fmt_bytes(cost['bytes_in'])} in / "
+              f"{fmt_bytes(cost['bytes_out'])} out)")
+        if prometheus_out:
+            print(f"  [prometheus metrics written to {prometheus_out}]")
+    # the claims this benchmark exists to demonstrate, enforced:
+    assert lifecycle["escalations"] == 0, \
+        "watermark demotion must eliminate capacity-pressure RM escalations"
+    assert reactive["escalations"] >= 1, \
+        "the reactive baseline must actually hit capacity pressure"
+    assert lifecycle["nodes"] == 1
+    assert restart["l3_cold"]["sim_s"] > restart["l2"]["sim_s"], \
+        "object-store restart must cost more than PFS restart"
+    assert restart["l2_after_promote"]["level"] == "l2"
+    return out
+
+
+def run(verbose: bool = True) -> dict:
+    return _run(PRESSURE_PAYLOAD, PRESSURE_COMMITS, RESTART_PAYLOAD,
+                RESTART_PARTS, verbose, tag="")
+
+
+def run_smoke(verbose: bool = True) -> dict:
+    """Seconds-scale CI canary; also dumps the TelemetryService's Prometheus
+    exposition to BENCH_prometheus.txt for the perf-job artifact."""
+    return _run(PRESSURE_PAYLOAD // 4, 4, RESTART_PAYLOAD // 8,
+                RESTART_PARTS // 2, verbose, tag="_smoke",
+                node_mem=PRESSURE_NODE_MEM // 4,
+                prometheus_out=os.path.join(os.getcwd(),
+                                            "BENCH_prometheus.txt"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    run_smoke() if args.smoke else run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Deliberate perf-baseline refresh — one command instead of hand-edited
+JSON.
+
+Runs the smoke suite (unless ``--from-current`` points at an existing
+``BENCH_smoke.json``), then rewrites ``benchmarks/baseline_smoke.json`` with
+the fresh metrics and prints the metric-by-metric delta against the old
+baseline so the refresh is an informed decision, not a blind overwrite.
+
+  python -m benchmarks.refresh_baseline                # run smoke + refresh
+  python -m benchmarks.refresh_baseline --from-current BENCH_smoke.json
+
+A refresh is the right move when a change *legitimately* shifts throughput
+(new hardware model, new benchmark, a deliberate trade-off) — never to
+silence a regression the gate just caught.  The regression gate
+(``check_regression.py``) only starts tracking a new metric once it appears
+in the committed baseline, which is exactly what this helper does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "baseline_smoke.json")
+DEFAULT_CURRENT = "BENCH_smoke.json"
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ERROR: cannot read {path}: {e}")
+        sys.exit(2)
+    if not isinstance(data.get("metrics"), dict):
+        print(f"ERROR: {path} has no 'metrics' block")
+        sys.exit(2)
+    return data
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="refresh the committed smoke-benchmark baseline")
+    ap.add_argument("--from-current", metavar="JSON", default=None,
+                    help="use an existing BENCH_smoke.json instead of "
+                         "running the smoke suite")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file to rewrite")
+    args = ap.parse_args(argv)
+
+    if args.from_current is None:
+        print("running the smoke suite (python -m benchmarks.run --smoke)…")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--smoke"],
+            cwd=os.path.dirname(HERE))
+        if proc.returncode != 0:
+            print("ERROR: smoke run failed — refusing to refresh the "
+                  "baseline from a broken run")
+            sys.exit(1)
+        current_path = os.path.join(os.path.dirname(HERE), DEFAULT_CURRENT)
+    else:
+        current_path = args.from_current
+
+    current = _load(current_path)
+    if not current.get("ok", True) or current.get("failures"):
+        print(f"ERROR: {current_path} reports failures: "
+              f"{current.get('failures')} — refusing to refresh")
+        sys.exit(1)
+
+    old_metrics = {}
+    if os.path.exists(args.baseline):
+        old_metrics = _load(args.baseline).get("metrics", {})
+
+    print(f"\n{'metric':35s} {'old':>14s} {'new':>14s}")
+    for name in sorted(set(old_metrics) | set(current["metrics"])):
+        old = old_metrics.get(name)
+        new = current["metrics"].get(name)
+        old_s = f"{old:14.4g}" if old is not None else f"{'(none)':>14s}"
+        new_s = f"{new:14.4g}" if new is not None else f"{'REMOVED':>14s}"
+        delta = ""
+        if old and new:
+            delta = f"  {100 * (new - old) / old:+.1f}%"
+        print(f"{name:35s} {old_s} {new_s}{delta}")
+
+    with open(args.baseline, "w") as f:
+        json.dump(current, f, indent=1, default=float)
+        f.write("\n")
+    print(f"\nbaseline refreshed: {args.baseline}")
+    print("commit it together with the change that justified the refresh.")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ import traceback
 
 from . import (bench_async_overlap, bench_codec, bench_multiapp,
                bench_redistribution, bench_restart, bench_serving,
-               bench_transfer, roofline)
+               bench_tiering, bench_transfer, roofline)
 
 ALL = {
     "b1": ("agent-count transfer knee", bench_transfer.run),
@@ -32,11 +32,13 @@ ALL = {
     "b6": ("checkpoint codec", bench_codec.run),
     "b7": ("roofline table", roofline.run),
     "b8": ("serving decode", bench_serving.run),
+    "b9": ("storage lifecycle tiering", bench_tiering.run),
 }
 
 SMOKE = {
     "b1": ("agent-count transfer knee (smoke)", bench_transfer.run_smoke),
     "b2": ("async commit overlap (smoke)", bench_async_overlap.run_smoke),
+    "b9": ("storage lifecycle tiering (smoke)", bench_tiering.run_smoke),
 }
 
 SMOKE_JSON = "BENCH_smoke.json"
@@ -55,6 +57,14 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b2_hidden_fraction"] = b2["hidden_fraction"]
         metrics["b2_commit_rate_Bps"] = b2["payload"] / max(
             b2["async_transfer_sim_s_hidden"], 1e-12)
+    b9 = results.get("b9")
+    if b9:
+        metrics["b9_lifecycle_commit_rate_Bps"] = \
+            b9["pressure"]["lifecycle"]["commit_rate_Bps"]
+        metrics["b9_l2_restart_rate_Bps"] = \
+            b9["l3_restart"]["l2"]["rate_Bps"]
+        metrics["b9_l3_restart_rate_Bps"] = \
+            b9["l3_restart"]["l3_cold"]["rate_Bps"]
     return metrics
 
 

@@ -19,13 +19,13 @@ from .plan import (Move, MeshMove, apply_mesh_moves, apply_moves,
 from .policies import (AdaptivePolicy, BandwidthBalancedPolicy,
                        MemoryAwarePolicy, StaticPolicy, get_policy)
 from .rm import ResizeEvent, ResourceManager
-from .services import (IntervalController, TelemetryService, daly_interval,
-                       young_interval)
+from .services import (IntervalController, StorageLifecycleService,
+                       TelemetryService, daly_interval, young_interval)
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
 from .snapshot import HostSnapshot, restore_pytree, snapshot_pytree
-from .tiers import (LocalDiskTier, MemoryTier, PFSTier, StorageTier,
-                    TierPipeline, crc32, decode_payload, encode_payload,
-                    resolve_codec)
+from .tiers import (LocalDiskTier, MemoryTier, PFSTier, RemoteObjectTier,
+                    StorageTier, TierPipeline, crc32, decode_payload,
+                    encode_payload, resolve_codec)
 from .store import MemoryStore, PFSStore
 from .types import (AppRecord, AppStatus, CheckpointMeta, CkptStatus,
                     ICheckError, IntegrityError, CapacityError, NodeSpec,
@@ -41,11 +41,11 @@ __all__ = [
     "redistribution_moves", "split_array", "AdaptivePolicy",
     "BandwidthBalancedPolicy", "MemoryAwarePolicy", "StaticPolicy",
     "get_policy", "ResizeEvent", "ResourceManager",
-    "IntervalController", "TelemetryService", "daly_interval",
-    "young_interval", "EWMA", "FaultInjector",
+    "IntervalController", "StorageLifecycleService", "TelemetryService",
+    "daly_interval", "young_interval", "EWMA", "FaultInjector",
     "SimClock", "SimNIC", "HostSnapshot", "restore_pytree", "snapshot_pytree",
     "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
-    "StorageTier", "TierPipeline", "crc32", "encode_payload",
+    "RemoteObjectTier", "StorageTier", "TierPipeline", "crc32", "encode_payload",
     "decode_payload", "resolve_codec", "AppRecord", "AppStatus",
     "CheckpointMeta", "CkptStatus", "ICheckError", "IntegrityError",
     "CapacityError", "NodeSpec", "PartitionDesc", "PartitionScheme",

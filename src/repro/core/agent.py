@@ -162,7 +162,9 @@ class Agent:
         written = 0
         sim_total = 0.0
         for key in op.key:
-            payload = self.store.get(key)
+            # read in place: draining a demoted/spilled shard must not pull
+            # it back into RAM (that would undo the watermark policy)
+            payload = self.store.get(key, promote=False)
             sim_total += op.pfs.write_shard(key, payload)
             written += len(payload)
         return {"bytes": written, "sim_seconds": sim_total, "keys": list(op.key)}

@@ -7,7 +7,14 @@ behavior): the IntervalController treats each app's registered
 ``ckpt_interval_s`` as a starting hint and re-solves it (Young/Daly) from
 observed commit cost and failure rate, announcing changes as
 ``interval_changed`` events.  Pass ``adaptive_interval=False`` for
-experiments that need the registered interval to stay fixed."""
+experiments that need the registered interval to stay fixed.
+
+``l3=True`` attaches a :class:`~repro.core.tiers.RemoteObjectTier` (S3/GCS
+analogue) behind the PFS: sealed checkpoints trickle L2→L3 in the
+background, retention trims the faster tiers (``keep_l2``/``keep_l3``), and
+cold restarts fall back to the object store when L1 and L2 are gone.
+``watermark_high``/``watermark_low`` drive the proactive L1 demotion policy
+on nodes that have a spill tier (``spill_bytes > 0``)."""
 from __future__ import annotations
 
 import tempfile
@@ -16,7 +23,7 @@ from typing import Optional
 from .controller import Controller
 from .rm import ResourceManager
 from .simnet import FaultInjector, SimClock
-from .tiers import PFSTier
+from .tiers import PFSTier, RemoteObjectTier
 
 
 class ICheckCluster:
@@ -26,7 +33,11 @@ class ICheckCluster:
                  policy: str = "adaptive", time_scale: float = 0.0,
                  keep_l1: int = 2, max_concurrent_drains: int = 2,
                  spill_bytes: int = 0, adaptive_interval: bool = True,
-                 default_mtbf_s: float = 3600.0):
+                 default_mtbf_s: float = 3600.0,
+                 l3: bool = False, l3_root: Optional[str] = None,
+                 l3_bandwidth: float = 5e9, l3_request_latency: float = 0.03,
+                 watermark_high: float = 0.85, watermark_low: float = 0.60,
+                 keep_l2: int = 0, keep_l3: int = 0):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -34,6 +45,7 @@ class ICheckCluster:
             self.rm.make_node(memory_bytes=node_memory,
                               nic_bandwidth=nic_bandwidth)
         self._tmp = None
+        self._tmp_l3 = None
         if pfs_root is None:
             # ignore_cleanup_errors: a drain/agent thread that outlives its
             # join timeout must not turn teardown into an OSError
@@ -41,12 +53,23 @@ class ICheckCluster:
                 prefix="icheck-pfs-", ignore_cleanup_errors=True)
             pfs_root = self._tmp.name
         self.pfs = PFSTier(pfs_root, bandwidth=pfs_bandwidth, clock=self.clock)
+        self.l3 = None
+        if l3 or l3_root is not None:
+            if l3_root is None:
+                self._tmp_l3 = tempfile.TemporaryDirectory(
+                    prefix="icheck-l3-", ignore_cleanup_errors=True)
+                l3_root = self._tmp_l3.name
+            self.l3 = RemoteObjectTier(l3_root, bandwidth=l3_bandwidth,
+                                       request_latency=l3_request_latency,
+                                       clock=self.clock)
         self.controller = Controller(
             self.rm, self.pfs, policy=policy, initial_nodes=n_icheck_nodes,
             clock=self.clock, fault=self.fault, keep_l1=keep_l1,
             max_concurrent_drains=max_concurrent_drains,
             spill_bytes=spill_bytes, adaptive_interval=adaptive_interval,
-            default_mtbf_s=default_mtbf_s)
+            default_mtbf_s=default_mtbf_s, l3=self.l3,
+            watermark_high=watermark_high, watermark_low=watermark_low,
+            keep_l2=keep_l2, keep_l3=keep_l3)
 
     @property
     def telemetry(self):
@@ -58,10 +81,17 @@ class ICheckCluster:
         """The controller's event bus (subscribe for telemetry)."""
         return self.controller.bus
 
+    @property
+    def lifecycle(self):
+        """The controller's StorageLifecycleService (watermarks/trickle/GC)."""
+        return self.controller.lifecycle
+
     def close(self) -> None:
         self.controller.close()
         if self._tmp is not None:
             self._tmp.cleanup()
+        if self._tmp_l3 is not None:
+            self._tmp_l3.cleanup()
 
     def __enter__(self) -> "ICheckCluster":
         return self

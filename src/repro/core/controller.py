@@ -19,6 +19,9 @@ The behaviour itself lives in focused subsystems (see ARCHITECTURE.md):
     straggler advice, RM node retake/migration (§III-A items 2-3)
   * :class:`~.services.resize.ResizePlanner` — resize forewarning →
     pre-staged redistribution plans (§III-A item 4)
+  * :class:`~.services.lifecycle.StorageLifecycleService` — watermark-driven
+    L1 demotion, background L2→L3 trickle into the remote object store,
+    keep-last-K retention/GC with pinning (beyond paper)
 
 Services communicate through the :class:`~.events.EventBus`; the legacy
 ``Controller.events`` audit list is an :class:`~.events.AuditLog` subscriber
@@ -38,9 +41,9 @@ from .policies import NodeView, SchedulingPolicy
 from .rm import ResourceManager
 from .services import (CheckpointCatalog, DrainOrchestrator, HealthMonitor,
                        IntervalController, PlacementService, ResizePlanner,
-                       TelemetryService)
+                       StorageLifecycleService, TelemetryService)
 from .simnet import FaultInjector, SimClock
-from .tiers import PFSTier
+from .tiers import PFSTier, RemoteObjectTier
 from .types import (AppId, AppRecord, AppStatus, CheckpointMeta, CkptId,
                     ICheckError, NodeSpec, RegionMeta, ShardInfo)
 
@@ -53,9 +56,13 @@ class Controller:
                  keep_l1: int = 2, max_concurrent_drains: int = 2,
                  heartbeat_interval_s: float = 0.05,
                  spill_bytes: int = 0, adaptive_interval: bool = True,
-                 default_mtbf_s: float = 3600.0):
+                 default_mtbf_s: float = 3600.0,
+                 l3: Optional[RemoteObjectTier] = None,
+                 watermark_high: float = 0.85, watermark_low: float = 0.60,
+                 keep_l2: int = 0, keep_l3: int = 0):
         self.rm = rm
         self.pfs = pfs
+        self.l3 = l3
         self.clock = clock or SimClock()
         self.fault = fault or FaultInjector()
         self.keep_l1 = keep_l1
@@ -83,6 +90,12 @@ class Controller:
         self.telemetry = TelemetryService(self, default_mtbf_s=default_mtbf_s)
         self.intervals = IntervalController(self, self.telemetry) \
             if adaptive_interval else None
+        # storage lifecycle: watermark demotion acts whenever a node has a
+        # lower tier to demote into; the L2→L3 trickle and retention act
+        # when an L3 tier is configured
+        self.lifecycle = StorageLifecycleService(
+            self, l3=l3, watermark_high=watermark_high,
+            watermark_low=watermark_low, keep_l2=keep_l2, keep_l3=keep_l3)
 
         # wire the RM plugin callbacks (§III-A)
         rm.on_retake = self.health.on_rm_retake
@@ -230,6 +243,16 @@ class Controller:
         """Testing/benchmark helper: block until the drain queue empties."""
         self.drains.wait_idle(timeout)
 
+    # storage lifecycle
+    def wait_for_uploads(self, timeout: float = 30.0) -> None:
+        """Block until the background L2→L3 trickle (and drains) settle."""
+        self.lifecycle.wait_uploads(timeout)
+
+    def pin_checkpoint(self, app_id: AppId, ckpt_id: CkptId,
+                       pinned: bool = True) -> bool:
+        """Exempt one checkpoint from retention/GC on every tier."""
+        return self.lifecycle.pin(app_id, ckpt_id, pinned)
+
     # placement / adaptivity
     def handle_capacity_pressure(self, app_id: AppId) -> List[Agent]:
         return self.placement.handle_capacity_pressure(app_id)
@@ -250,6 +273,7 @@ class Controller:
 
     # ================================================================== misc
     def close(self) -> None:
+        self.lifecycle.close()
         self.drains.close()
         self.health.close()
         if self.intervals is not None:

@@ -50,6 +50,27 @@ CODEC_DEGRADED = "codec_degraded"
 SHARD_SPILLED = "shard_spilled"
 SHARD_PROMOTED = "shard_promoted"
 
+# -- storage lifecycle (watermark demotion / L3 trickle / retention) -------
+# a shard was pushed down a tier by policy (not by put-time capacity
+# pressure): the StorageLifecycleService's watermark demotion
+SHARD_DEMOTED = "shard_demoted"
+# a requested demotion could not happen (no lower tier, shard not resident,
+# lower tier full) — published so lifecycle decisions stay observable
+# instead of silently returning False
+DEMOTE_FAILED = "demote_failed"
+# a node tier crossed its configured high watermark (direction="high") or
+# was drained back under the low watermark (direction="low")
+WATERMARK_CROSSED = "watermark_crossed"
+# a checkpoint finished its background L2→L3 trickle and is durable in the
+# remote object store
+CKPT_IN_L3 = "ckpt_in_l3"
+# the trickle exhausted its retries; the checkpoint stays IN_L2 (still
+# durable on the PFS) and retention will not trim it
+L3_UPLOAD_FAILED = "l3_upload_failed"
+# retention/GC dropped a checkpoint's shards from one tier (payload carries
+# ``tier``); a checkpoint expired from its last tier is gone for good
+CKPT_EXPIRED = "ckpt_expired"
+
 # an application rank died (injected by tests/benchmarks or reported by the
 # RM plugin): the application loses all work since its last checkpoint.
 # Feeds the TelemetryService's failure inter-arrival (MTBF) estimate.

@@ -105,7 +105,23 @@ class Manager:
             "nic_busy_sim_s": busy,
             "n_agents": len(self._agents),
             "ckpt_duty_pred": self.ckpt_duty_pred(),
+            "tiers": self.tier_occupancy(),
         }
+
+    def tier_occupancy(self) -> List[dict]:
+        """Per-tier fill levels — the watermark policy's per-node signal."""
+        rows = []
+        for tier in self.store.tiers:
+            cap = tier.capacity
+            used = tier.used_bytes
+            bounded = cap not in (None, 0) and cap != float("inf")
+            rows.append({
+                "tier": tier.name,
+                "used_bytes": used,
+                "capacity_bytes": cap if bounded else 0,
+                "occupancy": used / cap if bounded else 0.0,
+            })
+        return rows
 
     # ------------------------------------------------------- adaptive hints
     def _on_interval_changed(self, ev) -> None:

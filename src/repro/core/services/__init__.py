@@ -14,16 +14,19 @@ the :mod:`repro.core.events` bus:
                        throughput, failure inter-arrival) + Prometheus export
   * :mod:`interval`  — Young/Daly checkpoint-interval re-solver publishing
                        ``INTERVAL_CHANGED`` events (the adaptive loop)
+  * :mod:`lifecycle` — storage lifecycle: watermark demotion, background
+                       L2→L3 trickle, keep-last-K retention/GC with pinning
 """
 from .catalog import CheckpointCatalog
 from .drain import DrainOrchestrator
 from .health import HealthMonitor
 from .interval import IntervalController, daly_interval, young_interval
+from .lifecycle import StorageLifecycleService
 from .placement import PlacementService
 from .resize import ResizePlanner
 from .telemetry import AppTelemetry, TelemetryService
 
 __all__ = ["CheckpointCatalog", "DrainOrchestrator", "HealthMonitor",
            "IntervalController", "PlacementService", "ResizePlanner",
-           "TelemetryService", "AppTelemetry", "daly_interval",
-           "young_interval"]
+           "StorageLifecycleService", "TelemetryService", "AppTelemetry",
+           "daly_interval", "young_interval"]

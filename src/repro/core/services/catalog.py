@@ -1,10 +1,12 @@
 """Checkpoint catalog: lifecycle registry + multi-level restart read path.
 
-Owns the PENDING → IN_L1 → DRAINING → IN_L2 state machine of every
+Owns the PENDING → IN_L1 → DRAINING → IN_L2 → IN_L3 state machine of every
 checkpoint (paper §II) and answers "what is the newest restartable
 checkpoint and where does each shard live" — L1 via any live holding agent
-(replicas tried in turn), else L2 (PFS), including the cold-restart scan of
-PFS manifests when a fresh controller knows nothing yet.
+(replicas tried in turn), else L2 (PFS), else L3 (remote object store,
+promote-on-read back into the PFS) — including the cold-restart scan of PFS
+manifests (then L3 manifests, when the PFS is empty too) when a fresh
+controller knows nothing yet.
 """
 from __future__ import annotations
 
@@ -63,14 +65,16 @@ class CheckpointCatalog:
         with ctl._lock:
             app = ctl._apps.get(app_id)
             meta = app.checkpoints.get(ckpt_id) if app else None
-            if meta is not None and meta.status != CkptStatus.IN_L2:
+            if meta is not None and meta.status not in (CkptStatus.IN_L2,
+                                                        CkptStatus.IN_L3):
                 meta.status = CkptStatus.FAILED
                 ctl.bus.publish(E.CKPT_FAILED, app=app_id, ckpt=ckpt_id)
 
     # ------------------------------------------------------------- read path
     def latest_restartable(self, app_id: AppId) -> Optional[Tuple[CheckpointMeta, str]]:
-        """Newest usable checkpoint: L1 preferred (fast), else L2 (durable)."""
+        """Newest usable checkpoint: L1 preferred (fast), else L2, else L3."""
         ctl = self.ctl
+        l3 = getattr(ctl, "l3", None)
         with ctl._lock:
             app = ctl._apps.get(app_id)
             metas = sorted(app.checkpoints.values(), key=lambda m: -m.ckpt_id) \
@@ -79,10 +83,14 @@ class CheckpointCatalog:
             if meta.status in (CkptStatus.IN_L1, CkptStatus.DRAINING) \
                     and self.l1_complete(meta):
                 return meta, "l1"
-            if meta.status == CkptStatus.IN_L2:
+            if meta.status in (CkptStatus.IN_L2, CkptStatus.IN_L3):
                 if self.l1_complete(meta):
                     return meta, "l1"
-                return meta, "l2"
+                if ctl.pfs.checkpoint_complete(meta):
+                    return meta, "l2"
+                # retention may have trimmed the PFS copy: serve from L3
+                if l3 is not None and l3.checkpoint_complete(meta):
+                    return meta, "l3"
         # cold restart: nothing in memory (e.g. new controller) — scan PFS
         for ckpt_id in reversed(ctl.pfs.list_checkpoints(app_id)):
             meta = ctl.pfs.read_manifest(app_id, ckpt_id)
@@ -92,6 +100,17 @@ class CheckpointCatalog:
                     if app is not None:
                         app.checkpoints.setdefault(ckpt_id, meta)
                 return meta, "l2"
+        # still nothing: the PFS may have been lost/recycled too — scan the
+        # remote object store's manifests (the durability floor)
+        if l3 is not None:
+            for ckpt_id in reversed(l3.list_checkpoints(app_id)):
+                meta = l3.read_manifest(app_id, ckpt_id)
+                if meta is not None and l3.checkpoint_complete(meta):
+                    meta.status = CkptStatus.IN_L3
+                    with ctl._lock:
+                        if app is not None:
+                            app.checkpoints.setdefault(ckpt_id, meta)
+                    return meta, "l3"
         return None
 
     def l1_complete(self, meta: CheckpointMeta) -> bool:
@@ -119,7 +138,7 @@ class CheckpointCatalog:
     def fetch_shard(self, app_id: AppId, ckpt_id: CkptId, region: str,
                     part: int) -> bytes:
         """Restart/redistribution read path: L1 via any *live* holding agent
-        (replicas tried in turn), else L2 (PFS)."""
+        (replicas tried in turn), else L2 (PFS), else L3 (object store)."""
         for agent, k in self.agents_with(app_id, ckpt_id, region, part):
             try:
                 return agent.get(k)
@@ -128,4 +147,16 @@ class CheckpointCatalog:
         key = ShardKey(app_id, ckpt_id, region, part)
         if self.ctl.pfs.has_shard(key):
             return self.ctl.pfs.read_shard(key)
+        l3 = getattr(self.ctl, "l3", None)
+        if l3 is not None and l3.has_shard(key):
+            payload = l3.read_shard(key)
+            # promote-on-read back through the pipeline: repopulate the PFS
+            # copy so the remaining shards of this restart (and the next
+            # restart) are served at PFS latency instead of object-store
+            # request-latency
+            self.ctl.pfs.write_shard(key, payload)
+            self.ctl.bus.publish(E.SHARD_PROMOTED, node="cluster",
+                                 key=str(key), src=l3.name,
+                                 dst=self.ctl.pfs.name, nbytes=len(payload))
+            return payload
         raise KeyError(f"shard {app_id}/{ckpt_id}/{region}/{part} lost")

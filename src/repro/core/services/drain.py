@@ -10,13 +10,19 @@ nominally allowed).
 
 Also owns L1 garbage collection (keep the newest ``keep_l1`` durable
 checkpoints resident for fast restarts) and bounded drain retry.
+
+The same worker pool runs the **background lane**: callables submitted via
+:meth:`submit_background` (the StorageLifecycleService's L2→L3 trickle).
+Background work is strictly lower priority — a worker only picks it up when
+no live drain is queued or active, so the trickle never contends with the
+latency-sensitive L1→L2 path for workers or PFS bandwidth.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import List, Tuple
+from typing import Callable, List, Tuple
 
 from .. import events as E
 from ..types import AppId, CheckpointMeta, CkptStatus
@@ -30,10 +36,14 @@ class DrainOrchestrator:
         self.keep_l1 = keep_l1
         self.max_attempts = max(1, int(max_attempts))
         self._q: "queue.Queue[Tuple[CheckpointMeta, int]]" = queue.Queue()
+        self._bg: "queue.Queue[Callable[[], None]]" = queue.Queue()
         self._stop = threading.Event()
         self._lock = threading.Lock()
         self._active = 0
         self._inflight = 0        # submitted but not yet fully processed
+        self._bg_inflight = 0     # background jobs submitted, not finished
+        self._bg_completed = 0
+        self._bg_failed = 0
         self._max_active = 0
         self._completed = 0
         self._failed = 0
@@ -61,6 +71,9 @@ class DrainOrchestrator:
                 "completed": self._completed,
                 "failed": self._failed,
                 "queued": self._q.qsize(),
+                "background_inflight": self._bg_inflight,
+                "background_completed": self._bg_completed,
+                "background_failed": self._bg_failed,
             }
 
     # ------------------------------------------------------------- interface
@@ -68,6 +81,12 @@ class DrainOrchestrator:
         with self._lock:
             self._inflight += 1
         self._q.put((meta, attempt))
+
+    def submit_background(self, fn: Callable[[], None]) -> None:
+        """Queue low-priority work (L2→L3 trickle) behind all live drains."""
+        with self._lock:
+            self._bg_inflight += 1
+        self._bg.put(fn)
 
     def wait_idle(self, timeout: float = 30.0) -> None:
         """Block until the drain queue empties and no drain is in flight."""
@@ -80,12 +99,24 @@ class DrainOrchestrator:
             time.sleep(0.01)
         raise TimeoutError("drains did not settle")
 
+    def wait_background(self, timeout: float = 30.0) -> None:
+        """Block until background work (and the drains gating it) settles."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                pending = self._bg_inflight + self._inflight
+            if pending == 0:
+                return
+            time.sleep(0.01)
+        raise TimeoutError("background work did not settle")
+
     # ------------------------------------------------------------------ guts
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
                 meta, attempt = self._q.get(timeout=0.05)
             except queue.Empty:
+                self._run_background_one()
                 continue
             with self._lock:
                 self._active += 1
@@ -96,6 +127,32 @@ class DrainOrchestrator:
                 with self._lock:
                     self._active -= 1
                     self._inflight -= 1
+
+    def _run_background_one(self) -> None:
+        # strict priority: background work only starts while no drain is
+        # queued or running, so the trickle never steals PFS bandwidth or a
+        # worker slot from the latency-sensitive L1→L2 path
+        with self._lock:
+            if self._active > 0:
+                return
+        if not self._q.empty():
+            return
+        try:
+            fn = self._bg.get_nowait()
+        except queue.Empty:
+            return
+        ok = True
+        try:
+            fn()
+        except Exception:   # noqa: BLE001 - lifecycle jobs own their retries
+            ok = False
+        finally:
+            with self._lock:
+                self._bg_inflight -= 1
+                if ok:
+                    self._bg_completed += 1
+                else:
+                    self._bg_failed += 1
 
     def _drain_one(self, meta: CheckpointMeta, attempt: int) -> None:
         ctl = self.ctl
@@ -153,7 +210,8 @@ class DrainOrchestrator:
         with ctl._lock:
             app = ctl._apps[app_id]
             durable = sorted((m.ckpt_id for m in app.checkpoints.values()
-                              if m.status == CkptStatus.IN_L2))
+                              if m.status in (CkptStatus.IN_L2,
+                                              CkptStatus.IN_L3)))
         evict = durable[:-self.keep_l1] if self.keep_l1 > 0 else durable
         for ckpt_id in evict:
             for mgr in ctl.managers():

@@ -37,6 +37,11 @@ RESIZE_EVENTS = (E.RESIZE_FOREWARNED, E.AGENTS_SCALED_UP,
                  E.NODE_MIGRATED, E.CAPACITY_GROW)
 # cluster-level failures count against every connected app's MTBF
 CLUSTER_FAILURE_EVENTS = (E.NODE_FAILED, E.AGENT_FAILED)
+# storage-lifecycle events counted cluster-wide (the lifecycle service's
+# observable surface: demotions, trickle completions/failures, retention
+# expiries)
+LIFECYCLE_EVENTS = (E.SHARD_DEMOTED, E.DEMOTE_FAILED, E.WATERMARK_CROSSED,
+                    E.CKPT_IN_L3, E.CKPT_EXPIRED, E.L3_UPLOAD_FAILED)
 
 
 class AppTelemetry:
@@ -88,11 +93,20 @@ class TelemetryService:
         self._apps: Dict[AppId, AppTelemetry] = {}
         self._cluster_failures = 0
         self._events_seen = 0
+        self._lifecycle = {
+            "shard_demotions": 0,
+            "demote_failures": 0,
+            "watermark_crossings_high": 0,
+            "ckpts_in_l3": 0,
+            "ckpts_expired": 0,
+            "l3_trickle_bytes": 0,
+            "l3_upload_failures": 0,
+        }
         self._unsubscribe = ctl.bus.subscribe(
             self._on_event,
             events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
                     E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED)
-            + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS)
+            + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
 
     def close(self) -> None:
         self._unsubscribe()
@@ -141,6 +155,20 @@ class TelemetryService:
                 self._cluster_failures += 1
                 for tel in self._apps.values():
                     self._record_failure(tel, ev.sim_t)
+            elif name == E.SHARD_DEMOTED:
+                self._lifecycle["shard_demotions"] += 1
+            elif name == E.DEMOTE_FAILED:
+                self._lifecycle["demote_failures"] += 1
+            elif name == E.WATERMARK_CROSSED:
+                if p.get("direction") == "high":
+                    self._lifecycle["watermark_crossings_high"] += 1
+            elif name == E.CKPT_IN_L3:
+                self._lifecycle["ckpts_in_l3"] += 1
+                self._lifecycle["l3_trickle_bytes"] += int(p.get("bytes", 0))
+            elif name == E.CKPT_EXPIRED:
+                self._lifecycle["ckpts_expired"] += 1
+            elif name == E.L3_UPLOAD_FAILED:
+                self._lifecycle["l3_upload_failures"] += 1
             elif name in RESIZE_EVENTS:
                 app_id = p.get("app")
                 targets = [self._app(app_id)] if app_id \
@@ -189,19 +217,32 @@ class TelemetryService:
 
     # -------------------------------------------------------------- export
     def tier_occupancy(self) -> List[dict]:
-        """Per-node, per-tier occupancy sampled live from the managers."""
+        """Per-tier occupancy: node tiers from the managers, plus the shared
+        cluster tiers (PFS, and the L3 object store when configured).
+
+        Unbounded tiers report ``capacity_bytes=0`` and ``occupancy=0.0``
+        (JSON and Prometheus have no portable infinity).
+        """
         rows = []
         for mgr in self.ctl.managers():
-            for tier in mgr.store.tiers:
-                cap = tier.capacity
-                used = tier.used_bytes
-                rows.append({
-                    "node": mgr.node_id,
-                    "tier": tier.name,
-                    "used_bytes": used,
-                    "capacity_bytes": cap,
-                    "occupancy": used / cap if cap else 0.0,
-                })
+            # the managers own the per-node view (same rows the heartbeat
+            # carries) — one definition of the occupancy convention
+            for r in mgr.tier_occupancy():
+                rows.append({"node": mgr.node_id, **r})
+        for tier in (getattr(self.ctl, "pfs", None),
+                     getattr(self.ctl, "l3", None)):
+            if tier is None:
+                continue
+            cap = tier.capacity
+            used = tier.used_bytes
+            bounded = cap not in (None, 0) and cap != float("inf")
+            rows.append({
+                "node": "cluster",
+                "tier": tier.name,
+                "used_bytes": used,
+                "capacity_bytes": cap if bounded else 0,
+                "occupancy": used / cap if bounded else 0.0,
+            })
         return rows
 
     def snapshot(self) -> dict:
@@ -210,9 +251,10 @@ class TelemetryService:
             per_app = {a: t.as_dict() for a, t in self._apps.items()}
             cluster_failures = self._cluster_failures
             events_seen = self._events_seen
+            lifecycle = dict(self._lifecycle)
         for app_id, row in per_app.items():
             row["mtbf_s"] = self.mtbf_s(app_id)
-        return {
+        out = {
             "per_app": per_app,
             "cluster": {
                 "failures_total": cluster_failures,
@@ -220,7 +262,14 @@ class TelemetryService:
                 "default_mtbf_s": self.default_mtbf_s,
             },
             "tiers": self.tier_occupancy(),
+            "lifecycle": lifecycle,
         }
+        l3 = getattr(self.ctl, "l3", None)
+        if l3 is not None:
+            cost = l3.cost_breakdown()
+            cost["total_usd"] = l3.cost_usd()
+            out["l3"] = cost
+        return out
 
     def prometheus(self) -> str:
         """Prometheus text exposition format (0.0.4)."""
@@ -258,11 +307,43 @@ class TelemetryService:
                "Cluster-level node/agent failures",
                [({}, snap["cluster"]["failures_total"])])
         metric("icheck_tier_used_bytes", "gauge",
-               "Bytes resident per node storage tier",
+               "Bytes resident per storage tier (node tiers + shared tiers)",
                [({"node": r["node"], "tier": r["tier"]}, r["used_bytes"])
                 for r in snap["tiers"]])
         metric("icheck_tier_occupancy_ratio", "gauge",
-               "Fill fraction per node storage tier",
+               "Fill fraction per storage tier (0 for unbounded tiers)",
                [({"node": r["node"], "tier": r["tier"]}, r["occupancy"])
                 for r in snap["tiers"]])
+        life = snap["lifecycle"]
+        metric("icheck_shard_demotions_total", "counter",
+               "Shards pushed down a tier by the watermark policy",
+               [({}, life["shard_demotions"])])
+        metric("icheck_demote_failures_total", "counter",
+               "Demotions that could not happen (observable reasons on bus)",
+               [({}, life["demote_failures"])])
+        metric("icheck_watermark_crossings_total", "counter",
+               "High-watermark crossings that triggered demotion",
+               [({}, life["watermark_crossings_high"])])
+        metric("icheck_ckpts_in_l3_total", "counter",
+               "Checkpoints trickled into the remote object store",
+               [({}, life["ckpts_in_l3"])])
+        metric("icheck_l3_upload_failures_total", "counter",
+               "L2->L3 trickles that exhausted their retries",
+               [({}, life["l3_upload_failures"])])
+        metric("icheck_ckpts_expired_total", "counter",
+               "Checkpoint copies dropped by retention/GC",
+               [({}, life["ckpts_expired"])])
+        l3 = snap.get("l3")
+        if l3 is not None:
+            metric("icheck_l3_cost_usd", "gauge",
+                   "Accumulated object-store bill (requests + bytes)",
+                   [({}, l3["total_usd"])])
+            metric("icheck_l3_bytes_total", "counter",
+                   "Bytes moved to/from the object store",
+                   [({"direction": "in"}, l3["bytes_in"]),
+                    ({"direction": "out"}, l3["bytes_out"])])
+            metric("icheck_l3_requests_total", "counter",
+                   "Object-store requests issued",
+                   [({"op": "put"}, l3["put_requests"]),
+                    ({"op": "get"}, l3["get_requests"])])
         return "\n".join(out) + "\n"

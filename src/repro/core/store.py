@@ -9,15 +9,15 @@ pluggable :class:`~repro.core.tiers.StorageTier` pipeline — see
 """
 from __future__ import annotations
 
-from .tiers import (LocalDiskTier, MemoryTier, PFSTier, StorageTier,  # noqa: F401
-                    TierPipeline, crc32, decode_payload, encode_payload,
-                    resolve_codec)
+from .tiers import (LocalDiskTier, MemoryTier, PFSTier,  # noqa: F401
+                    RemoteObjectTier, StorageTier, TierPipeline, crc32,
+                    decode_payload, encode_payload, resolve_codec)
 
 MemoryStore = MemoryTier
 PFSStore = PFSTier
 
 __all__ = [
     "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
-    "StorageTier", "TierPipeline", "crc32", "encode_payload",
-    "decode_payload", "resolve_codec",
+    "RemoteObjectTier", "StorageTier", "TierPipeline", "crc32",
+    "encode_payload", "decode_payload", "resolve_codec",
 ]

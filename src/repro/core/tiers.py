@@ -4,10 +4,13 @@ The paper's two-level hierarchy — agent RAM (L1) drained into the parallel
 file system (L2, §II) — is generalised into a :class:`StorageTier` protocol
 so new levels can be added without touching the controller:
 
-  * :class:`MemoryTier`    — L1, iCheck-node RAM agents RDMA shards into
-  * :class:`LocalDiskTier` — L0.5, node-local spill (NVMe burst-buffer
+  * :class:`MemoryTier`       — L1, iCheck-node RAM agents RDMA shards into
+  * :class:`LocalDiskTier`    — L0.5, node-local spill (NVMe burst-buffer
     analogue) that absorbs capacity pressure before the RM must grow us
-  * :class:`PFSTier`       — L2, the bandwidth-limited PFS container format
+  * :class:`PFSTier`          — L2, the bandwidth-limited PFS container format
+  * :class:`RemoteObjectTier` — L3, S3/GCS-style remote object store: per-
+    request latency floor, multipart parallel throughput, effectively
+    unbounded capacity, per-byte/per-request cost accounting
 
 Every tier does crc32 + capacity accounting.  A per-node
 :class:`TierPipeline` owns shard placement across its tiers (spill on
@@ -384,6 +387,80 @@ def _manifest_path(root: str, app_id: str, ckpt_id: int) -> str:
     return os.path.join(root, app_id, f"ckpt_{ckpt_id:08d}", "MANIFEST.json")
 
 
+def _manifest_doc(meta: CheckpointMeta) -> dict:
+    """Serializable manifest document (shared by the PFS and L3 tiers)."""
+    return {
+        "app_id": meta.app_id,
+        "ckpt_id": meta.ckpt_id,
+        "step": meta.step,
+        "status": meta.status.value,
+        "userdata_hex": meta.userdata.hex(),
+        "regions": {
+            name: {
+                "shape": list(r.shape),
+                "dtype": r.dtype,
+                "nbytes": r.nbytes,
+                "codec": r.codec,
+                "partition": {
+                    "scheme": r.partition.scheme.value,
+                    "axis": r.partition.axis,
+                    "num_parts": r.partition.num_parts,
+                    "block": r.partition.block,
+                    "bounds": r.partition.bounds,
+                },
+            }
+            for name, r in meta.regions.items()
+        },
+    }
+
+
+def _meta_from_manifest(doc: dict) -> CheckpointMeta:
+    meta = CheckpointMeta(app_id=doc["app_id"], ckpt_id=doc["ckpt_id"],
+                          step=doc["step"], status=CkptStatus(doc["status"]),
+                          userdata=bytes.fromhex(doc.get("userdata_hex", "")))
+    for name, r in doc["regions"].items():
+        meta.regions[name] = RegionMeta(
+            name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
+            nbytes=r["nbytes"], codec=r.get("codec", "raw"),
+            partition=PartitionDesc(
+                scheme=PartitionScheme(r["partition"]["scheme"]),
+                axis=r["partition"]["axis"],
+                num_parts=r["partition"]["num_parts"],
+                block=r["partition"]["block"],
+                bounds=_tupled(r["partition"].get("bounds"))))
+    return meta
+
+
+def _write_manifest_file(root: str, meta: CheckpointMeta) -> None:
+    path = _manifest_path(root, meta.app_id, meta.ckpt_id)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(_manifest_doc(meta), f)
+    os.replace(tmp, path)
+
+
+def _read_manifest_file(root: str, app_id: str,
+                        ckpt_id: int) -> Optional[CheckpointMeta]:
+    path = _manifest_path(root, app_id, ckpt_id)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return _meta_from_manifest(json.load(f))
+
+
+def _list_manifest_ckpts(root: str, app_id: str) -> List[int]:
+    base = os.path.join(root, app_id)
+    if not os.path.isdir(base):
+        return []
+    out = []
+    for d in os.listdir(base):
+        if d.startswith("ckpt_") and os.path.exists(
+                os.path.join(base, d, "MANIFEST.json")):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
 class PFSTier:
     """Bandwidth-limited parallel-file-system tier.
 
@@ -519,71 +596,256 @@ class PFSTier:
 
     # -- manifests -----------------------------------------------------------
     def write_manifest(self, meta: CheckpointMeta) -> None:
-        doc = {
-            "app_id": meta.app_id,
-            "ckpt_id": meta.ckpt_id,
-            "step": meta.step,
-            "status": meta.status.value,
-            "userdata_hex": meta.userdata.hex(),
-            "regions": {
-                name: {
-                    "shape": list(r.shape),
-                    "dtype": r.dtype,
-                    "nbytes": r.nbytes,
-                    "codec": r.codec,
-                    "partition": {
-                        "scheme": r.partition.scheme.value,
-                        "axis": r.partition.axis,
-                        "num_parts": r.partition.num_parts,
-                        "block": r.partition.block,
-                        "bounds": r.partition.bounds,
-                    },
-                }
-                for name, r in meta.regions.items()
-            },
-        }
-        path = _manifest_path(self.root, meta.app_id, meta.ckpt_id)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f)
-        os.replace(tmp, path)
+        _write_manifest_file(self.root, meta)
 
     def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
-        path = _manifest_path(self.root, app_id, ckpt_id)
-        if not os.path.exists(path):
-            return None
-        with open(path) as f:
-            doc = json.load(f)
-        meta = CheckpointMeta(app_id=doc["app_id"], ckpt_id=doc["ckpt_id"],
-                              step=doc["step"], status=CkptStatus(doc["status"]),
-                              userdata=bytes.fromhex(doc.get("userdata_hex", "")))
-        for name, r in doc["regions"].items():
-            meta.regions[name] = RegionMeta(
-                name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
-                nbytes=r["nbytes"], codec=r.get("codec", "raw"),
-                partition=PartitionDesc(
-                    scheme=PartitionScheme(r["partition"]["scheme"]),
-                    axis=r["partition"]["axis"],
-                    num_parts=r["partition"]["num_parts"],
-                    block=r["partition"]["block"],
-                    bounds=_tupled(r["partition"].get("bounds"))))
-        return meta
+        return _read_manifest_file(self.root, app_id, ckpt_id)
 
     def list_checkpoints(self, app_id: str) -> List[int]:
-        base = os.path.join(self.root, app_id)
-        if not os.path.isdir(base):
-            return []
-        out = []
-        for d in os.listdir(base):
-            if d.startswith("ckpt_") and os.path.exists(os.path.join(base, d, "MANIFEST.json")):
-                out.append(int(d.split("_")[1]))
-        return sorted(out)
+        return _list_manifest_ckpts(self.root, app_id)
 
     def checkpoint_complete(self, meta: CheckpointMeta) -> bool:
         for name, region in meta.regions.items():
             for part in range(region.partition.num_parts):
                 if not self.has_shard(ShardKey(meta.app_id, meta.ckpt_id, name, part)):
+                    return False
+        return True
+
+
+# --------------------------------------------------------------------------
+# L3: remote object store (S3/GCS analogue)
+# --------------------------------------------------------------------------
+_OBJECT_MAGIC = b"ICO1"
+
+
+class RemoteObjectTier:
+    """Remote object store behind the PFS — the durability floor (L3).
+
+    What distinguishes an object store from the PFS, and what the lifecycle
+    policies have to reason about:
+
+      * every request pays a **latency floor** (``request_latency``, tens of
+        milliseconds of HTTP/TLS round-trip) regardless of size — small
+        objects are latency-bound, so restart cost is dominated by request
+        count, not bytes;
+      * a single connection is throughput-limited; large objects move as
+        **multipart** transfers of ``part_bytes`` chunks with up to
+        ``max_parallel_parts`` concurrent parts (the aggregate ``bandwidth``
+        is still shared with every other in-flight operation);
+      * capacity is **effectively unbounded** — ``put`` never raises
+        :class:`CapacityError`;
+      * nothing is free: ingress/egress bytes and every request are billed.
+        :meth:`cost_usd` and :meth:`cost_breakdown` expose the running total
+        so the retention policy's keep-last-K has a price signal.
+    """
+
+    name = "remote_object"
+    level = 3.0
+
+    def __init__(self, root: str, bandwidth: float = 5e9,
+                 request_latency: float = 0.03, part_bytes: int = 8 << 20,
+                 max_parallel_parts: int = 8, clock=None,
+                 put_request_usd: float = 5e-6, get_request_usd: float = 4e-7,
+                 egress_usd_per_gib: float = 0.09,
+                 ingress_usd_per_gib: float = 0.0):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.link = SimNIC("l3-object-store", bandwidth, latency=0.0,
+                           clock=clock)
+        self.request_latency = float(request_latency)
+        self.part_bytes = max(1, int(part_bytes))
+        self.max_parallel_parts = max(1, int(max_parallel_parts))
+        self.put_request_usd = float(put_request_usd)
+        self.get_request_usd = float(get_request_usd)
+        self.egress_usd_per_gib = float(egress_usd_per_gib)
+        self.ingress_usd_per_gib = float(ingress_usd_per_gib)
+        self._lock = threading.Lock()
+        self._bytes_in = 0
+        self._bytes_out = 0
+        self._put_requests = 0
+        self._get_requests = 0
+        # payload bytes resident, kept incrementally: used_bytes is read on
+        # every telemetry scrape and must not walk the whole object store.
+        # One walk at attach time picks up objects from a previous
+        # deployment (the cold-restart case).
+        self._used = 0
+        for key in self.keys():
+            self._used += self._object_size(key)
+
+    # -- cost accounting ----------------------------------------------------
+    def cost_breakdown(self) -> dict:
+        gib = float(1 << 30)
+        with self._lock:
+            bytes_in, bytes_out = self._bytes_in, self._bytes_out
+            puts, gets = self._put_requests, self._get_requests
+        return {
+            "bytes_in": bytes_in,
+            "bytes_out": bytes_out,
+            "put_requests": puts,
+            "get_requests": gets,
+            "ingress_usd": bytes_in / gib * self.ingress_usd_per_gib,
+            "egress_usd": bytes_out / gib * self.egress_usd_per_gib,
+            "request_usd": puts * self.put_request_usd
+            + gets * self.get_request_usd,
+        }
+
+    def cost_usd(self) -> float:
+        c = self.cost_breakdown()
+        return c["ingress_usd"] + c["egress_usd"] + c["request_usd"]
+
+    # -- transfer model -----------------------------------------------------
+    def _xfer(self, nbytes: int, outbound: bool) -> float:
+        """One object transfer: multipart waves of latency + shared bw."""
+        parts = max(1, -(-nbytes // self.part_bytes))
+        waves = -(-parts // self.max_parallel_parts)
+        lat = self.request_latency * waves
+        self.link.clock.sleep(lat)
+        dur = lat + self.link.transfer(nbytes)
+        with self._lock:
+            if outbound:
+                self._bytes_out += nbytes
+                self._get_requests += parts
+            else:
+                self._bytes_in += nbytes
+                self._put_requests += parts
+        return dur
+
+    # -- StorageTier protocol -----------------------------------------------
+    @property
+    def capacity(self) -> float:
+        return float("inf")
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    @property
+    def free_bytes(self) -> float:
+        return float("inf")
+
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        self.write_shard(key, payload, crc)
+
+    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+        return self.read_shard(key)
+
+    def has(self, key: ShardKey) -> bool:
+        return self.has_shard(key)
+
+    def _object_size(self, key: ShardKey) -> int:
+        """Resident payload bytes of one object (0 if absent)."""
+        try:
+            return max(os.path.getsize(_shard_path(self.root, key)) - 8, 0)
+        except OSError:
+            return 0
+
+    def drop(self, key: ShardKey) -> None:
+        freed = self._object_size(key)
+        try:
+            os.remove(_shard_path(self.root, key))
+        except OSError:
+            return
+        with self._lock:
+            self._used -= freed
+
+    def keys(self) -> List[ShardKey]:
+        out: List[ShardKey] = []
+        if not os.path.isdir(self.root):
+            return out
+        for app_id in os.listdir(self.root):
+            base = os.path.join(self.root, app_id)
+            if not os.path.isdir(base):
+                continue
+            for d in os.listdir(base):
+                if not d.startswith("ckpt_"):
+                    continue
+                ckpt_id = int(d.split("_")[1])
+                cdir = os.path.join(base, d)
+                for region in os.listdir(cdir):
+                    rdir = os.path.join(cdir, region)
+                    if not os.path.isdir(rdir):
+                        continue
+                    for fn in os.listdir(rdir):
+                        if fn.startswith("part_") and fn.endswith(".bin"):
+                            part = int(fn[5:-4])
+                            out.append(ShardKey(app_id, ckpt_id,
+                                                region.replace("__", "/"),
+                                                part))
+        return out
+
+    def drop_checkpoint(self, app_id: str, ckpt_id: int) -> int:
+        base = os.path.join(self.root, app_id, f"ckpt_{ckpt_id:08d}")
+        freed = 0
+        payload_freed = 0
+        if os.path.isdir(base):
+            for dirpath, _, files in os.walk(base):
+                for fn in files:
+                    try:
+                        size = os.path.getsize(os.path.join(dirpath, fn))
+                    except OSError:
+                        continue
+                    freed += size
+                    if fn.startswith("part_") and fn.endswith(".bin"):
+                        payload_freed += max(size - 8, 0)
+            shutil.rmtree(base, ignore_errors=True)
+            with self._lock:
+                self._used -= payload_freed
+        return freed
+
+    # -- object IO ----------------------------------------------------------
+    def write_shard(self, key: ShardKey, payload: bytes,
+                    crc: Optional[int] = None) -> float:
+        payload = bytes(payload)
+        crc = crc32(payload) if crc is None else crc
+        dur = self._xfer(len(payload), outbound=False)
+        old = self._object_size(key)
+        path = _shard_path(self.root, key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_OBJECT_MAGIC + crc.to_bytes(4, "little"))
+            f.write(payload)
+        os.replace(tmp, path)       # atomic publish, like a PUT completing
+        with self._lock:
+            self._used += len(payload) - old
+        return dur
+
+    def read_shard(self, key: ShardKey) -> bytes:
+        path = _shard_path(self.root, key)
+        with open(path, "rb") as f:
+            blob = f.read()
+        if blob[:4] != _OBJECT_MAGIC:
+            raise IntegrityError(f"bad object magic in {path}")
+        crc = int.from_bytes(blob[4:8], "little")
+        payload = blob[8:]
+        if crc32(payload) != crc:
+            raise IntegrityError(f"crc mismatch in {path}")
+        self._xfer(len(payload), outbound=True)
+        return payload
+
+    def has_shard(self, key: ShardKey) -> bool:
+        return os.path.exists(_shard_path(self.root, key))
+
+    # -- manifests (same container contract as the PFS tier) ---------------
+    def write_manifest(self, meta: CheckpointMeta) -> None:
+        with self._lock:
+            self._put_requests += 1
+        _write_manifest_file(self.root, meta)
+
+    def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
+        with self._lock:
+            self._get_requests += 1
+        return _read_manifest_file(self.root, app_id, ckpt_id)
+
+    def list_checkpoints(self, app_id: str) -> List[int]:
+        return _list_manifest_ckpts(self.root, app_id)
+
+    def checkpoint_complete(self, meta: CheckpointMeta) -> bool:
+        for name, region in meta.regions.items():
+            for part in range(region.partition.num_parts):
+                if not self.has_shard(ShardKey(meta.app_id, meta.ckpt_id,
+                                               name, part)):
                     return False
         return True
 
@@ -635,6 +897,11 @@ class TierPipeline:
 
     # -- mapping interface (MemoryStore-compatible) ------------------------
     def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> None:
+        # events are published only after the pipeline lock is released:
+        # a subscriber (e.g. the lifecycle service's watermark check) may
+        # synchronously take *other* pipelines' locks, and publishing
+        # under our lock would make that an ABBA deadlock
+        spilled_into = None
         with self._lock:
             last_err: Optional[CapacityError] = None
             for i, tier in enumerate(self.tiers):
@@ -644,23 +911,31 @@ class TierPipeline:
                     last_err = e
                     continue
                 if i > 0:
-                    self._publish(_events.SHARD_SPILLED, node=self.node_id,
-                                  tier=tier.name, key=str(key),
-                                  nbytes=len(payload))
+                    spilled_into = tier.name
                 # a put supersedes any stale copy in other tiers
                 for j, other in enumerate(self.tiers):
                     if j != i and other.has(key):
                         other.drop(key)
-                return
-            raise last_err if last_err is not None else CapacityError("no tiers")
+                break
+            else:
+                raise last_err if last_err is not None \
+                    else CapacityError("no tiers")
+        if spilled_into is not None:
+            self._publish(_events.SHARD_SPILLED, node=self.node_id,
+                          tier=spilled_into, key=str(key),
+                          nbytes=len(payload))
 
-    def get(self, key: ShardKey, verify: bool = True) -> bytes:
+    def get(self, key: ShardKey, verify: bool = True,
+            promote: bool = True) -> bytes:
+        """Top-down read; a lower-tier hit is promoted back into the fastest
+        tier unless ``promote=False`` (the drain path reads spilled shards
+        in place so it does not undo the watermark policy's demotions)."""
         with self._lock:
             for i, tier in enumerate(self.tiers):
                 if not tier.has(key):
                     continue
                 payload = tier.get(key, verify=verify)
-                if i > 0:
+                if i > 0 and promote:
                     self.promote(key, payload=payload, src=tier)
                 return payload
             raise KeyError(key)
@@ -710,19 +985,37 @@ class TierPipeline:
         return True
 
     def demote(self, key: ShardKey) -> bool:
-        """Push a shard from the fastest tier one level down (free RAM)."""
+        """Push a shard from the fastest tier one level down (free RAM).
+
+        A demotion that cannot happen publishes ``DEMOTE_FAILED`` with the
+        reason instead of only returning ``False`` — the lifecycle service's
+        watermark decisions have to stay observable.  Events are published
+        after the lock is released (see :meth:`put`).
+        """
+        failure = None
+        nbytes = 0
         with self._lock:
-            if len(self.tiers) < 2 or not self.tiers[0].has(key):
-                return False
-            payload = self.tiers[0].get(key, verify=False)
-            try:
-                self.tiers[1].put(key, payload)
-            except CapacityError:
-                return False
-            self.tiers[0].drop(key)
-        self._publish(_events.SHARD_SPILLED, node=self.node_id,
-                      tier=self.tiers[1].name, key=str(key),
-                      nbytes=len(payload))
+            if len(self.tiers) < 2:
+                failure = {"reason": "no_lower_tier"}
+            elif not self.tiers[0].has(key):
+                failure = {"reason": "not_resident"}
+            else:
+                payload = self.tiers[0].get(key, verify=False)
+                nbytes = len(payload)
+                try:
+                    self.tiers[1].put(key, payload)
+                except CapacityError:
+                    failure = {"reason": "lower_tier_full",
+                               "tier": self.tiers[1].name}
+                else:
+                    self.tiers[0].drop(key)
+        if failure is not None:
+            self._publish(_events.DEMOTE_FAILED, node=self.node_id,
+                          key=str(key), **failure)
+            return False
+        self._publish(_events.SHARD_DEMOTED, node=self.node_id,
+                      src=self.tiers[0].name, dst=self.tiers[1].name,
+                      key=str(key), nbytes=nbytes)
         return True
 
     def close(self) -> None:

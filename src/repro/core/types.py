@@ -41,6 +41,10 @@ class CkptStatus(str, enum.Enum):
     IN_L1 = "in_l1"              # complete in agent memory
     DRAINING = "draining"        # L1 -> L2 writeback in progress
     IN_L2 = "in_l2"              # durable on the PFS (may also still be in L1)
+    IN_L3 = "in_l3"              # durable in the remote object store (and
+    #                              possibly still in L2/L1 until retention
+    #                              trims those copies)
+    EXPIRED = "expired"          # retention dropped it from every tier
     FAILED = "failed"
 
 
@@ -146,6 +150,8 @@ class CheckpointMeta:
     # extra payload the application wants back verbatim on restart
     # (step counters, RNG keys, data-iterator cursors, ...)
     userdata: bytes = b""
+    # pinned checkpoints are exempt from retention/GC on every tier
+    pinned: bool = False
 
     def expected_shards(self) -> int:
         return sum(m.partition.num_parts for m in self.regions.values())

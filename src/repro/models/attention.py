@@ -25,20 +25,46 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array                      # (B, Hkv, S, D) -- bf16, or int8 codes
     v: jax.Array
-    ks: Optional[jax.Array] = None    # int8 mode: (B, Hkv, S, 1) f32 scales
-    vs: Optional[jax.Array] = None
+    ks: Optional[jax.Array] = None    # int8 mode: (B, Hkv, S, D/blk) f16
+    vs: Optional[jax.Array] = None    # scales (see _q8)
+
+
+# Scale granularity of the int8 KV cache: one f16 scale per head, per
+# position, per `_Q8_SCALE_BLOCK` contiguous head dims.  A single
+# per-position scale (the old scheme) lets one outlier dim set the step for
+# the whole vector; on the seamless (frames/cross-attention) arch the
+# resulting ~1.4e-2 logit noise exceeded near-tie argmax gaps and decode
+# diverged.  Sub-head blocks cut the error ~2-3x; f16 scales keep the
+# quantized cache well under half the f32 cache (scale error ~2^-11 is
+# negligible next to int8 rounding at 1/254).
+_Q8_SCALE_BLOCK = 4
+
+
+def _q8_block(head_dim: int) -> int:
+    """Scale-block size for a head dim (whole head when not divisible)."""
+    return _Q8_SCALE_BLOCK if head_dim % _Q8_SCALE_BLOCK == 0 else head_dim
 
 
 def _q8(x):
-    """Per-position int8 quantization along the head dim.
+    """Blockwise int8 quantization along the head dim.
 
-    x: (..., D) -> (codes int8, scales f32 (..., 1)).  Exactly factorable
-    in attention: (q . k_q) * scale == q . (k_q * scale)."""
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    x: (..., D) -> (codes int8 (..., D), scales f16 (..., D/blk)),
+    symmetric absmax scaling per block."""
+    d = x.shape[-1]
+    blk = _q8_block(d)
+    xf = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // blk, blk))
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
     scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
-                     -127, 127).astype(jnp.int8)
-    return codes, scale
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(x.shape), scale[..., 0].astype(jnp.float16)
+
+
+def _dq(codes, scales):
+    """Dequantize _q8 output to f32 (codes (..., D), scales (..., D/blk))."""
+    d = codes.shape[-1]
+    nb = scales.shape[-1]
+    xf = codes.astype(jnp.float32).reshape(codes.shape[:-1] + (nb, d // nb))
+    return (xf * scales.astype(jnp.float32)[..., None]).reshape(codes.shape)
 
 
 def attn_init(key, d_model, num_heads, num_kv_heads, head_dim,
@@ -126,8 +152,9 @@ def cross_kv(params, enc_out, num_kv_heads, head_dim, dtype):
 def init_kv_cache(batch, num_kv_heads, max_len, head_dim, dtype,
                   quant: bool = False):
     if quant:
+        nb = head_dim // _q8_block(head_dim)
         z = jnp.zeros((batch, num_kv_heads, max_len, head_dim), jnp.int8)
-        s = jnp.ones((batch, num_kv_heads, max_len, 1), jnp.float32)
+        s = jnp.ones((batch, num_kv_heads, max_len, nb), jnp.float16)
         return KVCache(k=z, v=z, ks=s, vs=s)
     z = jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype)
     return KVCache(k=z, v=z)
@@ -192,15 +219,17 @@ def attn_decode(params, x, cache: KVCache, idx, *, num_heads, num_kv_heads,
                 cache.v, v_new.astype(cache.v.dtype), (0, 0, slot, 0))
             cache = KVCache(k=k_buf, v=v_buf, ks=cache.ks, vs=cache.vs)
 
-    # einsum attention over the cache (GQA via head grouping)
+    # einsum attention over the cache (GQA via head grouping).  int8 caches
+    # dequantize blockwise first -- the cache was being materialized to f32
+    # for the contraction anyway, and per-sub-block scales cannot be
+    # factored out of the dot product the way a whole-vector scale could
     g = num_heads // num_kv_heads
     qg = q.reshape(b, num_kv_heads, g, head_dim)
-    kf = cache.k.astype(jnp.float32)
-    vf = cache.v.astype(jnp.float32)
+    kf = _dq(cache.k, cache.ks) if cache.ks is not None \
+        else cache.k.astype(jnp.float32)
+    vf = _dq(cache.v, cache.vs) if cache.vs is not None \
+        else cache.v.astype(jnp.float32)
     scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32) * scale, kf)
-    if cache.ks is not None:
-        # factor the per-position scales out of the int8 contraction
-        scores = scores * cache.ks[:, :, None, :, 0]
     kpos = jnp.arange(s)
     if cross:
         valid = kpos[None, None, None, :] >= 0   # whole prefilled cache
@@ -211,8 +240,6 @@ def attn_decode(params, x, cache: KVCache, idx, *, num_heads, num_kv_heads,
         valid = kpos[None, None, None, :] <= idx
     scores = jnp.where(valid, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
-    if cache.vs is not None:
-        p = p * cache.vs[:, :, None, :, 0]
     o = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
     o = o.reshape(b, 1, num_heads * head_dim).astype(x.dtype)
     out = o @ params["wo"].astype(x.dtype)

@@ -13,11 +13,7 @@ from repro.models import decode_step, init_cache, init_params, prefill
 
 
 @pytest.mark.parametrize("arch", [
-    "deepseek-7b", "yi-6b", "recurrentgemma-9b",
-    pytest.param("seamless-m4t-medium", marks=pytest.mark.xfail(
-        reason="pre-existing int8 KV numeric bug on the frames/"
-               "cross-attention arch (see ROADMAP known issue)",
-        strict=False)),
+    "deepseek-7b", "yi-6b", "recurrentgemma-9b", "seamless-m4t-medium",
 ])
 def test_int8_kv_matches_exact(arch):
     cfg = get_config(arch, tiny=True)

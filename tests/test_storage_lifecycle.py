@@ -1,0 +1,391 @@
+"""Storage lifecycle subsystem: the L3 remote-object tier, watermark-driven
+demotion, the background L2→L3 trickle, retention/GC with pinning, and the
+L3 cold-restart read path (plus the codec-degradation satellite tests)."""
+import numpy as np
+import pytest
+
+from repro.core import ICheckClient, ICheckCluster
+from repro.core import events as E
+from repro.core import tiers as tiers_mod
+from repro.core.simnet import SimClock
+from repro.core.tiers import (LocalDiskTier, MemoryTier, RemoteObjectTier,
+                              TierPipeline, resolve_codec)
+from repro.core.types import (CheckpointMeta, CkptStatus, PartitionDesc,
+                              RegionMeta, ShardKey)
+
+
+def _key(i=0, ckpt=0, app="app"):
+    return ShardKey(app, ckpt, "x", i)
+
+
+def _parts(data, n):
+    return {i: p for i, p in enumerate(np.array_split(data, n))}
+
+
+def _events(cluster):
+    return [e["event"] for e in cluster.controller.events]
+
+
+# ========================================================== RemoteObjectTier
+def test_remote_object_tier_roundtrip_and_manifest(tmp_path):
+    clock = SimClock()
+    l3 = RemoteObjectTier(str(tmp_path / "l3"), bandwidth=1e9,
+                          request_latency=0.05, clock=clock)
+    payload = np.arange(1000, dtype=np.int64).tobytes()
+    t0 = clock.now()
+    l3.put(_key(0), payload)
+    assert clock.now() - t0 >= 0.05          # request latency floor paid
+    assert l3.get(_key(0)) == payload
+    assert l3.has(_key(0)) and not l3.has(_key(1))
+    assert l3.free_bytes == float("inf")     # never raises CapacityError
+
+    meta = CheckpointMeta(app_id="app", ckpt_id=0, step=7,
+                          status=CkptStatus.IN_L3, userdata=b"\x01\x02")
+    meta.regions["x"] = RegionMeta(
+        name="x", shape=(1000,), dtype="int64", nbytes=8000, codec="raw",
+        partition=PartitionDesc(num_parts=1))
+    l3.write_manifest(meta)
+    back = l3.read_manifest("app", 0)
+    assert back.step == 7 and back.userdata == b"\x01\x02"
+    assert back.regions["x"].nbytes == 8000
+    assert l3.list_checkpoints("app") == [0]
+    assert l3.checkpoint_complete(back)
+    assert l3.drop_checkpoint("app", 0) > 0
+    assert not l3.has(_key(0))
+
+
+def test_remote_object_tier_multipart_latency_and_cost(tmp_path):
+    clock = SimClock()
+    l3 = RemoteObjectTier(str(tmp_path / "l3"), bandwidth=1e9,
+                          request_latency=0.01, part_bytes=1 << 20,
+                          max_parallel_parts=4, clock=clock)
+    # 8 MiB = 8 parts = 2 waves of 4 parallel parts -> 2 latency floors
+    nbytes = 8 << 20
+    l3.put(_key(0), bytes(nbytes))
+    c = l3.cost_breakdown()
+    assert c["put_requests"] == 8
+    assert c["bytes_in"] == nbytes
+    l3.get(_key(0))
+    c = l3.cost_breakdown()
+    assert c["get_requests"] == 8
+    assert c["bytes_out"] == nbytes
+    assert c["egress_usd"] > 0 and l3.cost_usd() > 0
+    # incremental used_bytes accounting (no fs walk per telemetry scrape),
+    # including the attach-time pickup of a pre-existing root
+    assert l3.used_bytes == nbytes
+    l3b = RemoteObjectTier(str(tmp_path / "l3"), clock=clock)
+    assert l3b.used_bytes == nbytes
+    assert l3.drop_checkpoint("app", 0) > 0
+    assert l3.used_bytes == 0
+
+
+# ========================================================= demotion events
+def test_demote_failed_published_with_reason(tmp_path):
+    from repro.core.events import EventBus
+    bus = EventBus(SimClock())
+    seen = []
+    bus.subscribe(lambda ev: seen.append(ev), events=(E.DEMOTE_FAILED,
+                                                      E.SHARD_DEMOTED))
+    # single tier: nowhere to demote
+    pipe1 = TierPipeline([MemoryTier(1000)], bus=bus, node_id="n0")
+    pipe1.put(_key(0), bytes(10))
+    assert not pipe1.demote(_key(0))
+    assert seen[-1].name == E.DEMOTE_FAILED
+    assert seen[-1].payload["reason"] == "no_lower_tier"
+    # shard not resident in the fast tier
+    pipe2 = TierPipeline([MemoryTier(1000),
+                          LocalDiskTier(str(tmp_path / "d"), 1000)],
+                         bus=bus, node_id="n0")
+    assert not pipe2.demote(_key(1))
+    assert seen[-1].payload["reason"] == "not_resident"
+    # lower tier full
+    pipe3 = TierPipeline([MemoryTier(1000),
+                          LocalDiskTier(str(tmp_path / "d2"), 4)],
+                         bus=bus, node_id="n0")
+    pipe3.put(_key(2), bytes(10))
+    assert not pipe3.demote(_key(2))
+    assert seen[-1].payload["reason"] == "lower_tier_full"
+    # and the success path announces SHARD_DEMOTED with src/dst
+    pipe2.put(_key(3), bytes(10))
+    assert pipe2.demote(_key(3))
+    assert seen[-1].name == E.SHARD_DEMOTED
+    assert seen[-1].payload["src"] == "memory"
+    assert seen[-1].payload["dst"] == "local_disk"
+
+
+# ====================================================== watermark demotion
+def test_watermark_demotion_avoids_rm_escalation():
+    """Proactive demotion keeps commits landing in L1: no CapacityError, no
+    RM escalation, cluster stays at one node."""
+    payload = 5 << 20
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=2,
+                       node_memory=8 << 20, spill_bytes=64 << 20,
+                       watermark_high=0.5, watermark_low=0.2,
+                       keep_l1=1) as c:
+        client = ICheckClient("app", c.controller, ranks=4).init(
+            ckpt_bytes_estimate=payload)
+        data = np.arange(payload // 4, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=4)
+        for step in range(5):
+            client.commit(step, {"x": _parts(data + step, 4)}, blocking=True)
+            c.controller.wait_for_drains(timeout=30)
+        events = _events(c)
+        assert "shard_demoted" in events
+        assert "watermark_crossed" in events
+        assert "capacity_grow" not in events          # no RM escalation
+        assert "node_request_denied" not in events
+        assert len(c.controller.managers()) == 1
+        # hysteresis: every high crossing is matched by a low announcement
+        marks = [e for e in c.controller.events
+                 if e["event"] == "watermark_crossed"]
+        highs = [m for m in marks if m["direction"] == "high"]
+        lows = [m for m in marks if m["direction"] == "low"]
+        assert highs and len(lows) == len(highs)
+        assert all(m["occupancy"] <= 0.2 + 1e-9 for m in lows)
+        # telemetry counted the lifecycle activity
+        life = c.telemetry.snapshot()["lifecycle"]
+        assert life["shard_demotions"] > 0
+        assert life["watermark_crossings_high"] == len(highs)
+        # restart still healthy (shards live across the node's tiers)
+        meta, parts, level = client.restart()
+        got = np.concatenate([parts["x"][i] for i in range(4)])
+        np.testing.assert_array_equal(got, data + meta.step)
+        client.finalize()
+
+
+def test_watermark_hysteresis_no_churn_between_marks():
+    """Occupancy between low and high must not trigger demotion."""
+    payload = 2 << 20          # 25% of an 8 MiB node: between 0.2 and 0.5
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       node_memory=8 << 20, spill_bytes=64 << 20,
+                       watermark_high=0.5, watermark_low=0.2) as c:
+        client = ICheckClient("app", c.controller, ranks=2).init(
+            ckpt_bytes_estimate=payload)
+        data = np.arange(payload // 4, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        client.commit(0, {"x": _parts(data, 2)}, blocking=True)
+        c.controller.wait_for_drains(timeout=30)
+        assert "shard_demoted" not in _events(c)
+        assert "watermark_crossed" not in _events(c)
+        client.finalize()
+
+
+# ==================================================== L2->L3 trickle + GC
+def test_trickle_to_l3_and_retention():
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20, l3=True,
+                       keep_l2=1, keep_l3=2) as c:
+        client = ICheckClient("app", c.controller, ranks=4).init(
+            ckpt_bytes_estimate=4 << 20)
+        data = np.arange(1 << 20, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=4)
+        for step in range(4):
+            client.commit(step, {"x": _parts(data + step, 4)}, blocking=True)
+            c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        events = _events(c)
+        assert events.count("ckpt_in_l3") == 4
+        app = c.controller.app("app")
+        # keep_l3=2: ckpts 0,1 expired terminally; 2,3 durable in L3
+        assert app.checkpoints[0].status == CkptStatus.EXPIRED
+        assert app.checkpoints[1].status == CkptStatus.EXPIRED
+        assert app.checkpoints[2].status == CkptStatus.IN_L3
+        assert app.checkpoints[3].status == CkptStatus.IN_L3
+        assert c.l3.list_checkpoints("app") == [2, 3]
+        # keep_l2=1: only the newest surviving ckpt keeps its PFS copy
+        assert not c.pfs.checkpoint_complete(app.checkpoints[2])
+        assert c.pfs.checkpoint_complete(app.checkpoints[3])
+        expiries = [e for e in c.controller.events
+                    if e["event"] == "ckpt_expired"]
+        assert any(e["tier"] == "remote_object" and e["terminal"]
+                   for e in expiries)
+        assert any(e["tier"] == "pfs" and not e["terminal"]
+                   for e in expiries)
+        # telemetry: L3 cost accounting is exported
+        snap = c.telemetry.snapshot()
+        assert snap["lifecycle"]["ckpts_in_l3"] == 4
+        assert snap["l3"]["put_requests"] > 0
+        prom = c.telemetry.prometheus()
+        assert "icheck_ckpts_in_l3_total 4" in prom
+        assert "icheck_l3_cost_usd" in prom
+        client.finalize()
+
+
+def test_pinned_checkpoint_survives_retention():
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20, l3=True, keep_l3=1) as c:
+        client = ICheckClient("app", c.controller, ranks=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.arange(1 << 18, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        h = client.commit(0, {"x": _parts(data, 2)}, blocking=True)
+        assert c.controller.pin_checkpoint("app", h.ckpt_id)
+        c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        for step in range(1, 4):
+            client.commit(step, {"x": _parts(data + step, 2)}, blocking=True)
+            c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        app = c.controller.app("app")
+        # pinned ckpt 0 still in L3 despite keep_l3=1; ckpts 1,2 expired
+        assert app.checkpoints[0].status == CkptStatus.IN_L3
+        assert app.checkpoints[1].status == CkptStatus.EXPIRED
+        assert app.checkpoints[2].status == CkptStatus.EXPIRED
+        assert 0 in c.l3.list_checkpoints("app")
+        client.finalize()
+
+
+def test_trickle_failure_is_retried_then_announced():
+    """An L3 outage must not silently strand a checkpoint: the trickle
+    retries, then publishes l3_upload_failed; the checkpoint stays IN_L2."""
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       node_memory=64 << 20, l3=True) as c:
+        calls = []
+
+        def down(*a, **k):
+            calls.append(1)
+            raise OSError("object store unreachable")
+
+        c.l3.write_shard = down
+        client = ICheckClient("app", c.controller, ranks=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.arange(1 << 16, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        client.commit(0, {"x": _parts(data, 2)}, blocking=True)
+        c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        failures = [e for e in c.controller.events
+                    if e["event"] == "l3_upload_failed"]
+        assert len(failures) == 1
+        assert failures[0]["attempts"] == 3
+        assert len(calls) == 3          # one write attempt per retry
+        app = c.controller.app("app")
+        assert app.checkpoints[0].status == CkptStatus.IN_L2
+        assert c.telemetry.snapshot()["lifecycle"]["l3_upload_failures"] == 1
+        client.finalize()
+
+
+# ======================================================= L3 restart paths
+def test_restart_from_l3_with_promote_on_read():
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20, l3=True, keep_l2=1) as c:
+        client = ICheckClient("app", c.controller, ranks=4).init(
+            ckpt_bytes_estimate=4 << 20)
+        data = np.arange(1 << 20, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=4)
+        for step in range(2):
+            client.commit(step, {"x": _parts(data + step, 4)}, blocking=True)
+            c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        # evict L1 (kill agents AND drop the node stores — the health
+        # monitor replaces dead agents on the same store) and trim the PFS
+        # copies: only L3 can serve ckpt 1
+        for mgr in c.controller.managers():
+            for agent in list(mgr.agents()):
+                c.fault.kill_agent(agent.agent_id)
+            for ck in (0, 1):
+                mgr.store.drop_checkpoint("app", ck)
+        for ck in (0, 1):
+            c.pfs.drop_checkpoint("app", ck)
+        meta, parts, level = client.restart()
+        assert level == "l3" and meta.ckpt_id == 1
+        got = np.concatenate([parts["x"][i] for i in range(4)])
+        np.testing.assert_array_equal(got, data + 1)
+        # promote-on-read repopulated the PFS copy shard by shard
+        assert c.pfs.checkpoint_complete(meta)
+        assert "shard_promoted" in _events(c)
+        meta2, _, level2 = client.restart()
+        assert meta2.ckpt_id == 1 and level2 == "l2"
+        client.finalize()
+
+
+def test_cold_restart_scans_l3_when_l2_empty(tmp_path):
+    """A brand-new controller with an empty PFS finds checkpoints by
+    scanning the object store's manifests (the durability floor)."""
+    pfs_root = str(tmp_path / "pfs")
+    l3_root = str(tmp_path / "l3")
+    data = np.arange(1 << 18, dtype=np.float32)
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20, pfs_root=pfs_root,
+                       l3_root=l3_root) as c:
+        client = ICheckClient("app", c.controller, ranks=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        client.commit(3, {"x": _parts(data, 2)}, blocking=True)
+        c.controller.wait_for_drains(timeout=30)
+        c.controller.wait_for_uploads(timeout=30)
+        client.finalize()
+    # simulate losing the PFS (recycled scratch): only the object store
+    # survives into the new deployment
+    import shutil
+    shutil.rmtree(pfs_root)
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20, pfs_root=pfs_root,
+                       l3_root=l3_root) as c2:
+        client = ICheckClient("app", c2.controller, ranks=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        found = client.restart()
+        assert found is not None
+        meta, parts, level = found
+        assert level == "l3" and meta.step == 3
+        got = np.concatenate([parts["x"][i] for i in range(2)])
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+# ============================================== codec degradation satellite
+def test_zstd_degradation_emits_exactly_one_event(monkeypatch):
+    """resolve_codec's zstd→none fallback is announced exactly once per
+    resolution, with requested/actual in the payload."""
+    monkeypatch.setattr(tiers_mod, "_zstd", None)
+    calls = []
+    actual = resolve_codec("zstd", on_degrade=lambda req, act:
+                           calls.append((req, act)))
+    assert actual == "none"
+    assert calls == [("zstd", "none")]
+    # through the client: one codec_degraded event on the bus at init, and
+    # none again at commit time (the client's codec is already "none")
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       node_memory=64 << 20) as c:
+        client = ICheckClient("app", c.controller, ranks=2,
+                              codec="zstd").init(ckpt_bytes_estimate=1 << 20)
+        assert client.codec == "none"
+        data = np.arange(1 << 16, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        client.commit(0, {"x": _parts(data, 2)}, blocking=True)
+        degraded = [e for e in c.controller.events
+                    if e["event"] == "codec_degraded"]
+        assert len(degraded) == 1
+        assert degraded[0]["requested"] == "zstd"
+        assert degraded[0]["actual"] == "none"
+        client.finalize()
+
+
+@pytest.mark.parametrize("codec", ["none", "q8"])
+def test_manifest_codec_roundtrips_restart(tmp_path, codec):
+    """A PFS manifest written with a codec restores correctly on a fresh
+    controller: the manifest's region codec drives the decode path."""
+    pfs_root = str(tmp_path / "pfs")
+    # int data: q8 falls back to its lossless raw framing, so equality is
+    # exact for both codecs while still exercising the codec machinery
+    data = np.arange(1 << 16, dtype=np.int32)
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       node_memory=64 << 20, pfs_root=pfs_root) as c:
+        client = ICheckClient("app", c.controller, ranks=2,
+                              codec=codec).init(ckpt_bytes_estimate=1 << 20)
+        client.add_adapt("x", data.shape, "int32", num_parts=2)
+        client.commit(0, {"x": _parts(data, 2)}, blocking=True)
+        c.controller.wait_for_drains(timeout=30)
+        manifest = c.pfs.read_manifest("app", 0)
+        assert manifest.regions["x"].codec == codec
+        client.finalize()
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       node_memory=64 << 20, pfs_root=pfs_root) as c2:
+        client = ICheckClient("app", c2.controller, ranks=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        meta, parts, level = client.restart()
+        assert level == "l2"
+        assert meta.regions["x"].codec == codec
+        got = np.concatenate([parts["x"][i] for i in range(2)])
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
