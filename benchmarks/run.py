@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-from . import (bench_async_overlap, bench_codec, bench_multiapp,
+from . import (bench_async_overlap, bench_codec, bench_delta, bench_multiapp,
                bench_redistribution, bench_restart, bench_serving,
                bench_tiering, bench_transfer, roofline)
 
@@ -33,12 +33,15 @@ ALL = {
     "b7": ("roofline table", roofline.run),
     "b8": ("serving decode", bench_serving.run),
     "b9": ("storage lifecycle tiering", bench_tiering.run),
+    "b10": ("incremental delta checkpointing", bench_delta.run),
 }
 
 SMOKE = {
     "b1": ("agent-count transfer knee (smoke)", bench_transfer.run_smoke),
     "b2": ("async commit overlap (smoke)", bench_async_overlap.run_smoke),
     "b9": ("storage lifecycle tiering (smoke)", bench_tiering.run_smoke),
+    "b10": ("incremental delta checkpointing (smoke)",
+            bench_delta.run_smoke),
 }
 
 SMOKE_JSON = "BENCH_smoke.json"
@@ -65,6 +68,17 @@ def smoke_metrics(results: dict) -> dict:
             b9["l3_restart"]["l2"]["rate_Bps"]
         metrics["b9_l3_restart_rate_Bps"] = \
             b9["l3_restart"]["l3_cold"]["rate_Bps"]
+    b10 = results.get("b10")
+    if b10:
+        low, high = b10["low_churn"], b10["high_churn"]
+        metrics["b10_delta_lowchurn_wire_ratio"] = \
+            low["q8-delta"]["wire_reduction_vs_raw"]
+        metrics["b10_delta_commit_rate_Bps"] = \
+            low["q8-delta"]["commit_rate_Bps"]
+        # >=1 means q8-delta never ships more bytes than plain q8
+        metrics["b10_delta_highchurn_vs_q8"] = (
+            high["q8"]["steady_wire_bytes"]
+            / max(high["q8-delta"]["steady_wire_bytes"], 1))
     return metrics
 
 

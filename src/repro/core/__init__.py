@@ -23,14 +23,15 @@ from .services import (IntervalController, StorageLifecycleService,
                        TelemetryService, daly_interval, young_interval)
 from .simnet import EWMA, FaultInjector, SimClock, SimNIC
 from .snapshot import HostSnapshot, restore_pytree, snapshot_pytree
-from .tiers import (LocalDiskTier, MemoryTier, PFSTier, RemoteObjectTier,
-                    StorageTier, TierPipeline, crc32, decode_payload,
-                    encode_payload, resolve_codec)
+from .tiers import (DeltaState, EncodedRegion, LocalDiskTier, MemoryTier,
+                    PFSTier, RemoteObjectTier, StorageTier, TierPipeline,
+                    crc32, decode_payload, encode_delta_region,
+                    encode_payload, q8_chain_decode, resolve_codec)
 from .store import MemoryStore, PFSStore
 from .types import (AppRecord, AppStatus, CheckpointMeta, CkptStatus,
                     ICheckError, IntegrityError, CapacityError, NodeSpec,
-                    PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
-                    ShardKey)
+                    PartitionDesc, PartitionScheme, RegionMeta, RestoreError,
+                    ShardInfo, ShardKey)
 
 __all__ = [
     "Agent", "AgentDead", "CommitHandle", "ICheckClient", "ICheckCluster",
@@ -46,8 +47,9 @@ __all__ = [
     "SimClock", "SimNIC", "HostSnapshot", "restore_pytree", "snapshot_pytree",
     "MemoryStore", "PFSStore", "MemoryTier", "PFSTier", "LocalDiskTier",
     "RemoteObjectTier", "StorageTier", "TierPipeline", "crc32", "encode_payload",
-    "decode_payload", "resolve_codec", "AppRecord", "AppStatus",
+    "decode_payload", "resolve_codec", "DeltaState", "EncodedRegion",
+    "encode_delta_region", "q8_chain_decode", "AppRecord", "AppStatus",
     "CheckpointMeta", "CkptStatus", "ICheckError", "IntegrityError",
     "CapacityError", "NodeSpec", "PartitionDesc", "PartitionScheme",
-    "RegionMeta", "ShardInfo", "ShardKey",
+    "RegionMeta", "RestoreError", "ShardInfo", "ShardKey",
 ]

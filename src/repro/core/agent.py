@@ -9,7 +9,10 @@ An Agent here is a worker thread bound to an iCheck node's storage tiers
 (a ``TierPipeline``: L1 RAM + optional L0.5 local-disk spill) and NIC.
 Writes (RDMA puts from the application) and L2 drains run through its
 queue; reads for restart/redistribution are served concurrently off the
-thread-safe tiers with simulated NIC time.  All payloads are real bytes.
+thread-safe tiers with simulated NIC time.  All payloads are real bytes —
+and opaque: with the ``q8``/``q8-delta`` codecs the client ships int8
+(sparse-delta) wire frames, so agents, drains and every tier move the
+already-compressed bytes and never re-encode.
 """
 from __future__ import annotations
 

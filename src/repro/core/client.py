@@ -19,8 +19,10 @@ controller.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -30,10 +32,12 @@ from . import events as E
 from . import plan as planlib
 from .agent import Agent, AgentDead
 from .controller import Controller
-from .tiers import crc32, decode_payload, encode_payload, resolve_codec
+from .tiers import (EncodedRegion, crc32, decode_payload, encode_delta_region,
+                    encode_payload, q8_chain_decode, q8_repack_key,
+                    resolve_codec)
 from .types import (AppId, CapacityError, CheckpointMeta, ICheckError,
-                    PartitionDesc, PartitionScheme, RegionMeta, ShardInfo,
-                    ShardKey)
+                    PartitionDesc, PartitionScheme, RegionMeta, RestoreError,
+                    ShardInfo, ShardKey)
 
 
 class CommitHandle:
@@ -94,6 +98,13 @@ class CommitHandle:
                             sim_s=self.sim_duration, retries=self.retries)
         except BaseException as e:  # noqa: BLE001
             self._error = e
+            # the catalog may hold delta-chain state referencing this
+            # checkpoint's frames; marking it failed publishes CKPT_FAILED,
+            # which resets the app's chains (next commit = keyframe)
+            try:
+                ctl.catalog.mark_failed(self.meta.app_id, self.meta.ckpt_id)
+            except Exception:   # noqa: BLE001 - never mask the commit error
+                pass
         finally:
             self._done.set()
 
@@ -139,11 +150,15 @@ class CommitHandle:
 class ICheckClient:
     def __init__(self, app_id: AppId, controller: Controller, ranks: int = 1,
                  replication: int = 1, codec: str = "raw",
-                 ckpt_interval_s: float = 60.0):
+                 ckpt_interval_s: float = 60.0,
+                 keyframe_every: Optional[int] = None):
         self.app_id = app_id
         self.controller = controller
         self.ranks = ranks
         self.replication = max(1, replication)
+        # q8-delta keyframe cadence override (None = controller default):
+        # a full q8 keyframe every K commits bounds restart replay length
+        self.keyframe_every = keyframe_every
         # codec resolution is part of the tier pipeline now: a requested
         # codec this process can't run (e.g. zstd without zstandard) degrades
         # to "none" with an audit event instead of mis-labelling shards
@@ -174,6 +189,9 @@ class ICheckClient:
         self.agents = self.controller.register_app(
             self.app_id, self.ranks, ckpt_bytes_estimate=ckpt_bytes_estimate,
             ckpt_interval_s=self.ckpt_interval_s, replication=self.replication)
+        if self.keyframe_every is not None:
+            self.controller.set_delta_keyframe_every(self.app_id,
+                                                     self.keyframe_every)
         self._initialized = True
         return self
 
@@ -220,52 +238,202 @@ class ICheckClient:
     def commit(self, step: int,
                parts_by_region: Dict[str, Dict[int, np.ndarray]],
                userdata: bytes = b"", blocking: bool = False,
-               drain: bool = True) -> CommitHandle:
+               drain: bool = True,
+               encoded: Optional[Dict[str, EncodedRegion]] = None
+               ) -> CommitHandle:
         """icheck_commit(): notify agents, return immediately.
 
         ``parts_by_region[name][part]`` is the local array of that part
-        (what each application rank holds).
+        (what each application rank holds).  ``encoded`` carries regions
+        whose wire frames were already produced device-side
+        (:func:`repro.core.snapshot.snapshot_pytree` with a q8 codec) — the
+        commit path then only threads chain bookkeeping, no re-encode.
+
+        With ``codec="q8-delta"`` each float region travels as a sparse
+        XOR-delta frame against the catalog's previous-codes state (full
+        keyframe every K commits, after a chain reset, or when churn makes
+        the delta no smaller than a keyframe).
         """
         if not self._initialized:
             raise ICheckError("call init() first")
-        metas = {}
-        for name, parts in parts_by_region.items():
+        encoded = dict(encoded or {})
+        overlap = set(encoded) & set(parts_by_region)
+        if overlap:
+            raise ICheckError(f"regions {sorted(overlap)} passed both raw "
+                              f"and pre-encoded")
+        ctl = self.controller
+        metas: Dict[str, RegionMeta] = {}
+        for name in (*parts_by_region, *encoded):
             if name not in self.regions:
                 raise ICheckError(f"region {name!r} was not add_adapt()ed")
             meta = self.regions[name]
-            if len(parts) != meta.partition.num_parts:
+            n_given = len(parts_by_region[name]) if name in parts_by_region \
+                else len(encoded[name].blobs)
+            if n_given != meta.partition.num_parts:
                 raise ICheckError(
-                    f"region {name!r}: got {len(parts)} parts, expected "
+                    f"region {name!r}: got {n_given} parts, expected "
                     f"{meta.partition.num_parts}")
-            metas[name] = meta
-        ckpt = self.controller.new_checkpoint(self.app_id, step, metas,
-                                              userdata=userdata)
-        agents = self.controller.agents_for(self.app_id)
-        if not agents:
-            raise ICheckError("no agents assigned")
-        puts: List[Tuple[ShardKey, bytes, Agent]] = []
-        for name, parts in parts_by_region.items():
             # a region restored from a manifest may carry a codec this
             # process can't run (e.g. zstd without zstandard): degrade it
             # here so the new shards and manifest stay self-consistent
-            metas[name].codec = resolve_codec(
-                metas[name].codec, on_degrade=lambda req, actual:
-                self.controller.bus.publish(E.CODEC_DEGRADED, app=self.app_id,
-                                            region=name, requested=req,
-                                            actual=actual))
-            for part, arr in parts.items():
-                payload = encode_payload(np.ascontiguousarray(arr).tobytes(),
-                                         metas[name].codec, metas[name].dtype)
+            meta.codec = resolve_codec(
+                meta.codec, on_degrade=lambda req, actual, name=name:
+                ctl.bus.publish(E.CODEC_DEGRADED, app=self.app_id,
+                                region=name, requested=req, actual=actual))
+            if meta.codec == "q8-delta" or name in encoded:
+                # per-commit copy: frame/chain bookkeeping belongs to this
+                # checkpoint's manifest, not the shared registry meta
+                metas[name] = dataclasses.replace(meta, frame=None,
+                                                  chain=None)
+            else:
+                metas[name] = meta
+        ckpt = ctl.new_checkpoint(self.app_id, step, metas, userdata=userdata)
+        agents = ctl.agents_for(self.app_id)
+        if not agents:
+            raise ICheckError("no agents assigned")
+
+        t_enc = time.monotonic()
+        stats = {"raw": 0, "enc": 0, "key": 0, "delta": 0,
+                 "encode_s": 0.0, "publish": False}
+        payloads: Dict[str, Dict[int, bytes]] = {}
+        try:
+            for name, parts in parts_by_region.items():
+                meta = metas[name]
+                raw = {part: np.ascontiguousarray(arr).tobytes()
+                       for part, arr in parts.items()}
+                if meta.codec == "q8-delta":
+                    payloads[name] = self._encode_delta_host(
+                        ckpt.ckpt_id, meta, raw, stats)
+                else:
+                    blobs = {
+                        part: encode_payload(data, meta.codec, meta.dtype)
+                        for part, data in raw.items()}
+                    if meta.codec == "q8":
+                        # plain q8 feeds the same codec gauges (its ~4x
+                        # ratio must not read as "codec did nothing")
+                        stats["raw"] += sum(len(b) for b in raw.values())
+                        stats["enc"] += sum(len(b) for b in blobs.values())
+                        stats["publish"] = True
+                    payloads[name] = blobs
+            for name, enc in encoded.items():
+                payloads[name] = self._adopt_encoded(ckpt.ckpt_id,
+                                                     metas[name], enc, stats)
+        except BaseException:
+            # some chains may already reference this checkpoint's frames,
+            # which will never be stored — reset so the next commit keyframes
+            ctl.reset_delta_chains(self.app_id, reason="commit_encode_failed")
+            raise
+        stats["encode_s"] += time.monotonic() - t_enc
+
+        puts: List[Tuple[ShardKey, bytes, Agent]] = []
+        for name, blobs in payloads.items():
+            for part, payload in blobs.items():
                 for rep in range(self.replication):
                     key = ShardKey(self.app_id, ckpt.ckpt_id, name, part, rep)
                     agent = agents[(self._rr + rep) % len(agents)]
                     puts.append((key, payload, agent))
                 self._rr += 1
+        if stats["publish"]:
+            ctl.bus.publish(E.CKPT_DELTA_COMMITTED, app=self.app_id,
+                            ckpt=ckpt.ckpt_id, raw_bytes=stats["raw"],
+                            encoded_bytes=stats["enc"],
+                            key_frames=stats["key"],
+                            delta_frames=stats["delta"],
+                            encode_s=stats["encode_s"])
         handle = CommitHandle(self, ckpt, puts, drain=drain)
         self._commit_q.put(handle)
         if blocking:
             handle.wait(timeout=120)
         return handle
+
+    def _encode_delta_host(self, ckpt_id: int, meta: RegionMeta,
+                           raw: Dict[int, bytes], stats: dict
+                           ) -> Dict[int, bytes]:
+        """Host-side q8-delta encode of one region + chain advance."""
+        ctl = self.controller
+        rc = ctl.delta_chain(self.app_id, meta.name,
+                             meta.partition.num_parts)
+        blobs, states, frame = encode_delta_region(
+            raw, meta.dtype, rc.parts if rc is not None else None)
+        blobs, meta.frame, meta.chain = self._advance_or_keyframe(
+            ckpt_id, meta.name, blobs, states, frame)
+        stats["raw"] += sum(len(b) for b in raw.values())
+        stats["enc"] += sum(len(b) for b in blobs.values())
+        stats[meta.frame] += 1
+        stats["publish"] = True
+        return blobs
+
+    def _advance_or_keyframe(self, ckpt_id: int, name: str,
+                             blobs: Dict[int, bytes], states, frame: str):
+        """Advance the catalog chain; if a background reset (demotion,
+        failure, resize) raced the encode and the chain is gone, re-frame
+        the carried codes as a self-contained keyframe instead of failing
+        the commit."""
+        ctl = self.controller
+        if frame == "delta":
+            try:
+                chain = ctl.advance_delta_chain(self.app_id, ckpt_id, name,
+                                                states, "delta")
+                return blobs, "delta", chain
+            except ICheckError:
+                blobs = q8_repack_key(states)
+                frame = "key"
+        chain = ctl.advance_delta_chain(self.app_id, ckpt_id, name, states,
+                                        frame)
+        return blobs, frame, chain
+
+    def _adopt_encoded(self, ckpt_id: int, meta: RegionMeta,
+                       enc: EncodedRegion, stats: dict) -> Dict[int, bytes]:
+        """Thread a device-encoded region's frames into this commit."""
+        ctl = self.controller
+        if enc.codec != meta.codec:
+            raise ICheckError(
+                f"region {meta.name!r}: encoded as {enc.codec!r} but "
+                f"registered codec is {meta.codec!r}")
+        if enc.codec == "q8-delta":
+            blobs, frame = enc.blobs, enc.frame
+            if frame == "delta":
+                rc = ctl.delta_chain(self.app_id, meta.name,
+                                     meta.partition.num_parts)
+                if rc is None or (enc.parent_chain is not None
+                                  and rc.chain != enc.parent_chain):
+                    # the chain moved or reset between snapshot-encode and
+                    # commit (e.g. a resize registered new boxes): the delta
+                    # frames are useless, but the carried states hold the
+                    # full codes — re-frame as a self-contained keyframe
+                    blobs, frame = q8_repack_key(enc.states), "key"
+            blobs, meta.frame, meta.chain = self._advance_or_keyframe(
+                ckpt_id, meta.name, blobs, enc.states, frame)
+            stats[meta.frame] += 1
+            enc = dataclasses.replace(enc, blobs=blobs, frame=meta.frame)
+        # q8 and q8-delta both feed the codec gauges (device path included)
+        stats["publish"] = True
+        stats["raw"] += enc.raw_nbytes
+        stats["enc"] += sum(len(b) for b in enc.blobs.values())
+        stats["encode_s"] += enc.encode_s
+        return enc.blobs
+
+    def commit_snapshot(self, snap, extra_parts: Optional[Dict] = None,
+                        userdata: bytes = b"", blocking: bool = False,
+                        drain: bool = True) -> CommitHandle:
+        """Commit a :class:`~repro.core.snapshot.HostSnapshot` whose regions
+        were encoded *on device* (``snapshot_pytree(codec=...)``): the
+        client→agent fabric and every storage tier move the int8 frames the
+        D2H copy already produced.  ``extra_parts`` adds plain host-side
+        regions (e.g. a data-iterator cursor)."""
+        self.add_adapt_snapshot(snap)
+        encoded = {name: sr.encoded for name, sr in snap.regions.items()
+                   if sr.encoded is not None}
+        parts = {name: sr.parts for name, sr in snap.regions.items()
+                 if sr.encoded is None}
+        parts.update(extra_parts or {})
+        return self.commit(snap.step, parts, userdata=userdata,
+                           blocking=blocking, drain=drain, encoded=encoded)
+
+    def delta_chain_lookup(self, name: str, num_parts: int):
+        """Previous-codes state for a device-side delta encode (or None when
+        the next frame of ``name`` must be a keyframe)."""
+        return self.controller.delta_chain(self.app_id, name, num_parts)
 
     def _completer_loop(self) -> None:
         while True:
@@ -275,10 +443,46 @@ class ICheckClient:
             handle._complete()
 
     # --------------------------------------------------------------- restart
+    def _fetch_decoded(self, region: RegionMeta, ckpt_id: int,
+                       part: int) -> bytes:
+        """Fetch + decode one region part, replaying the delta chain
+        (keyframe → deltas) for ``q8-delta`` regions."""
+        if region.codec != "q8-delta":
+            return decode_payload(
+                self.controller.fetch_shard(self.app_id, ckpt_id,
+                                            region.name, part),
+                region.codec, region.dtype)
+        chain = region.chain or (ckpt_id,)
+        blobs = []
+        for cid in chain:
+            try:
+                blobs.append(self.controller.fetch_shard(
+                    self.app_id, cid, region.name, part))
+            except KeyError as e:
+                raise RestoreError(
+                    f"delta chain of {region.name!r} part {part} is broken: "
+                    f"frame ckpt={cid} is gone (chain {chain})") from e
+        return q8_chain_decode(blobs, region.dtype)
+
+    def _ckpt_region(self, ckpt_id: int, name: str) -> RegionMeta:
+        """The per-checkpoint RegionMeta (carries frame/chain) when known;
+        falls back to the registry meta."""
+        try:
+            app = self.controller.app(self.app_id)
+            meta = app.checkpoints.get(ckpt_id)
+            if meta is not None and name in meta.regions:
+                return meta.regions[name]
+        except KeyError:
+            pass
+        return self.regions[name]
+
     def restart(self) -> Optional[Tuple[CheckpointMeta, Dict[str, Dict[int, np.ndarray]], str]]:
         """icheck_restart(): newest usable checkpoint → (meta, parts, level).
 
         Returns None when no checkpoint exists (fresh start, paper line 7-9).
+        ``q8-delta`` checkpoints replay keyframe + deltas — bit-identical to
+        restoring a full q8 frame of the same commit; a missing or corrupt
+        chain link raises :class:`RestoreError` instead of decoding garbage.
         """
         found = self.controller.latest_restartable(self.app_id)
         if found is None:
@@ -288,17 +492,16 @@ class ICheckClient:
         for name, region in meta.regions.items():
             parts: Dict[int, np.ndarray] = {}
             for part in range(region.partition.num_parts):
-                payload = decode_payload(
-                    self.controller.fetch_shard(self.app_id, meta.ckpt_id,
-                                                name, part),
-                    region.codec, region.dtype)
+                payload = self._fetch_decoded(region, meta.ckpt_id, part)
                 arr = np.frombuffer(bytearray(payload),
                                     dtype=np.dtype(region.dtype))
                 parts[part] = arr.reshape(self._part_shape(region, part))
             out[name] = parts
             # refresh the client-side region registry from the manifest
-            self.regions[name] = region
-            self.controller.register_region(self.app_id, region)
+            # (scrubbed of this checkpoint's frame/chain bookkeeping)
+            registry = dataclasses.replace(region, frame=None, chain=None)
+            self.regions[name] = registry
+            self.controller.register_region(self.app_id, registry)
         return meta, out, level
 
     def _part_shape(self, region: RegionMeta, part: int) -> Tuple[int, ...]:
@@ -329,10 +532,10 @@ class ICheckClient:
         wanted = set(parts_needed) if parts_needed is not None \
             else set(range(new_num_parts))
         needed_src = sorted({mv.src for mv in moves if mv.dst in wanted})
+        ckpt_region = self._ckpt_region(ckpt_id, name)
         src_parts: Dict[int, np.ndarray] = {}
         for sp in needed_src:
-            payload = decode_payload(self.controller.fetch_shard(
-                self.app_id, ckpt_id, name, sp), region.codec, region.dtype)
+            payload = self._fetch_decoded(ckpt_region, ckpt_id, sp)
             src_parts[sp] = np.frombuffer(bytearray(payload),
                                           dtype=np.dtype(region.dtype)) \
                 .reshape(self._part_shape(region, sp))
@@ -342,9 +545,15 @@ class ICheckClient:
         return result
 
     def commit_redistribution(self, name: str, new_num_parts: int) -> None:
-        """MPI_Comm_adapt_commit side-effect: region now has the new mapping."""
-        region = self.regions[name]
-        region.partition = region.partition.renumbered(new_num_parts)
+        """MPI_Comm_adapt_commit side-effect: region now has the new mapping.
+
+        Registers a *new* RegionMeta (the registry may alias the
+        controller's copy — mutating in place would hide the partition
+        change from the catalog's mandatory delta-chain reset)."""
+        old = self.regions[name]
+        region = dataclasses.replace(
+            old, partition=old.partition.renumbered(new_num_parts))
+        self.regions[name] = region
         self.controller.register_region(self.app_id, region)
 
     def redistribute_mesh(self, name: str, new_boxes: Sequence[planlib.Box],
@@ -363,10 +572,10 @@ class ICheckClient:
                 raise ICheckError("nothing to redistribute from")
             ckpt_id = found[0].ckpt_id
         needed_src = sorted({mv.src for mv in moves})
+        ckpt_region = self._ckpt_region(ckpt_id, name)
         src_parts: Dict[int, np.ndarray] = {}
         for sp in needed_src:
-            payload = decode_payload(self.controller.fetch_shard(
-                self.app_id, ckpt_id, name, sp), region.codec, region.dtype)
+            payload = self._fetch_decoded(ckpt_region, ckpt_id, sp)
             src_parts[sp] = np.frombuffer(bytearray(payload),
                                           dtype=np.dtype(region.dtype)) \
                 .reshape(self._part_shape(region, sp))

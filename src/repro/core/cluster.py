@@ -37,7 +37,8 @@ class ICheckCluster:
                  l3: bool = False, l3_root: Optional[str] = None,
                  l3_bandwidth: float = 5e9, l3_request_latency: float = 0.03,
                  watermark_high: float = 0.85, watermark_low: float = 0.60,
-                 keep_l2: int = 0, keep_l3: int = 0):
+                 keep_l2: int = 0, keep_l3: int = 0,
+                 delta_keyframe_every: int = 8):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -69,7 +70,8 @@ class ICheckCluster:
             spill_bytes=spill_bytes, adaptive_interval=adaptive_interval,
             default_mtbf_s=default_mtbf_s, l3=self.l3,
             watermark_high=watermark_high, watermark_low=watermark_low,
-            keep_l2=keep_l2, keep_l3=keep_l3)
+            keep_l2=keep_l2, keep_l3=keep_l3,
+            delta_keyframe_every=delta_keyframe_every)
 
     @property
     def telemetry(self):

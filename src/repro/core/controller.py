@@ -59,7 +59,8 @@ class Controller:
                  default_mtbf_s: float = 3600.0,
                  l3: Optional[RemoteObjectTier] = None,
                  watermark_high: float = 0.85, watermark_low: float = 0.60,
-                 keep_l2: int = 0, keep_l3: int = 0):
+                 keep_l2: int = 0, keep_l3: int = 0,
+                 delta_keyframe_every: int = 8):
         self.rm = rm
         self.pfs = pfs
         self.l3 = l3
@@ -79,7 +80,8 @@ class Controller:
 
         # service core
         self.placement = PlacementService(self, policy)
-        self.catalog = CheckpointCatalog(self)
+        self.catalog = CheckpointCatalog(
+            self, delta_keyframe_every=delta_keyframe_every)
         self.drains = DrainOrchestrator(self, max_concurrent=max_concurrent_drains,
                                         keep_l1=keep_l1)
         self.health = HealthMonitor(self, heartbeat_interval_s)
@@ -206,7 +208,14 @@ class Controller:
 
     def register_region(self, app_id: AppId, region: RegionMeta) -> None:
         with self._lock:
+            old = self._regions[app_id].get(region.name)
             self._regions[app_id][region.name] = region
+        if old is not None and old.partition != region.partition:
+            # resize/redistribution (grow *or* shrink, or new mesh boxes):
+            # previous codes no longer line up part-for-part — mandatory
+            # chain reset so the next commit emits a keyframe
+            self.catalog.reset_delta_chains(app_id=app_id, region=region.name,
+                                            reason="resize")
 
     def regions_of(self, app_id: AppId) -> Dict[str, RegionMeta]:
         with self._lock:
@@ -217,6 +226,10 @@ class Controller:
             app = self._apps.get(app_id)
             if app:
                 app.status = AppStatus.FINISHED
+        # release the app's delta-chain state (host codes + device-resident
+        # codes_dev arrays) — long-lived controllers see many apps come and
+        # go, and a finished app will keyframe anyway if it reconnects
+        self.catalog.reset_delta_chains(app_id=app_id, reason="app_finished")
 
     # =================================================== service delegation
     # checkpoints (catalog)
@@ -237,6 +250,24 @@ class Controller:
     def fetch_shard(self, app_id: AppId, ckpt_id: CkptId, region: str,
                     part: int) -> bytes:
         return self.catalog.fetch_shard(app_id, ckpt_id, region, part)
+
+    # q8-delta chains (catalog-owned previous-codes state)
+    def delta_chain(self, app_id: AppId, region: str, num_parts: int):
+        return self.catalog.delta_chain(app_id, region, num_parts)
+
+    def advance_delta_chain(self, app_id: AppId, ckpt_id: CkptId, region: str,
+                            states, frame: str):
+        return self.catalog.advance_chain(app_id, ckpt_id, region, states,
+                                          frame)
+
+    def reset_delta_chains(self, app_id: Optional[AppId] = None,
+                           region: Optional[str] = None,
+                           reason: str = "") -> int:
+        return self.catalog.reset_delta_chains(app_id, region, reason)
+
+    def set_delta_keyframe_every(self, app_id: AppId,
+                                 k: Optional[int]) -> None:
+        self.catalog.set_keyframe_every(app_id, k)
 
     # drains
     def wait_for_drains(self, timeout: float = 30.0) -> None:
@@ -274,6 +305,7 @@ class Controller:
     # ================================================================== misc
     def close(self) -> None:
         self.lifecycle.close()
+        self.catalog.close()
         self.drains.close()
         self.health.close()
         if self.intervals is not None:

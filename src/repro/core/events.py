@@ -50,6 +50,17 @@ CODEC_DEGRADED = "codec_degraded"
 SHARD_SPILLED = "shard_spilled"
 SHARD_PROMOTED = "shard_promoted"
 
+# -- incremental (q8-delta) commit path -------------------------------------
+# a commit's regions were delta/keyframe-encoded on the commit hot path;
+# payload carries raw vs encoded (bytes-on-wire) totals, key/delta frame
+# counts, changed/total block counts and the host-side encode seconds — the
+# TelemetryService's compression-ratio and encode-time signal
+CKPT_DELTA_COMMITTED = "ckpt_delta_committed"
+# a region's delta chain was invalidated (resize/redistribution, rank or
+# node/agent failure, a chain frame demoted or expired, commit failure):
+# the next commit of that region must emit a full keyframe
+DELTA_CHAIN_RESET = "delta_chain_reset"
+
 # -- storage lifecycle (watermark demotion / L3 trickle / retention) -------
 # a shard was pushed down a tier by policy (not by put-time capacity
 # pressure): the StorageLifecycleService's watermark demotion

@@ -7,21 +7,57 @@ checkpoint and where does each shard live" — L1 via any live holding agent
 promote-on-read back into the PFS) — including the cold-restart scan of PFS
 manifests (then L3 manifests, when the PFS is empty too) when a fresh
 controller knows nothing yet.
+
+Also owns the **q8-delta chain state** of the incremental commit path: per
+(app, region) the previous-codes handles every part's next delta encodes
+against, the keyframe-every-K policy, and the mandatory resets — on
+resize/redistribution (the controller calls :meth:`reset_delta_chains` when
+a region's partition changes), on rank/agent/node failure, on demotion of a
+chain frame out of L1, and on retention expiry of a chain frame.  After a
+reset the next commit of that region emits a full keyframe; a restore
+replays keyframe + deltas (``chain`` on the per-checkpoint RegionMeta).
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Dict, Iterator, Optional, Tuple
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from .. import events as E
+from ..tiers import DeltaState
 from ..types import (AppId, CheckpointMeta, CkptId, CkptStatus, ICheckError,
                      RegionMeta, ShardInfo, ShardKey)
 
+# any of these may have destroyed (or made unreachable) an L1-only delta
+# frame, or invalidated the codes the application will diff against next:
+# the affected chains reset so the next commit is a self-contained keyframe
+_CHAIN_RESET_EVENTS = (E.APP_RANK_FAILED, E.NODE_FAILED, E.AGENT_FAILED,
+                       E.NODE_RETAKEN, E.MIGRATION_LOST_SHARD, E.CKPT_FAILED,
+                       E.CKPT_EXPIRED, E.SHARD_DEMOTED)
+
+
+@dataclasses.dataclass
+class RegionChain:
+    """Live delta chain of one region: frame ckpt ids + per-part handles."""
+
+    chain: Tuple[CkptId, ...]            # keyframe first, newest last
+    parts: Dict[int, DeltaState]         # part -> previous-codes handle
+
 
 class CheckpointCatalog:
-    def __init__(self, ctl):
+    def __init__(self, ctl, delta_keyframe_every: int = 8):
         self.ctl = ctl
         self._seq: Dict[AppId, itertools.count] = {}
+        self.delta_keyframe_every = max(1, int(delta_keyframe_every))
+        self._kf_every: Dict[AppId, int] = {}
+        self._chain_lock = threading.Lock()
+        self._chains: Dict[Tuple[AppId, str], RegionChain] = {}
+        self._unsub_chain = ctl.bus.subscribe(self._on_chain_event,
+                                              events=_CHAIN_RESET_EVENTS)
+
+    def close(self) -> None:
+        self._unsub_chain()
 
     # ------------------------------------------------------------- lifecycle
     def open_app(self, app_id: AppId) -> None:
@@ -60,19 +96,135 @@ class CheckpointCatalog:
         if drain:
             ctl.drains.submit(meta)
 
+    # ---------------------------------------------------- q8-delta chains
+    def keyframe_every(self, app_id: AppId) -> int:
+        return self._kf_every.get(app_id, self.delta_keyframe_every)
+
+    def set_keyframe_every(self, app_id: AppId, k: Optional[int]) -> None:
+        """Per-app keyframe cadence override (None restores the default)."""
+        if k is None:
+            self._kf_every.pop(app_id, None)
+        else:
+            self._kf_every[app_id] = max(1, int(k))
+
+    def delta_chain(self, app_id: AppId, region: str,
+                    num_parts: int) -> Optional[RegionChain]:
+        """Previous-codes state the next commit of ``region`` may delta
+        against, or None when a keyframe is due (no chain, chain at the
+        keyframe-every-K horizon, or a part-count mismatch)."""
+        with self._chain_lock:
+            rc = self._chains.get((app_id, region))
+            if rc is None or len(rc.chain) >= self.keyframe_every(app_id):
+                return None
+            if set(rc.parts) != set(range(num_parts)):
+                return None
+            return rc
+
+    def advance_chain(self, app_id: AppId, ckpt_id: CkptId, region: str,
+                      states: Optional[Dict[int, DeltaState]],
+                      frame: str) -> Tuple[CkptId, ...]:
+        """Record the frame a commit just encoded; returns the region's new
+        chain (what the per-checkpoint RegionMeta must carry for replay)."""
+        with self._chain_lock:
+            if states is None:          # chainless (non-float passthrough)
+                self._chains.pop((app_id, region), None)
+                return (ckpt_id,)
+            if frame == "key":
+                chain: Tuple[CkptId, ...] = (ckpt_id,)
+            else:
+                rc = self._chains.get((app_id, region))
+                if rc is None:
+                    raise ICheckError(
+                        f"delta frame for {app_id}/{region} without a chain")
+                chain = rc.chain + (ckpt_id,)
+            self._chains[(app_id, region)] = RegionChain(chain=chain,
+                                                         parts=dict(states))
+            return chain
+
+    def reset_delta_chains(self, app_id: Optional[AppId] = None,
+                           region: Optional[str] = None,
+                           reason: str = "") -> int:
+        """Drop matching chains (all when ``app_id`` is None); every dropped
+        chain publishes ``DELTA_CHAIN_RESET`` so the policy stays observable.
+        """
+        with self._chain_lock:
+            victims = [k for k in self._chains
+                       if (app_id is None or k[0] == app_id)
+                       and (region is None or k[1] == region)]
+            dropped = [(k, self._chains.pop(k)) for k in victims]
+        for (app, reg), rc in dropped:
+            self.ctl.bus.publish(E.DELTA_CHAIN_RESET, app=app, region=reg,
+                                 reason=reason, chain_len=len(rc.chain))
+        return len(dropped)
+
+    def _reset_chains_containing(self, app_id: Optional[AppId],
+                                 ckpt_id: Optional[CkptId],
+                                 region: Optional[str],
+                                 reason: str) -> None:
+        """Reset chains that have ``ckpt_id`` as one of their frames (a
+        demoted or expired frame makes the replay path slow or impossible)."""
+        if app_id is None or ckpt_id is None:
+            return
+        with self._chain_lock:
+            victims = [k for k, rc in self._chains.items()
+                       if k[0] == app_id and ckpt_id in rc.chain
+                       and (region is None or k[1] == region)]
+        for app, reg in victims:
+            self.reset_delta_chains(app, reg, reason=reason)
+
+    def _on_chain_event(self, ev: E.Event) -> None:
+        name, p = ev.name, ev.payload
+        if name in (E.APP_RANK_FAILED, E.CKPT_FAILED):
+            self.reset_delta_chains(app_id=p.get("app"), reason=name)
+        elif name in (E.CKPT_EXPIRED, E.SHARD_DEMOTED):
+            self._reset_chains_containing(p.get("app"), p.get("ckpt"),
+                                          p.get("region"), reason=name)
+        else:   # node/agent failure, retake, migration loss: L1-only frames
+            # may be gone — a keyframe next commit beats decoding garbage
+            self.reset_delta_chains(reason=name)
+
+    def chain_stats(self) -> List[dict]:
+        with self._chain_lock:
+            return [{"app": app, "region": region,
+                     "chain_len": len(rc.chain), "root": rc.chain[0],
+                     "head": rc.chain[-1]}
+                    for (app, region), rc in self._chains.items()]
+
+    # ------------------------------------------------------------- failure
     def mark_failed(self, app_id: AppId, ckpt_id: CkptId) -> None:
+        """Mark a checkpoint failed, cascading to its q8-delta dependents:
+        any non-durable checkpoint whose replay chain references the failed
+        frame can never be reconstructed, so ``latest_restartable`` must
+        skip it (and fall back to an older intact checkpoint)."""
         ctl = self.ctl
+        failed = []
         with ctl._lock:
             app = ctl._apps.get(app_id)
             meta = app.checkpoints.get(ckpt_id) if app else None
             if meta is not None and meta.status not in (CkptStatus.IN_L2,
                                                         CkptStatus.IN_L3):
                 meta.status = CkptStatus.FAILED
-                ctl.bus.publish(E.CKPT_FAILED, app=app_id, ckpt=ckpt_id)
+                failed.append(ckpt_id)
+                for dep in app.checkpoints.values():
+                    if dep.status in (CkptStatus.IN_L2, CkptStatus.IN_L3,
+                                      CkptStatus.FAILED):
+                        continue
+                    if any(r.chain and ckpt_id in r.chain
+                           for r in dep.regions.values()):
+                        dep.status = CkptStatus.FAILED
+                        failed.append(dep.ckpt_id)
+        for cid in failed:
+            ctl.bus.publish(E.CKPT_FAILED, app=app_id, ckpt=cid)
 
     # ------------------------------------------------------------- read path
     def latest_restartable(self, app_id: AppId) -> Optional[Tuple[CheckpointMeta, str]]:
-        """Newest usable checkpoint: L1 preferred (fast), else L2, else L3."""
+        """Newest usable checkpoint: L1 preferred (fast), else L2, else L3.
+
+        A q8-delta checkpoint is only usable if its whole replay chain is
+        still fetchable from *some* tier — a candidate whose keyframe or a
+        mid-chain delta is gone (e.g. a partially-drained chain on a cold
+        restart) is skipped in favour of an older intact checkpoint.
+        """
         ctl = self.ctl
         l3 = getattr(ctl, "l3", None)
         with ctl._lock:
@@ -81,9 +233,11 @@ class CheckpointCatalog:
                 if app else []
         for meta in metas:
             if meta.status in (CkptStatus.IN_L1, CkptStatus.DRAINING) \
-                    and self.l1_complete(meta):
+                    and self.l1_complete(meta) and self.chain_restorable(meta):
                 return meta, "l1"
             if meta.status in (CkptStatus.IN_L2, CkptStatus.IN_L3):
+                if not self.chain_restorable(meta):
+                    continue
                 if self.l1_complete(meta):
                     return meta, "l1"
                 if ctl.pfs.checkpoint_complete(meta):
@@ -94,7 +248,8 @@ class CheckpointCatalog:
         # cold restart: nothing in memory (e.g. new controller) — scan PFS
         for ckpt_id in reversed(ctl.pfs.list_checkpoints(app_id)):
             meta = ctl.pfs.read_manifest(app_id, ckpt_id)
-            if meta is not None and ctl.pfs.checkpoint_complete(meta):
+            if meta is not None and ctl.pfs.checkpoint_complete(meta) \
+                    and self.chain_restorable(meta):
                 meta.status = CkptStatus.IN_L2
                 with ctl._lock:
                     if app is not None:
@@ -105,13 +260,38 @@ class CheckpointCatalog:
         if l3 is not None:
             for ckpt_id in reversed(l3.list_checkpoints(app_id)):
                 meta = l3.read_manifest(app_id, ckpt_id)
-                if meta is not None and l3.checkpoint_complete(meta):
+                if meta is not None and l3.checkpoint_complete(meta) \
+                        and self.chain_restorable(meta):
                     meta.status = CkptStatus.IN_L3
                     with ctl._lock:
                         if app is not None:
                             app.checkpoints.setdefault(ckpt_id, meta)
                     return meta, "l3"
         return None
+
+    def chain_restorable(self, meta: CheckpointMeta) -> bool:
+        """Every *ancestor* frame of the checkpoint's delta chains is still
+        fetchable (L1 agent, PFS, or L3).  The checkpoint's own frames are
+        covered by the caller's completeness check; raw/q8 regions have no
+        chain and always pass.  Presence only — a corrupt frame still
+        surfaces as RestoreError at replay time."""
+        ctl = self.ctl
+        l3 = getattr(ctl, "l3", None)
+        for name, region in meta.regions.items():
+            if region.codec != "q8-delta" or not region.chain:
+                continue
+            for cid in region.chain[:-1]:
+                for part in range(region.partition.num_parts):
+                    if next(self.agents_with(meta.app_id, cid, name, part),
+                            None) is not None:
+                        continue
+                    key = ShardKey(meta.app_id, cid, name, part)
+                    if ctl.pfs.has_shard(key):
+                        continue
+                    if l3 is not None and l3.has_shard(key):
+                        continue
+                    return False
+        return True
 
     def l1_complete(self, meta: CheckpointMeta) -> bool:
         for name, region in meta.regions.items():

@@ -252,7 +252,22 @@ class StorageLifecycleService:
         if self.l3 is not None and self.keep_l3 > 0:
             in_l3 = [m for m in metas
                      if m.status == CkptStatus.IN_L3 and not m.pinned]
-            for meta in in_l3[:-self.keep_l3]:
+            victims = in_l3[:-self.keep_l3]
+            victim_ids = {m.ckpt_id for m in victims}
+            # q8-delta: a frame referenced by a *surviving* checkpoint's
+            # replay chain must outlive it — expiring the keyframe under a
+            # retained delta would make that checkpoint unrestorable
+            chain_needed = set()
+            for m in metas:
+                if m.ckpt_id in victim_ids or m.status in (CkptStatus.EXPIRED,
+                                                           CkptStatus.FAILED):
+                    continue
+                for r in m.regions.values():
+                    if r.chain:
+                        chain_needed.update(r.chain)
+            for meta in victims:
+                if meta.ckpt_id in chain_needed:
+                    continue
                 freed = self.l3.drop_checkpoint(app_id, meta.ckpt_id)
                 # the L3 copy was the durability floor: scrub the faster
                 # tiers too so no unrestorable partial copies linger

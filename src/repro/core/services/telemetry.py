@@ -62,6 +62,13 @@ class AppTelemetry:
         self.last_commit_t: Optional[float] = None
         self.last_failure_t: Optional[float] = None
         self.commit_cost_stale = False
+        # incremental commit path (ckpt_delta_committed / delta_chain_reset)
+        self.codec_raw_bytes = 0             # pre-codec bytes, cumulative
+        self.codec_encoded_bytes = 0         # bytes-on-wire, cumulative
+        self.codec_encode_s = EWMA(alpha=alpha)
+        self.delta_key_frames = 0
+        self.delta_delta_frames = 0
+        self.delta_chain_resets = 0
 
     def as_dict(self) -> dict:
         return {
@@ -78,6 +85,14 @@ class AppTelemetry:
             "retries": self.retries,
             "failure_gap_s": self.failure_gap_s.predict(),
             "commit_cost_stale": self.commit_cost_stale,
+            "codec_raw_bytes": self.codec_raw_bytes,
+            "codec_encoded_bytes": self.codec_encoded_bytes,
+            "codec_compression_ratio": self.codec_raw_bytes
+            / self.codec_encoded_bytes if self.codec_encoded_bytes else 1.0,
+            "codec_encode_s": self.codec_encode_s.predict(),
+            "delta_key_frames": self.delta_key_frames,
+            "delta_delta_frames": self.delta_delta_frames,
+            "delta_chain_resets": self.delta_chain_resets,
         }
 
 
@@ -105,7 +120,8 @@ class TelemetryService:
         self._unsubscribe = ctl.bus.subscribe(
             self._on_event,
             events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
-                    E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED)
+                    E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED,
+                    E.CKPT_DELTA_COMMITTED, E.DELTA_CHAIN_RESET)
             + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
 
     def close(self) -> None:
@@ -145,6 +161,15 @@ class TelemetryService:
                 if nbytes and sim_s:
                     tel.drain_rate_Bps.update(float(nbytes) / max(
                         float(sim_s), 1e-12))
+            elif name == E.CKPT_DELTA_COMMITTED:
+                tel = self._app(p["app"])
+                tel.codec_raw_bytes += int(p.get("raw_bytes", 0))
+                tel.codec_encoded_bytes += int(p.get("encoded_bytes", 0))
+                tel.codec_encode_s.update(float(p.get("encode_s", 0.0)))
+                tel.delta_key_frames += int(p.get("key_frames", 0))
+                tel.delta_delta_frames += int(p.get("delta_frames", 0))
+            elif name == E.DELTA_CHAIN_RESET:
+                self._app(p["app"]).delta_chain_resets += 1
             elif name == E.DRAIN_FAILED:
                 self._app(p["app"]).drain_failures += 1
             elif name == E.CKPT_FAILED:
@@ -297,6 +322,25 @@ class TelemetryService:
         metric("icheck_drain_throughput_bytes_per_second", "gauge",
                "EWMA L1->L2 drain throughput",
                [({"app": a}, t["drain_rate_Bps"]) for a, t in apps.items()])
+        metric("icheck_codec_compression_ratio", "gauge",
+               "Raw/encoded bytes-on-wire ratio of the q8-delta commit path",
+               [({"app": a}, t["codec_compression_ratio"])
+                for a, t in apps.items()])
+        metric("icheck_codec_encode_seconds", "gauge",
+               "EWMA host-clock commit encode time (device+pack)",
+               [({"app": a}, t["codec_encode_s"]) for a, t in apps.items()])
+        metric("icheck_codec_bytes_total", "counter",
+               "Commit-path codec bytes (pre-codec raw vs on-wire encoded)",
+               [({"app": a, "kind": kind}, t[f"codec_{kind}_bytes"])
+                for a, t in apps.items() for kind in ("raw", "encoded")])
+        metric("icheck_delta_frames_total", "counter",
+               "q8-delta frames committed, by kind",
+               [({"app": a, "kind": kind}, t[f"delta_{kind}_frames"])
+                for a, t in apps.items() for kind in ("key", "delta")])
+        metric("icheck_delta_chain_resets_total", "counter",
+               "Delta chains invalidated (resize/failure/demotion/expiry)",
+               [({"app": a}, t["delta_chain_resets"])
+                for a, t in apps.items()])
         metric("icheck_failures_total", "counter",
                "Failures charged to each application",
                [({"app": a}, t["failures"]) for a, t in apps.items()])

@@ -18,27 +18,34 @@ capacity pressure, promotion back to RAM on read) and is a drop-in for the
 old ``MemoryStore`` mapping interface.
 
 The pipeline also owns the *codec path*: ``encode_payload`` /
-``decode_payload`` thread the ``zstd`` and ``q8`` (blockwise int8, mirrors
-``kernels/ckpt_codec``) codecs uniformly through puts, degrading gracefully
-to ``"none"`` when ``zstandard`` is not installed instead of raising.
+``decode_payload`` thread the ``zstd``, ``q8`` and ``q8-delta`` codecs
+uniformly through puts, degrading gracefully to ``"none"`` when
+``zstandard`` is not installed instead of raising.  The blockwise int8
+math is imported from ``kernels/ckpt_codec`` (one shared reference — the
+host wire codec and the device kernels cannot drift); ``q8-delta`` adds
+sparse XOR-delta *frames* (only blocks whose codes or scale changed travel)
+whose chain state lives in the CheckpointCatalog.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import threading
 import zlib
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
-                    runtime_checkable)
+                    Tuple, runtime_checkable)
 
 import numpy as np
 
 from . import events as _events
+from ..kernels.ckpt_codec.blocks import (BLOCK as _Q8_BLOCK, dequantize_np,
+                                         quantize_np, to_blocks_np)
 from .simnet import SimNIC
 from .types import (CapacityError, CheckpointMeta, CkptStatus, ICheckError,
                     IntegrityError, PartitionDesc, PartitionScheme,
-                    RegionMeta, ShardKey)
+                    RegionMeta, RestoreError, ShardKey)
 
 try:
     import zstandard as _zstd
@@ -60,13 +67,51 @@ def _tupled(x):
 # ==========================================================================
 # codecs — applied on the transfer path, uniformly for every put
 # ==========================================================================
-_Q8_BLOCK = 256            # values per scale block (mirrors kernels/ckpt_codec)
+# _Q8_BLOCK is imported from kernels/ckpt_codec/blocks: one definition of the
+# blockwise layout for the device kernels and this host wire codec.
+#
+# q8 frame wire modes (first payload byte):
+#   b"R"  raw passthrough        R + data                    (non-float dtype)
+#   b"Q"  plain q8 frame         Q + n u64le + scales f32[nb] + codes i8[nb*B]
+#   b"K"  q8-delta keyframe      same layout as Q, tagged as a chain root
+#   b"D"  q8-delta sparse frame  D + n u64le + nnz u32le + idx u32le[nnz]
+#                                  + scales f32[nnz] + deltas i8[nnz*B]
+# A delta frame carries only the blocks whose codes or scale changed since
+# the previous frame (XOR codes, absolute scales); unchanged blocks cost
+# zero wire bytes — the steady-state win of incremental checkpointing.
 _Q8_QUANT = b"Q"
 _Q8_RAW = b"R"
+_Q8_KEY = b"K"
+_Q8_DELTA = b"D"
+
+
+@dataclasses.dataclass
+class DeltaState:
+    """Previous-codes handle for one region part (owned by the catalog)."""
+
+    n: int                    # unpadded element count
+    codes: np.ndarray         # (nb, BLOCK) int8
+    scales: np.ndarray        # (nb, 1) f32
+    # device-resident copy of ``codes`` (a jax.Array), attached by the
+    # device-encode path so the next ``quantize_delta`` reads the previous
+    # codes in place instead of re-uploading them H2D every commit; costs
+    # 1/4 of the region's f32 bytes in device memory, dropped on chain
+    # reset.  None on the pure-host path.
+    codes_dev: object = None
 
 
 def zstd_available() -> bool:
     return _zstd is not None
+
+
+def is_float_dtype(dtype) -> bool:
+    """True for dtypes the q8 codecs quantize (f32/f16/... and bfloat16,
+    whose numpy dtype reports kind 'V')."""
+    try:
+        dt = np.dtype(dtype)
+    except TypeError:
+        return False
+    return dt.kind == "f" or dt.name == "bfloat16"
 
 
 def resolve_codec(codec: str,
@@ -82,45 +127,219 @@ def resolve_codec(codec: str,
         if on_degrade is not None:
             on_degrade(codec, "none")
         return "none"
-    if codec not in ("raw", "none", "zstd", "q8"):
+    if codec not in ("raw", "none", "zstd", "q8", "q8-delta"):
         raise ICheckError(f"unknown codec {codec!r}")
     return codec
 
 
-def _q8_encode(data: bytes, dtype: str) -> bytes:
-    try:
-        dt = np.dtype(dtype)
-        is_float = dt.kind == "f"
-    except TypeError:
-        is_float = False
-    if not is_float:
+def q8_pack_full(n: int, codes: np.ndarray, scales: np.ndarray,
+                 mode: bytes = _Q8_QUANT) -> bytes:
+    """Pack a full q8 frame (plain ``Q`` or chain keyframe ``K``)."""
+    return (mode + int(n).to_bytes(8, "little")
+            + np.ascontiguousarray(scales, np.float32).tobytes()
+            + np.ascontiguousarray(codes, np.int8).tobytes())
+
+
+def _q8_full_size(nb: int) -> int:
+    return 9 + 4 * nb + _Q8_BLOCK * nb
+
+
+def q8_pack_delta(n: int, codes: np.ndarray, scales: np.ndarray,
+                  prev: DeltaState,
+                  delta: Optional[np.ndarray] = None) -> Optional[bytes]:
+    """Sparse XOR-delta frame against ``prev``; None when shapes mismatch
+    (the caller must fall back to a keyframe).  ``delta`` short-circuits
+    the XOR when the caller already holds it (the device kernel's output).
+    """
+    if prev.n != n or prev.codes.shape != codes.shape:
+        return None
+    if delta is None:
+        delta = np.bitwise_xor(codes, prev.codes)
+    changed = np.logical_or((delta != 0).any(axis=1),
+                            (scales != prev.scales).any(axis=1))
+    idx = np.flatnonzero(changed).astype(np.uint32)
+    return (_Q8_DELTA + int(n).to_bytes(8, "little")
+            + len(idx).to_bytes(4, "little") + idx.tobytes()
+            + np.ascontiguousarray(scales[idx], np.float32).tobytes()
+            + np.ascontiguousarray(delta[idx], np.int8).tobytes())
+
+
+def _q8_unpack_full(blob: bytes) -> Tuple[int, np.ndarray, np.ndarray]:
+    n = int.from_bytes(blob[1:9], "little")
+    nb = -(-max(n, 1) // _Q8_BLOCK)
+    if len(blob) != _q8_full_size(nb):
+        raise RestoreError(
+            f"truncated q8 frame: {len(blob)} bytes for n={n}")
+    scales = np.frombuffer(blob[9:9 + 4 * nb], np.float32).reshape(nb, 1)
+    codes = np.frombuffer(blob[9 + 4 * nb:], np.int8).reshape(nb, _Q8_BLOCK)
+    return n, codes, scales
+
+
+def _q8_unpack_delta(blob: bytes) -> Tuple[int, np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    n = int.from_bytes(blob[1:9], "little")
+    nnz = int.from_bytes(blob[9:13], "little")
+    if len(blob) != 13 + nnz * (4 + 4 + _Q8_BLOCK):
+        raise RestoreError(
+            f"truncated q8-delta frame: {len(blob)} bytes for nnz={nnz}")
+    off = 13
+    idx = np.frombuffer(blob[off:off + 4 * nnz], np.uint32)
+    off += 4 * nnz
+    scales = np.frombuffer(blob[off:off + 4 * nnz], np.float32).reshape(-1, 1)
+    off += 4 * nnz
+    deltas = np.frombuffer(blob[off:], np.int8).reshape(-1, _Q8_BLOCK)
+    return n, idx, scales, deltas
+
+
+def q8_delta_apply(blob: bytes, state: Optional[DeltaState]) -> DeltaState:
+    """Advance the replay state by one frame (keyframe or sparse delta)."""
+    mode = blob[:1]
+    if mode in (_Q8_QUANT, _Q8_KEY):
+        n, codes, scales = _q8_unpack_full(blob)
+        return DeltaState(n=n, codes=codes.copy(), scales=scales.copy())
+    if mode != _Q8_DELTA:
+        raise RestoreError(f"bad q8 frame mode {mode!r}")
+    if state is None:
+        raise RestoreError("delta frame without a preceding keyframe")
+    n, idx, scales, deltas = _q8_unpack_delta(blob)
+    if n != state.n:
+        raise RestoreError(
+            f"delta frame size mismatch: chain n={state.n}, frame n={n}")
+    if len(idx) and int(idx.max()) >= state.codes.shape[0]:
+        raise RestoreError("delta frame block index out of range")
+    codes = state.codes.copy()
+    new_scales = state.scales.copy()
+    codes[idx] = np.bitwise_xor(codes[idx], deltas)
+    new_scales[idx] = scales
+    return DeltaState(n=n, codes=codes, scales=new_scales)
+
+
+def q8_chain_decode(blobs: Sequence[bytes], dtype: str) -> bytes:
+    """Replay keyframe + deltas back to raw bytes.
+
+    Bit-identical to decoding a full q8 frame of the final commit: the chain
+    reconstructs that frame's exact (codes, scales) and the dequantize math
+    is the same f32 path the device kernels use.
+    """
+    if not blobs:
+        raise RestoreError("empty delta chain")
+    if blobs[-1][:1] == _Q8_RAW:
+        # non-float passthrough: every frame is full, only the last matters
+        return bytes(blobs[-1][1:])
+    state: Optional[DeltaState] = None
+    for blob in blobs:
+        state = q8_delta_apply(blob, state)
+    return dequantize_np(state.codes, state.scales, state.n, dtype).tobytes()
+
+
+def q8_quantize_part(data: bytes, dtype: str) -> Tuple[int, np.ndarray,
+                                                       np.ndarray]:
+    """Host-side quantize of one region part: raw bytes -> (n, codes, scales)
+    via the shared blockwise reference (kernels/ckpt_codec/blocks)."""
+    x = np.frombuffer(data, dtype=np.dtype(dtype))
+    blocks, n = to_blocks_np(x)
+    codes, scales = quantize_np(blocks)
+    return n, codes, scales
+
+
+def pack_q8_region(parts: Dict[int, Tuple[int, np.ndarray, np.ndarray]],
+                   prev: Optional[Dict[int, DeltaState]],
+                   deltas: Optional[Dict[int, np.ndarray]] = None
+                   ) -> Tuple[Dict[int, bytes], Dict[int, DeltaState], str]:
+    """Frame one region's quantized parts as deltas or keyframes.
+
+    ``parts[part] = (n, codes, scales)`` — produced host-side by
+    :func:`q8_quantize_part` or device-side by the ``kernels/ckpt_codec``
+    Pallas ops (both paths share this packer, so framing policy cannot
+    drift).  Emits sparse deltas against ``prev`` when the whole region has
+    matching previous-codes state **and** the delta frames are actually
+    smaller than keyframes (high-churn commits fall back to a keyframe, so
+    q8-delta never loses to plain q8); returns ``(blobs, new_states,
+    frame)`` with frame ``"key"`` or ``"delta"``.
+    """
+    states = {p: DeltaState(n=n, codes=codes, scales=scales)
+              for p, (n, codes, scales) in parts.items()}
+    if prev is not None and set(prev) == set(parts):
+        delta_blobs: Dict[int, bytes] = {}
+        for p, (n, codes, scales) in parts.items():
+            blob = q8_pack_delta(n, codes, scales, prev[p],
+                                 delta=(deltas or {}).get(p))
+            if blob is None:
+                break
+            delta_blobs[p] = blob
+        if len(delta_blobs) == len(parts):
+            key_total = sum(_q8_full_size(codes.shape[0])
+                            for _, codes, _ in parts.values())
+            if sum(len(b) for b in delta_blobs.values()) < key_total:
+                return delta_blobs, states, "delta"
+    keys = {p: q8_pack_full(n, codes, scales, _Q8_KEY)
+            for p, (n, codes, scales) in parts.items()}
+    return keys, states, "key"
+
+
+@dataclasses.dataclass
+class EncodedRegion:
+    """One region already encoded upstream of the client (device-side in
+    ``core/snapshot.py`` before the D2H copy) — what ``commit_snapshot``
+    hands the commit path instead of raw arrays."""
+
+    codec: str                           # "q8" | "q8-delta"
+    blobs: Dict[int, bytes]              # part -> wire frame
+    states: Optional[Dict[int, DeltaState]]   # chain handles (q8-delta)
+    frame: Optional[str]                 # "key" | "delta" (q8-delta only)
+    raw_nbytes: int                      # pre-codec bytes (the f32 payload)
+    parent_chain: Optional[tuple] = None  # chain expected live at commit
+    encode_s: float = 0.0                # host-clock encode duration
+
+
+def q8_repack_key(states: Dict[int, DeltaState]) -> Dict[int, bytes]:
+    """Re-frame already-quantized parts as self-contained keyframes (used
+    when a delta encode went stale: its chain reset between encode and
+    commit — the carried codes are still the full current codes)."""
+    return {p: q8_pack_full(st.n, st.codes, st.scales, _Q8_KEY)
+            for p, st in states.items()}
+
+
+def encode_delta_region(parts_bytes: Dict[int, bytes], dtype: str,
+                        prev: Optional[Dict[int, DeltaState]]
+                        ) -> Tuple[Dict[int, bytes],
+                                   Optional[Dict[int, DeltaState]], str]:
+    """Host-side q8-delta encode of one region (all parts together).
+
+    Non-float regions pass through as full raw frames with no chain state.
+    """
+    if not is_float_dtype(dtype):
+        return ({p: _Q8_RAW + bytes(b) for p, b in parts_bytes.items()},
+                None, "key")
+    parts = {p: q8_quantize_part(b, dtype) for p, b in parts_bytes.items()}
+    return pack_q8_region(parts, prev)
+
+
+def _q8_encode(data: bytes, dtype: str, mode: bytes = _Q8_QUANT) -> bytes:
+    if not is_float_dtype(dtype):
         return _Q8_RAW + bytes(data)
-    x = np.frombuffer(data, dtype=dt).astype(np.float32)
-    n = x.size
-    nb = -(-n // _Q8_BLOCK)
-    blocks = np.zeros((nb, _Q8_BLOCK), np.float32)
-    blocks.reshape(-1)[:n] = x
-    absmax = np.max(np.abs(blocks), axis=-1, keepdims=True)
-    scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
-    q = np.clip(np.round(blocks / scale), -127, 127).astype(np.int8)
-    return (_Q8_QUANT + int(n).to_bytes(8, "little")
-            + scale.tobytes() + q.tobytes())
+    n, codes, scales = q8_quantize_part(data, dtype)
+    return q8_pack_full(n, codes, scales, mode)
 
 
 def _q8_decode(blob: bytes, dtype: str) -> bytes:
-    mode, blob = blob[:1], blob[1:]
+    mode = blob[:1]
     if mode == _Q8_RAW:
-        return bytes(blob)
-    n = int.from_bytes(blob[:8], "little")
-    nb = -(-n // _Q8_BLOCK)
-    scales = np.frombuffer(blob[8:8 + 4 * nb], np.float32).reshape(nb, 1)
-    q = np.frombuffer(blob[8 + 4 * nb:], np.int8).reshape(nb, _Q8_BLOCK)
-    x = (q.astype(np.float32) * scales).reshape(-1)[:n]
-    return x.astype(np.dtype(dtype)).tobytes()
+        return bytes(blob[1:])
+    if mode == _Q8_DELTA:
+        raise RestoreError(
+            "q8-delta frame needs its chain; replay via q8_chain_decode")
+    n, codes, scales = _q8_unpack_full(blob)
+    return dequantize_np(codes, scales, n, dtype).tobytes()
 
 
 def encode_payload(data: bytes, codec: str, dtype: str = "uint8") -> bytes:
-    """Codec step of every put (client commit → agent → tier)."""
+    """Codec step of every put (client commit → agent → tier).
+
+    ``q8-delta`` without chain state encodes a standalone keyframe — the
+    client threads previous-codes state through :func:`encode_delta_region`
+    on the commit hot path instead.
+    """
     if codec in ("raw", "none"):
         return bytes(data)
     if codec == "zstd":
@@ -129,6 +348,8 @@ def encode_payload(data: bytes, codec: str, dtype: str = "uint8") -> bytes:
         return _zstd.ZstdCompressor(level=1).compress(bytes(data))
     if codec == "q8":
         return _q8_encode(data, dtype)
+    if codec == "q8-delta":
+        return _q8_encode(data, dtype, _Q8_KEY)
     raise ICheckError(f"unknown codec {codec!r}")
 
 
@@ -140,7 +361,7 @@ def decode_payload(blob: bytes, codec: str, dtype: str = "uint8") -> bytes:
             raise ICheckError(
                 "shard was zstd-compressed but zstandard is not installed")
         return _zstd.ZstdDecompressor().decompress(blob)
-    if codec == "q8":
+    if codec in ("q8", "q8-delta"):
         return _q8_decode(blob, dtype)
     raise ICheckError(f"unknown codec {codec!r}")
 
@@ -401,6 +622,8 @@ def _manifest_doc(meta: CheckpointMeta) -> dict:
                 "dtype": r.dtype,
                 "nbytes": r.nbytes,
                 "codec": r.codec,
+                "frame": r.frame,
+                "chain": list(r.chain) if r.chain is not None else None,
                 "partition": {
                     "scheme": r.partition.scheme.value,
                     "axis": r.partition.axis,
@@ -419,9 +642,12 @@ def _meta_from_manifest(doc: dict) -> CheckpointMeta:
                           step=doc["step"], status=CkptStatus(doc["status"]),
                           userdata=bytes.fromhex(doc.get("userdata_hex", "")))
     for name, r in doc["regions"].items():
+        chain = r.get("chain")
         meta.regions[name] = RegionMeta(
             name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
             nbytes=r["nbytes"], codec=r.get("codec", "raw"),
+            frame=r.get("frame"),
+            chain=tuple(chain) if chain is not None else None,
             partition=PartitionDesc(
                 scheme=PartitionScheme(r["partition"]["scheme"]),
                 axis=r["partition"]["axis"],
@@ -1013,9 +1239,13 @@ class TierPipeline:
             self._publish(_events.DEMOTE_FAILED, node=self.node_id,
                           key=str(key), **failure)
             return False
+        # structured app/ckpt/region fields ride along so chain owners (the
+        # catalog resets a delta chain whose frames get demoted) don't have
+        # to parse the stringified key
         self._publish(_events.SHARD_DEMOTED, node=self.node_id,
                       src=self.tiers[0].name, dst=self.tiers[1].name,
-                      key=str(key), nbytes=nbytes)
+                      key=str(key), nbytes=nbytes, app=key.app_id,
+                      ckpt=key.ckpt_id, region=key.region)
         return True
 
     def close(self) -> None:

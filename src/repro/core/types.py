@@ -105,7 +105,14 @@ class RegionMeta:
     partition: PartitionDesc
     nbytes: int
     # optional codec applied on the transfer path (beyond-paper, TPU-native)
-    codec: str = "raw"                     # raw | zstd | q8 | q8+delta
+    codec: str = "raw"                     # raw | zstd | q8 | q8-delta
+    # q8-delta frame bookkeeping, set on the *per-checkpoint* RegionMeta
+    # copies (the add_adapt registry meta keeps both None): ``frame`` says
+    # whether this checkpoint's shards are a full q8 keyframe or a sparse
+    # XOR-delta against the previous codes, and ``chain`` lists the ckpt ids
+    # (keyframe first, this checkpoint last) a restore must replay in order
+    frame: Optional[str] = None            # "key" | "delta"
+    chain: Optional[tuple] = None          # (keyframe_ckpt, ..., this_ckpt)
 
     @property
     def itemsize(self) -> int:
@@ -207,3 +214,9 @@ class CapacityError(ICheckError):
 
 class IntegrityError(ICheckError):
     pass
+
+
+class RestoreError(ICheckError):
+    """A checkpoint could not be reconstructed (missing or corrupt delta-chain
+    link, truncated frame, ...) — raised instead of decoding garbage."""
+

@@ -5,15 +5,35 @@ Each kernel package ships three paths (see ``common.resolve_impl``):
 ``ref.py``    -- pure-jnp oracle used by the test suite;
 ``ops.py``    -- jit'd public op with a blockwise XLA fallback that the
                  CPU multi-pod dry-run lowers (flash-style working set).
-"""
-from .ckpt_codec import dequantize, quantize, quantize_delta, undelta_dequantize
-from .common import resolve_impl
-from .flash_attention import attention, attention_ref
-from .rglru import rglru, rglru_ref
-from .rwkv6 import rwkv6, rwkv6_ref
 
-__all__ = [
-    "attention", "attention_ref", "rwkv6", "rwkv6_ref", "rglru", "rglru_ref",
-    "quantize", "quantize_delta", "dequantize", "undelta_dequantize",
-    "resolve_impl",
-]
+Exports resolve lazily (PEP 562): importing :mod:`repro.kernels` (or a
+jax-free submodule such as ``ckpt_codec.blocks``, which the host-side wire
+codec in ``repro.core.tiers`` depends on) does not import jax until a
+kernel op is actually touched.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_EXPORTS = {
+    "attention": ".flash_attention", "attention_ref": ".flash_attention",
+    "rwkv6": ".rwkv6", "rwkv6_ref": ".rwkv6",
+    "rglru": ".rglru", "rglru_ref": ".rglru",
+    "quantize": ".ckpt_codec", "quantize_delta": ".ckpt_codec",
+    "dequantize": ".ckpt_codec", "undelta_dequantize": ".ckpt_codec",
+    "resolve_impl": ".common",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        value = getattr(import_module(_EXPORTS[name], __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,5 +1,28 @@
-from .ops import dequantize, quantize, quantize_delta, undelta_dequantize
-from .ref import BLOCK
+"""Checkpoint codec: blockwise int8 quantization + XOR delta.
 
-__all__ = ["quantize", "quantize_delta", "dequantize", "undelta_dequantize",
-           "BLOCK"]
+``blocks`` (the layout constants + numpy reference) is imported eagerly and
+stays jax-free; the jit'd device ops resolve lazily (PEP 562) so that
+``repro.core.tiers`` can share the blockwise reference without pulling jax
+into every ``repro.core`` import.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+from .blocks import BLOCK, dequantize_np, quantize_np, to_blocks_np
+
+_OPS = ("quantize", "quantize_delta", "dequantize", "undelta_dequantize")
+
+__all__ = ["BLOCK", "to_blocks_np", "quantize_np", "dequantize_np", *_OPS]
+
+
+def __getattr__(name: str):
+    if name in _OPS:
+        value = getattr(import_module(".ops", __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

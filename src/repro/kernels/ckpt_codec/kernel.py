@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import BLOCK
+from .blocks import BLOCK
 
 ROWS_PER_TILE = 64  # (64, 256) f32 tile = 64 KiB in VMEM
 

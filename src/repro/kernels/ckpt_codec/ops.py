@@ -1,9 +1,19 @@
 """Public, jit-friendly checkpoint-codec ops (pad/flatten + impl dispatch).
 
-These are what ``repro.core.snapshot`` calls on the commit path when the
-client is configured with ``codec="q8"`` / ``codec="q8-delta"``: the encode
-runs *on device* before the D2H copy, so the host/agent fabric moves ~4x
-fewer bytes (int8 codes + 1/256 overhead of f32 scales).
+``repro.core.snapshot.snapshot_pytree(codec="q8"|"q8-delta")`` calls these
+on the commit hot path: every float region part goes through
+:func:`quantize` (or :func:`quantize_delta` against the catalog's
+previous-codes state) *on device*, before the D2H copy, so the host — and
+then the client→agent fabric and every storage tier — moves int8 codes +
+1/256 overhead of f32 scales instead of the raw f32 payload (~4x fewer
+bytes; for ``q8-delta`` the host packs the XOR deltas into sparse frames
+where unchanged blocks cost zero wire bytes).  Shape/dtype restoration
+metadata and the delta-frame bookkeeping travel in ``RegionMeta``
+(``dtype``, ``partition``, plus ``frame``/``chain`` on the per-checkpoint
+copies); :func:`undelta_dequantize` is the device-side replay primitive
+that folds a delta frame back onto the previous codes — the host restart
+path (``repro.core.tiers.q8_chain_decode``) applies the same XOR +
+dequantize in numpy, asserted bit-identical in the test suite.
 """
 from __future__ import annotations
 

@@ -8,12 +8,17 @@ compress to nothing under zstd on the agent side.
 
 All functions operate on *flattened, padded* buffers of shape
 (num_blocks, BLOCK); padding/unpadding to that layout is done by ``ops``.
+``BLOCK`` and the numpy reference live in :mod:`.blocks` (shared with the
+host-side wire codec in ``repro.core.tiers`` so the two cannot drift).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-BLOCK = 256  # values per quantization block (one f32 scale each)
+from .blocks import BLOCK
+
+__all__ = ["BLOCK", "quantize_ref", "dequantize_ref", "xor_delta_ref",
+           "quantize_delta_ref"]
 
 
 def quantize_ref(x):

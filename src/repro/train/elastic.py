@@ -166,12 +166,25 @@ class ElasticTrainer:
 
     # ----------------------------------------------------------- checkpoints
     def commit(self, blocking: bool = False):
-        """icheck_commit: async snapshot -> agents (paper line 26)."""
-        snap = snapshot_pytree(self.state, step=int(self.state.step))
-        self.client.add_adapt_snapshot(snap)   # refresh region boxes
-        parts = {name: r.parts for name, r in snap.regions.items()}
-        parts[DATA_REGION] = {0: self.data.state_array()}
-        h = self.client.commit(int(self.state.step), parts, blocking=blocking)
+        """icheck_commit: async snapshot -> agents (paper line 26).
+
+        With a q8 codec the snapshot quantizes on device (q8-delta: XOR
+        against the catalog's previous codes) before the D2H copy, and
+        ``commit_snapshot`` ships those frames as-is."""
+        step = int(self.state.step)
+        data_parts = {DATA_REGION: {0: self.data.state_array()}}
+        if self.client.codec in ("q8", "q8-delta"):
+            snap = snapshot_pytree(self.state, step=step,
+                                   codec=self.client.codec,
+                                   chain_lookup=self.client.delta_chain_lookup)
+            h = self.client.commit_snapshot(snap, extra_parts=data_parts,
+                                            blocking=blocking)
+        else:
+            snap = snapshot_pytree(self.state, step=step)
+            self.client.add_adapt_snapshot(snap)   # refresh region boxes
+            parts = {name: r.parts for name, r in snap.regions.items()}
+            parts.update(data_parts)
+            h = self.client.commit(step, parts, blocking=blocking)
         self._pending_commits.append(h)
         self._last_commit_t = self._clock.now()
         return h
