@@ -39,7 +39,9 @@ ALL = {
 SMOKE = {
     "b1": ("agent-count transfer knee (smoke)", bench_transfer.run_smoke),
     "b2": ("async commit overlap (smoke)", bench_async_overlap.run_smoke),
+    # b9 runs before b3/b10: it *writes* BENCH_prometheus.txt, they append
     "b9": ("storage lifecycle tiering (smoke)", bench_tiering.run_smoke),
+    "b3": ("peer redistribution (smoke)", bench_redistribution.run_smoke),
     "b10": ("incremental delta checkpointing (smoke)",
             bench_delta.run_smoke),
 }
@@ -60,6 +62,14 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b2_hidden_fraction"] = b2["hidden_fraction"]
         metrics["b2_commit_rate_Bps"] = b2["payload"] / max(
             b2["async_transfer_sim_s_hidden"], 1e-12)
+    b3 = results.get("b3")
+    if b3:
+        row = b3["rows"][-1]
+        # higher-is-better: adapt-window speedup of the peer path over the
+        # client funnel, and how many times fewer bytes the client sees
+        metrics["b3_peer_speedup"] = row["peer_speedup"]
+        metrics["b3_bytes_through_client_reduction"] = \
+            row["bytes_through_client_reduction"]
     b9 = results.get("b9")
     if b9:
         metrics["b9_lifecycle_commit_rate_Bps"] = \

@@ -16,18 +16,52 @@ already-compressed bytes and never re-encode.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 from concurrent.futures import Future
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
-from .simnet import EWMA, FaultInjector, SimNIC
-from .tiers import PFSTier, TierPipeline
+import numpy as np
+
+from .simnet import EWMA, FaultInjector, MemBus, SimNIC
+from .tiers import (PFSTier, TierPipeline, decode_payload,
+                    decode_slice_frames, slice_payload)
 from .types import AgentId, NodeId, ShardKey, TransferRecord
 
 
 class AgentDead(ConnectionError):
     pass
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceFetch:
+    """One transfer-program op, fully resolved: pull flattened elements
+    [vlo, vhi) of a source shard (replaying ``sources`` in chain order for
+    ``q8-delta``) and land them at ``dst_lo`` of the assembled buffer.
+
+    Each source is ``(provider, key)`` where the provider is the holding
+    :class:`Agent` (peer read over the fabric) or a shared tier with a
+    ``read_shard`` method (PFS/L3 fallback, sliced locally after the read).
+    """
+
+    vlo: int
+    vhi: int
+    dst_lo: int
+    codec: str
+    dtype: str
+    sources: Tuple[Tuple[object, ShardKey], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AssembleSpec:
+    """One destination part of a redistribution: the scratch key the
+    assembled payload lands under in this agent's L1, and its slice reads."""
+
+    out_key: ShardKey
+    dtype: str
+    nvals: int
+    fetches: Tuple[SliceFetch, ...]
 
 
 class _Op:
@@ -48,12 +82,22 @@ class Agent:
     """One checkpoint agent living on an iCheck node."""
 
     def __init__(self, agent_id: AgentId, node_id: NodeId, store: TierPipeline,
-                 nic: SimNIC, fault: Optional[FaultInjector] = None):
+                 nic: SimNIC, fault: Optional[FaultInjector] = None,
+                 membus: Optional[MemBus] = None):
         self.agent_id = agent_id
         self.node_id = node_id
         self.store = store
         self.nic = nic
+        self.membus = membus
         self.fault = fault or FaultInjector()
+        self.peer_reads = 0
+        self.peer_bytes_out = 0
+        # decoded-payload memo (ShardKey → raw bytes): a zstd source shard
+        # serves many slice reads during one redistribution — possibly
+        # interleaved across shards — so decompress each once per adapt
+        # window, not once per TransferOp (other codecs slice the stored
+        # bytes directly).  Cleared by the engine when the window ends.
+        self._decoded_memo: Dict[ShardKey, bytes] = {}
         self._inbox: "queue.Queue[_Op]" = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, name=f"agent-{agent_id}",
@@ -81,6 +125,54 @@ class Agent:
 
     def has(self, key: ShardKey) -> bool:
         return self.store.has(key)
+
+    # -------------------------------------------------------- redistribution
+    def peer_read(self, key: ShardKey, codec: str, dtype: str,
+                  vlo: int, vhi: int, requester_node: NodeId) -> bytes:
+        """Serve a slice frame for another agent's transfer program.
+
+        Like :meth:`get`, served off the caller's thread (concurrent across
+        agent pairs).  Only the sliced bytes move: intra-node requests ride
+        the node's memory bus, cross-node requests pay this node's NIC once
+        — the client is never in the path.
+        """
+        self._check_alive()
+        if codec == "zstd":
+            with self._lock:
+                raw = self._decoded_memo.get(key)
+            if raw is None:
+                raw = decode_payload(self.store.get(key, promote=False),
+                                     codec, dtype)
+                with self._lock:
+                    self._decoded_memo[key] = raw
+            blob = slice_payload(raw, "none", dtype, vlo, vhi)
+        else:
+            payload = self.store.get(key, promote=False)
+            blob = slice_payload(payload, codec, dtype, vlo, vhi)
+        if requester_node == self.node_id and self.membus is not None:
+            self.membus.transfer(len(blob))
+        else:
+            self.nic.transfer(len(blob))
+        self._check_alive()                  # may have died mid-transfer
+        with self._lock:
+            self.peer_reads += 1
+            self.peer_bytes_out += len(blob)
+        return blob
+
+    def clear_peer_cache(self) -> None:
+        """Release the decoded-payload memo (end of an adapt window) — the
+        decoded shards must not outlive the redistribution that needed
+        them."""
+        with self._lock:
+            self._decoded_memo.clear()
+
+    def assemble(self, spec: AssembleSpec) -> Future:
+        """Build one destination part from peer slice reads (asynchronous;
+        the assembled payload lands in this agent's L1 under
+        ``spec.out_key``).  Resolves to ``{nbytes, reads}`` accounting."""
+        fut: Future = Future()
+        self._inbox.put(_Op("assemble", payload=spec, future=fut))
+        return fut
 
     # ------------------------------------------------------------------ L2
     def drain(self, keys: List[ShardKey], pfs: PFSTier,
@@ -114,6 +206,8 @@ class Agent:
                 "bytes_in": self.bytes_in,
                 "transfers": len(self.transfers),
                 "rate_ewma": self.rate_ewma.predict(),
+                "peer_reads": self.peer_reads,
+                "peer_bytes_out": self.peer_bytes_out,
             }
 
     # ------------------------------------------------------------------ guts
@@ -135,6 +229,8 @@ class Agent:
                     op.future.set_result(res)
                     if op.on_done:
                         op.on_done(res)
+                elif op.kind == "assemble":
+                    op.future.set_result(self._do_assemble(op.payload))
             except BaseException as e:  # noqa: BLE001 - surface through future
                 if op.future is not None and not op.future.done():
                     op.future.set_exception(e)
@@ -159,6 +255,56 @@ class Agent:
             if sim > 0:
                 self.rate_ewma.update(len(payload) / sim)
         return rec
+
+    def _do_assemble(self, spec: AssembleSpec) -> dict:
+        """Execute one destination part's transfer program.
+
+        Runs on this agent's worker thread; peer reads are direct calls into
+        the source agents (served off *this* thread), so assemblies on
+        different destination agents proceed concurrently and no agent ever
+        waits on another agent's worker loop (no deadlock by construction).
+        """
+        self._check_alive()
+        buf = np.zeros(spec.nvals, dtype=np.dtype(spec.dtype))
+        reads: List[dict] = []
+        tier_cache: dict = {}       # one whole-object read per shard, not per op
+        for f in spec.fetches:
+            frames = []
+            for provider, key in f.sources:
+                if isinstance(provider, Agent):
+                    blob = provider.peer_read(key, f.codec, f.dtype,
+                                              f.vlo, f.vhi, self.node_id)
+                    reads.append({
+                        "node": provider.node_id, "bytes": len(blob),
+                        "kind": "intra" if provider.node_id == self.node_id
+                        else "cross"})
+                else:
+                    # shared-tier fallback (PFS/L3): whole-object read, then
+                    # slice locally — rare, but it keeps a partially-drained
+                    # source from wedging the adapt window.  The cache holds
+                    # the *decoded* bytes for zstd so k ops on one source
+                    # cost one read and one decompress, not k
+                    cached = tier_cache.get(key)
+                    if cached is None:
+                        payload = provider.read_shard(key)
+                        reads.append({"node": provider.name,
+                                      "bytes": len(payload), "kind": "tier"})
+                        if f.codec == "zstd":
+                            payload = decode_payload(payload, f.codec,
+                                                     f.dtype)
+                        cached = tier_cache[key] = payload
+                    blob = slice_payload(
+                        cached, "none" if f.codec == "zstd" else f.codec,
+                        f.dtype, f.vlo, f.vhi)
+                frames.append(blob)
+            vals = decode_slice_frames(frames, f.dtype, f.vlo, f.vhi)
+            buf[f.dst_lo:f.dst_lo + vals.size] = vals
+        self._check_alive()
+        payload = buf.tobytes()
+        self.store.put(spec.out_key, payload)
+        with self._lock:
+            self.bytes_in += len(payload)
+        return {"key": spec.out_key, "nbytes": len(payload), "reads": reads}
 
     def _do_drain(self, op: _Op) -> dict:
         self._check_alive()

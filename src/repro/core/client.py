@@ -443,15 +443,18 @@ class ICheckClient:
             handle._complete()
 
     # --------------------------------------------------------------- restart
-    def _fetch_decoded(self, region: RegionMeta, ckpt_id: int,
-                       part: int) -> bytes:
+    def _fetch_decoded(self, region: RegionMeta, ckpt_id: int, part: int,
+                       stats: Optional[dict] = None) -> bytes:
         """Fetch + decode one region part, replaying the delta chain
-        (keyframe → deltas) for ``q8-delta`` regions."""
+        (keyframe → deltas) for ``q8-delta`` regions.  ``stats`` (when
+        given) accumulates the wire bytes that flowed through this client —
+        the redistribution funnel's bytes-through-client accounting."""
         if region.codec != "q8-delta":
-            return decode_payload(
-                self.controller.fetch_shard(self.app_id, ckpt_id,
-                                            region.name, part),
-                region.codec, region.dtype)
+            blob = self.controller.fetch_shard(self.app_id, ckpt_id,
+                                               region.name, part)
+            if stats is not None:
+                stats["wire_bytes"] += len(blob)
+            return decode_payload(blob, region.codec, region.dtype)
         chain = region.chain or (ckpt_id,)
         blobs = []
         for cid in chain:
@@ -462,6 +465,8 @@ class ICheckClient:
                 raise RestoreError(
                     f"delta chain of {region.name!r} part {part} is broken: "
                     f"frame ckpt={cid} is gone (chain {chain})") from e
+            if stats is not None:
+                stats["wire_bytes"] += len(blobs[-1])
         return q8_chain_decode(blobs, region.dtype)
 
     def _ckpt_region(self, ckpt_id: int, name: str) -> RegionMeta:
@@ -511,37 +516,160 @@ class ICheckClient:
         return planlib.local_shape(region.shape, desc, part)
 
     # ---------------------------------------------------------- redistribute
+    def _resolve_redistribution_ckpt(self, ckpt_id: Optional[int]) -> int:
+        if ckpt_id is not None:
+            return ckpt_id
+        found = self.controller.latest_restartable(self.app_id)
+        if found is None:
+            raise ICheckError("nothing to redistribute from")
+        return found[0].ckpt_id
+
+    def _fetch_source_parts(self, name: str, ckpt_id: int,
+                            parts: Sequence[int],
+                            stats: Optional[dict] = None
+                            ) -> Dict[int, np.ndarray]:
+        """Shared fetch+decode+reshape block of the client-funnel paths
+        (1-d and mesh): pull whole source shards through this client."""
+        region = self.regions[name]
+        ckpt_region = self._ckpt_region(ckpt_id, name)
+        src_parts: Dict[int, np.ndarray] = {}
+        for sp in parts:
+            payload = self._fetch_decoded(ckpt_region, ckpt_id, sp, stats)
+            src_parts[sp] = np.frombuffer(bytearray(payload),
+                                          dtype=np.dtype(region.dtype)) \
+                .reshape(self._part_shape(region, sp))
+        return src_parts
+
+    def _publish_redistribution_done(self, name: str, new_parts: int,
+                                     via: str, sim_s: float,
+                                     bytes_through_client: int,
+                                     stats: Optional[dict] = None) -> None:
+        stats = stats or {}
+        self.controller.bus.publish(
+            E.REDISTRIBUTION_DONE, app=self.app_id, region=name,
+            new_parts=new_parts, via=via, sim_s=sim_s,
+            bytes_moved=stats.get("bytes_moved", bytes_through_client),
+            bytes_through_client=bytes_through_client,
+            peer_hops=stats.get("peer_hops", 0),
+            cross_reads=stats.get("cross_reads", 0),
+            intra_reads=stats.get("intra_reads", 0),
+            tier_reads=stats.get("tier_reads", 0))
+
+    def _try_peer(self, name: str, ckpt_id: int, programs_fn, wanted: set,
+                  new_parts: int, part_shape
+                  ) -> Optional[Dict[int, np.ndarray]]:
+        """Shared peer attempt of both redistribution flavours: compile (or
+        look up) the programs and run them agent→agent.  Returns None —
+        after publishing ``redistribution_fallback`` — when the client
+        funnel must take over (unsupported layout, agent death
+        mid-transfer, lost source shard)."""
+        ctl = self.controller
+        try:
+            programs = programs_fn()
+            if programs is None or len(programs) <= 1:
+                # a single destination part (e.g. gathering onto one
+                # replicated box) has no peer concurrency to exploit —
+                # assembling it on an agent and re-fetching it would only
+                # add a round trip on top of the funnel
+                ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=self.app_id,
+                                region=name,
+                                reason="unsupported_layout"
+                                if programs is None
+                                else "single_destination")
+                return None
+            return self._peer_redistribute(name, ckpt_id, programs, wanted,
+                                           new_parts, part_shape)
+        except (ICheckError, ConnectionError, TimeoutError, KeyError) as e:
+            ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=self.app_id,
+                            region=name, reason=repr(e))
+            return None
+
+    def _peer_redistribute(self, name: str, ckpt_id: int, programs,
+                           wanted: set, new_parts: int,
+                           part_shape) -> Dict[int, np.ndarray]:
+        """Peer path: agents execute the pre-staged transfer programs among
+        themselves; this client only dispatches, then fetches the parts its
+        local new ranks own.  The adapt-window time is the engine's analytic
+        transfer window plus the (concurrent-across-ranks, so max-per-node)
+        fetch of the wanted parts."""
+        ctl = self.controller
+        region = self._ckpt_region(ckpt_id, name)
+        results, stats = ctl.execute_redistribution(self.app_id, region,
+                                                    ckpt_id, programs)
+        try:
+            out: Dict[int, np.ndarray] = {}
+            fetch_lane: Dict[str, float] = {}
+            bytes_client = 0
+            for p in sorted(wanted):
+                agent, key, _ = results[p]
+                payload = agent.get(key)
+                bytes_client += len(payload)
+                fetch_lane[agent.node_id] = fetch_lane.get(agent.node_id, 0.0) \
+                    + len(payload) / agent.nic.bandwidth + agent.nic.latency
+                out[p] = np.frombuffer(bytearray(payload),
+                                       dtype=np.dtype(region.dtype)) \
+                    .reshape(part_shape(p))
+        finally:
+            ctl.release_redistribution(results)
+        sim_s = stats["sim_s"] + max(fetch_lane.values(), default=0.0)
+        self._publish_redistribution_done(name, new_parts, "peer", sim_s,
+                                          bytes_client, stats)
+        return out
+
     def redistribute(self, name: str, new_num_parts: int,
                      ckpt_id: Optional[int] = None,
-                     parts_needed: Optional[Sequence[int]] = None
-                     ) -> Dict[int, np.ndarray]:
+                     parts_needed: Optional[Sequence[int]] = None,
+                     via: str = "peer") -> Dict[int, np.ndarray]:
         """icheck_redistribute(): build the *new* distribution's parts from
         the latest checkpoint, moving only the slices each new part needs
-        (paper §III-B; BLOCK/CYCLIC preserved, part count changes)."""
+        (paper §III-B; BLOCK/CYCLIC preserved, part count changes).
+
+        ``via="peer"`` (default) executes the pre-staged transfer programs
+        agent→agent — only the parts in ``parts_needed`` (the local new
+        ranks') flow through this client.  ``via="client"`` forces the
+        legacy gather-through-the-client funnel, which is also the automatic
+        fallback when the peer engine cannot run (unsupported layout, agent
+        death mid-transfer, lost source shard).
+        """
+        if via not in ("peer", "client"):
+            raise ICheckError(f"unknown redistribution path via={via!r}")
         region = self.regions[name]
         old = region.partition
         if old.scheme == PartitionScheme.MESH:
             raise ICheckError("use redistribute_mesh for mesh regions")
         new = old.renumbered(new_num_parts)
-        moves = self.controller.plan_for_resize(self.app_id, name, new_num_parts)
-        if ckpt_id is None:
-            found = self.controller.latest_restartable(self.app_id)
-            if found is None:
-                raise ICheckError("nothing to redistribute from")
-            ckpt_id = found[0].ckpt_id
+        moves = self.controller.plan_for_resize(self.app_id, name,
+                                                new_num_parts)
+        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
         wanted = set(parts_needed) if parts_needed is not None \
             else set(range(new_num_parts))
+        ctl = self.controller
+        ctl.bus.publish(E.REDISTRIBUTION_STARTED, app=self.app_id,
+                        region=name, new_parts=new_num_parts, ckpt=ckpt_id,
+                        via=via)
+        if via == "peer":
+            out = self._try_peer(
+                name, ckpt_id,
+                lambda: ctl.transfer_programs(self.app_id, name,
+                                              new_num_parts),
+                wanted, new_num_parts,
+                part_shape=lambda p: planlib.local_shape(region.shape, new,
+                                                         p))
+            if out is not None:
+                return out
+        # client funnel (forced, unsupported layout, or peer failure)
+        t0 = ctl.clock.now()
+        stats = {"wire_bytes": 0}
         needed_src = sorted({mv.src for mv in moves if mv.dst in wanted})
-        ckpt_region = self._ckpt_region(ckpt_id, name)
-        src_parts: Dict[int, np.ndarray] = {}
-        for sp in needed_src:
-            payload = self._fetch_decoded(ckpt_region, ckpt_id, sp)
-            src_parts[sp] = np.frombuffer(bytearray(payload),
-                                          dtype=np.dtype(region.dtype)) \
-                .reshape(self._part_shape(region, sp))
+        src_parts = self._fetch_source_parts(name, ckpt_id, needed_src,
+                                             stats)
         sub_moves = [mv for mv in moves if mv.dst in wanted]
-        dst = planlib.apply_moves(src_parts, sub_moves, old, new, region.shape)
+        dst = planlib.apply_moves(src_parts, sub_moves, old, new,
+                                  region.shape)
         result = {p: dst[p] for p in wanted}
+        self._publish_redistribution_done(name, new_num_parts, "client",
+                                          ctl.clock.now() - t0,
+                                          stats["wire_bytes"])
         return result
 
     def commit_redistribution(self, name: str, new_num_parts: int) -> None:
@@ -549,7 +677,8 @@ class ICheckClient:
 
         Registers a *new* RegionMeta (the registry may alias the
         controller's copy — mutating in place would hide the partition
-        change from the catalog's mandatory delta-chain reset)."""
+        change from the catalog's mandatory delta-chain reset and from the
+        resize planner's plan/program cache invalidation)."""
         old = self.regions[name]
         region = dataclasses.replace(
             old, partition=old.partition.renumbered(new_num_parts))
@@ -557,30 +686,53 @@ class ICheckClient:
         self.controller.register_region(self.app_id, region)
 
     def redistribute_mesh(self, name: str, new_boxes: Sequence[planlib.Box],
-                          ckpt_id: Optional[int] = None
-                          ) -> Dict[int, np.ndarray]:
+                          ckpt_id: Optional[int] = None,
+                          parts_needed: Optional[Sequence[int]] = None,
+                          via: str = "peer") -> Dict[int, np.ndarray]:
         """Mesh-sharded (JAX) variant: old boxes from the region registry,
-        new boxes from the target sharding."""
+        new boxes from the target sharding.  Same peer-first execution as
+        :meth:`redistribute` — pass ``parts_needed`` (the local new ranks'
+        shard indices) so only those parts flow through this client; mesh
+        programs are compiled at adapt time because only the application
+        knows the new mesh's boxes."""
+        if via not in ("peer", "client"):
+            raise ICheckError(f"unknown redistribution path via={via!r}")
         region = self.regions[name]
         if region.partition.scheme != PartitionScheme.MESH:
             raise ICheckError(f"{name} is not a mesh region")
         old_boxes = region.partition.bounds
-        moves = planlib.mesh_moves(old_boxes, tuple(new_boxes))
-        if ckpt_id is None:
-            found = self.controller.latest_restartable(self.app_id)
-            if found is None:
-                raise ICheckError("nothing to redistribute from")
-            ckpt_id = found[0].ckpt_id
-        needed_src = sorted({mv.src for mv in moves})
-        ckpt_region = self._ckpt_region(ckpt_id, name)
-        src_parts: Dict[int, np.ndarray] = {}
-        for sp in needed_src:
-            payload = self._fetch_decoded(ckpt_region, ckpt_id, sp)
-            src_parts[sp] = np.frombuffer(bytearray(payload),
-                                          dtype=np.dtype(region.dtype)) \
-                .reshape(self._part_shape(region, sp))
-        return planlib.apply_mesh_moves(src_parts, moves, tuple(new_boxes),
-                                        np.dtype(region.dtype))
+        new_boxes = tuple(new_boxes)
+        moves = planlib.mesh_moves(old_boxes, new_boxes)
+        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
+        wanted = set(parts_needed) if parts_needed is not None \
+            else set(range(len(new_boxes)))
+        ctl = self.controller
+        ctl.bus.publish(E.REDISTRIBUTION_STARTED, app=self.app_id,
+                        region=name, new_parts=len(new_boxes), ckpt=ckpt_id,
+                        via=via)
+        if via == "peer":
+            out = self._try_peer(
+                name, ckpt_id,
+                lambda: planlib.compile_mesh_transfer_programs(old_boxes,
+                                                               new_boxes),
+                wanted, len(new_boxes),
+                part_shape=lambda p: tuple(hi - lo
+                                           for lo, hi in new_boxes[p]))
+            if out is not None:
+                return out
+        t0 = ctl.clock.now()
+        stats = {"wire_bytes": 0}
+        sub_moves = [mv for mv in moves if mv.dst in wanted]
+        needed_src = sorted({mv.src for mv in sub_moves})
+        src_parts = self._fetch_source_parts(name, ckpt_id, needed_src,
+                                             stats)
+        dst = planlib.apply_mesh_moves(src_parts, sub_moves, new_boxes,
+                                       np.dtype(region.dtype))
+        result = {p: dst[p] for p in wanted}
+        self._publish_redistribution_done(name, len(new_boxes), "client",
+                                          ctl.clock.now() - t0,
+                                          stats["wire_bytes"])
+        return result
 
     # ---------------------------------------------------------- probe_agents
     def probe_agents(self) -> List[Agent]:

@@ -216,6 +216,10 @@ class Controller:
             # chain reset so the next commit emits a keyframe
             self.catalog.reset_delta_chains(app_id=app_id, region=region.name,
                                             reason="resize")
+            # pre-staged plans/programs were computed against the old
+            # layout: a later resize to a previously-planned part count
+            # must re-plan, never reuse the stale cache
+            self.resize.invalidate(app_id, region.name)
 
     def regions_of(self, app_id: AppId) -> Dict[str, RegionMeta]:
         with self._lock:
@@ -230,6 +234,8 @@ class Controller:
         # codes_dev arrays) — long-lived controllers see many apps come and
         # go, and a finished app will keyframe anyway if it reconnects
         self.catalog.reset_delta_chains(app_id=app_id, reason="app_finished")
+        # likewise the pre-staged resize plans/transfer programs
+        self.resize.invalidate(app_id)
 
     # =================================================== service delegation
     # checkpoints (catalog)
@@ -297,10 +303,25 @@ class Controller:
                           factor: float = 4.0, slack: float = 1e-3) -> float:
         return self.health.transfer_deadline(nbytes, agent, factor, slack)
 
-    # redistribution planning
+    # redistribution planning / peer execution
     def plan_for_resize(self, app_id: AppId, region_name: str,
                         new_parts: int) -> List[planlib.Move]:
         return self.resize.plan_for_resize(app_id, region_name, new_parts)
+
+    def transfer_programs(self, app_id: AppId, region_name: str,
+                          new_parts: int):
+        """Pre-staged per-destination transfer programs (None = layout the
+        peer path cannot express; use the client funnel)."""
+        return self.resize.transfer_programs(app_id, region_name, new_parts)
+
+    def execute_redistribution(self, app_id: AppId, region: RegionMeta,
+                               ckpt_id: CkptId, programs):
+        """Run transfer programs agent→agent; see
+        :meth:`PeerRedistributionEngine.execute`."""
+        return self.resize.engine.execute(app_id, region, ckpt_id, programs)
+
+    def release_redistribution(self, results) -> None:
+        self.resize.engine.release(results)
 
     # ================================================================== misc
     def close(self) -> None:

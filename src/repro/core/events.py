@@ -46,6 +46,21 @@ DRAIN_FAILED = "drain_failed"
 COMMIT_DONE = "commit_done"
 
 RESIZE_FOREWARNED = "resize_forewarned"
+
+# -- peer-to-peer redistribution (the adapt window) -------------------------
+# an adapt-window redistribution began; payload carries via="peer" (agents
+# move slices among themselves from pre-staged transfer programs) or
+# via="client" (the legacy gather-through-the-client funnel)
+REDISTRIBUTION_STARTED = "redistribution_started"
+# the redistribution finished; payload carries bytes_moved (wire bytes of
+# every slice transfer), peer_hops / cross / intra / tier read counts,
+# bytes_through_client (only the parts the local new ranks fetched) and the
+# simulated adapt-window seconds — the TelemetryService's resize signal
+REDISTRIBUTION_DONE = "redistribution_done"
+# the peer engine could not run (unsupported layout, agent death
+# mid-transfer, lost source shard): the client funnel takes over so the
+# adapt window completes instead of wedging
+REDISTRIBUTION_FALLBACK = "redistribution_fallback"
 CODEC_DEGRADED = "codec_degraded"
 SHARD_SPILLED = "shard_spilled"
 SHARD_PROMOTED = "shard_promoted"

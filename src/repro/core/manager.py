@@ -20,7 +20,7 @@ from typing import Dict, List, Optional
 
 from . import events as E
 from .agent import Agent
-from .simnet import EWMA, FaultInjector, SimClock, SimNIC
+from .simnet import EWMA, FaultInjector, MemBus, SimClock, SimNIC
 from .tiers import LocalDiskTier, MemoryTier, TierPipeline
 from .types import AgentId, AppId, NodeSpec
 
@@ -41,6 +41,9 @@ class Manager:
         self.store = TierPipeline(tiers, bus=bus, node_id=spec.node_id)
         self.nic = SimNIC(f"nic-{spec.node_id}", spec.nic_bandwidth,
                           spec.nic_latency, clock=self.clock)
+        # intra-node peer-redistribution copies bypass the NIC on this bus
+        self.membus = MemBus(f"mem-{spec.node_id}", spec.mem_bandwidth,
+                             clock=self.clock)
         self._agents: Dict[AgentId, Agent] = {}
         self._agent_apps: Dict[AgentId, AppId] = {}
         self._lock = threading.Lock()
@@ -64,7 +67,8 @@ class Manager:
             if len(self._agents) >= self.spec.max_agents:
                 raise RuntimeError(f"node {self.node_id} at max_agents")
             agent_id = f"{self.node_id}/a{next(self._agent_seq)}"
-            agent = Agent(agent_id, self.node_id, self.store, self.nic, self.fault)
+            agent = Agent(agent_id, self.node_id, self.store, self.nic,
+                          self.fault, membus=self.membus)
             self._agents[agent_id] = agent
             self._agent_apps[agent_id] = app_id
         return agent

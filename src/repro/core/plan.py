@@ -14,7 +14,7 @@ Everything here is pure and deterministic → hypothesis property tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -292,3 +292,152 @@ def apply_mesh_moves(src_parts: Dict[int, np.ndarray], moves: Sequence[MeshMove]
 def moves_bytes(moves: Sequence[Move], row_bytes: int) -> int:
     """Total bytes a 1-d plan transfers (for scheduling/benchmarks)."""
     return sum(mv.length for mv in moves) * row_bytes
+
+
+# --------------------------------------------------------------------------
+# transfer programs (peer-to-peer redistribution)
+# --------------------------------------------------------------------------
+# A *move list* says which global slices change owner; a *transfer program*
+# says, per destination part, exactly which flattened element ranges of which
+# source shards an agent must pull and where they land in the assembled
+# destination buffer.  Programs are what the resize forewarning pre-stages so
+# the adapt window only executes: agents serve the ranges straight off their
+# stored payloads (codec-aware slicing lives in ``core/tiers.py``) and ship
+# only needed bytes, never whole shards.
+@dataclasses.dataclass(frozen=True)
+class TransferOp:
+    """One slice read: flattened elements [src_lo, src_hi) of source part
+    ``src`` land at flattened offset ``dst_lo`` of the destination part."""
+
+    src: int
+    src_lo: int
+    src_hi: int
+    dst_lo: int
+
+    @property
+    def nvals(self) -> int:
+        return self.src_hi - self.src_lo
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferProgram:
+    """Everything one destination part needs: its flattened size and the
+    ordered slice reads that assemble it."""
+
+    dst: int
+    nvals: int
+    ops: Tuple[TransferOp, ...]
+
+    @property
+    def moved_vals(self) -> int:
+        return sum(op.nvals for op in self.ops)
+
+
+def compile_transfer_programs(n: int, old: PartitionDesc, new: PartitionDesc,
+                              shape: Sequence[int]
+                              ) -> "Optional[Dict[int, TransferProgram]]":
+    """Compile a 1-d re-partitioning into per-destination transfer programs.
+
+    Returns None when the layout cannot be expressed as contiguous flattened
+    element ranges (non-leading distributed axis, replicated schemes) — the
+    caller must fall back to the client-funnel path.
+    """
+    if PartitionScheme.REPLICATED in (old.scheme, new.scheme):
+        return None
+    if old.axis != 0 or new.axis != 0:
+        return None
+    shape = tuple(shape)
+    rowvals = 1
+    for s in shape[1:]:
+        rowvals *= int(s)
+    moves = redistribution_moves(n, old, new)
+    ops_by_dst: Dict[int, List[TransferOp]] = {d: [] for d in range(new.num_parts)}
+    for mv in moves:
+        ops_by_dst[mv.dst].append(TransferOp(
+            src=mv.src, src_lo=mv.src_lo * rowvals,
+            src_hi=(mv.src_lo + mv.length) * rowvals,
+            dst_lo=mv.dst_lo * rowvals))
+    return {
+        dp: TransferProgram(
+            dst=dp, nvals=local_size(n, new, dp) * rowvals,
+            ops=tuple(sorted(ops_by_dst[dp], key=lambda o: o.dst_lo)))
+        for dp in range(new.num_parts)
+    }
+
+
+def _row_major_strides(shape: Sequence[int]) -> List[int]:
+    st = [1] * len(shape)
+    for d in range(len(shape) - 2, -1, -1):
+        st[d] = st[d + 1] * shape[d + 1]
+    return st
+
+
+def _box_runs(src_shape: Sequence[int], src_box: Box,
+              dst_shape: Sequence[int], dst_box: Box
+              ) -> List[Tuple[int, int, int]]:
+    """Contiguous flattened runs of one mesh move (src part → dst part).
+
+    Rows along the innermost dimension are contiguous in both local layouts;
+    adjacent runs that stay contiguous in *both* buffers are merged.
+    """
+    import itertools as _it
+
+    if not src_box:                       # scalar region
+        return [(0, 1, 0)]
+    sst = _row_major_strides(src_shape)
+    dstst = _row_major_strides(dst_shape)
+    extents = [hi - lo for lo, hi in src_box]
+    run = extents[-1]
+    runs: List[Tuple[int, int, int]] = []
+    for idx in _it.product(*(range(e) for e in extents[:-1])):
+        soff = src_box[-1][0] + sum(
+            (src_box[d][0] + idx[d]) * sst[d] for d in range(len(idx)))
+        doff = dst_box[-1][0] + sum(
+            (dst_box[d][0] + idx[d]) * dstst[d] for d in range(len(idx)))
+        if runs and runs[-1][1] == soff \
+                and runs[-1][2] + (runs[-1][1] - runs[-1][0]) == doff:
+            runs[-1] = (runs[-1][0], soff + run, runs[-1][2])
+        else:
+            runs.append((soff, soff + run, doff))
+    return runs
+
+
+def compile_mesh_transfer_programs(old_boxes: Sequence[Box],
+                                   new_boxes: Sequence[Box]
+                                   ) -> Dict[int, TransferProgram]:
+    """N-d mesh variant: box-intersection moves → per-destination programs
+    of contiguous flattened runs (src-local → dst-local coordinates)."""
+    moves = mesh_moves(tuple(old_boxes), tuple(new_boxes))
+    src_shapes = [tuple(hi - lo for lo, hi in b) for b in old_boxes]
+    dst_shapes = [tuple(hi - lo for lo, hi in b) for b in new_boxes]
+    ops_by_dst: Dict[int, List[TransferOp]] = {d: [] for d in range(len(new_boxes))}
+    for mv in moves:
+        for slo, shi, dlo in _box_runs(src_shapes[mv.src], mv.src_box,
+                                       dst_shapes[mv.dst], mv.dst_box):
+            ops_by_dst[mv.dst].append(TransferOp(src=mv.src, src_lo=slo,
+                                                 src_hi=shi, dst_lo=dlo))
+    out = {}
+    for dp, shp in enumerate(dst_shapes):
+        nvals = 1
+        for s in shp:
+            nvals *= s
+        out[dp] = TransferProgram(
+            dst=dp, nvals=nvals,
+            ops=tuple(sorted(ops_by_dst[dp], key=lambda o: o.dst_lo)))
+    return out
+
+
+def apply_transfer_programs(src_flat: Dict[int, np.ndarray],
+                            programs: Dict[int, TransferProgram],
+                            dtype) -> Dict[int, np.ndarray]:
+    """Numpy oracle for program execution: flattened source parts →
+    flattened destination parts (tests compare this against both
+    ``apply_moves`` and the agents' peer-assembled shards)."""
+    out: Dict[int, np.ndarray] = {}
+    for dp, prog in programs.items():
+        buf = np.zeros(prog.nvals, dtype=np.dtype(dtype))
+        for op in prog.ops:
+            buf[op.dst_lo:op.dst_lo + op.nvals] = \
+                src_flat[op.src][op.src_lo:op.src_hi]
+        out[dp] = buf
+    return out

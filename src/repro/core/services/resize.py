@@ -1,18 +1,40 @@
-"""Resize forewarning → pre-staged redistribution plans.
+"""Resize forewarning → pre-staged plans, and the peer redistribution engine.
 
 Paper §III-A interaction 4: the RM "informs the controller about an
 impending resource change of an application so that agents can prepare ...
-ahead of time".  Plans are cached per (app, region, new_parts) so the
-adapt-window redistribution (client.redistribute) reuses the pre-staged
-moves instead of re-planning under time pressure.
+ahead of time".  Two artifacts are pre-staged per (app, region, new_parts):
+
+  * the *move list* (``plan_for_resize``) — what the legacy client funnel
+    and the benchmarks consume;
+  * the *transfer programs* (``transfer_programs``) — per-destination-part
+    slice reads the agents execute peer-to-peer during the adapt window
+    (arXiv:2509.05248 style), so the window only executes, never plans.
+
+Both caches are invalidated when a region's partition changes
+(``commit_redistribution`` → ``register_region``): a plan computed against
+the old layout must never be reused for the new one.
+
+:class:`PeerRedistributionEngine` (owned by the planner) executes the
+programs: it resolves every source shard (live L1 agent, else PFS, else L3),
+dispatches one ``assemble`` op per destination part to that part's owning
+agent, waits, and reports analytic adapt-window timing — per-node
+serialized-at-full-bandwidth sums, exactly the model ``CommitHandle`` uses
+for concurrent puts, so concurrency across agent pairs shows up as
+wall-clock it actually saves.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import itertools
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from .. import events as E
 from .. import plan as planlib
-from ..types import AppId, PartitionScheme
+from ..agent import Agent, AssembleSpec, SliceFetch
+from ..types import (AppId, ICheckError, NodeSpec, PartitionScheme,
+                     RegionMeta, ShardKey)
 
 
 class ResizePlanner:
@@ -20,26 +42,83 @@ class ResizePlanner:
         self.ctl = ctl
         # (app_id, region_name, new_parts) -> [Move]
         self.plans: Dict[Tuple[AppId, str, int], List[planlib.Move]] = {}
+        # (app_id, region_name, new_parts) -> {dst: TransferProgram} | None
+        # (None = layout the peer path cannot express; client funnel only)
+        self.programs: Dict[Tuple[AppId, str, int],
+                            Optional[Dict[int, planlib.TransferProgram]]] = {}
+        self.engine = PeerRedistributionEngine(ctl)
 
     def plan_for_resize(self, app_id: AppId, region_name: str,
                         new_parts: int) -> List[planlib.Move]:
         ctl = self.ctl
         key = (app_id, region_name, new_parts)
+        while True:
+            with ctl._lock:
+                if key in self.plans:
+                    return self.plans[key]
+                region = ctl._regions[app_id][region_name]
+            old = region.partition
+            new = old.renumbered(new_parts)
+            n = region.shape[old.axis] if old.scheme.value != "replicated" \
+                else 1
+            moves = planlib.redistribution_moves(n, old, new) \
+                if old.scheme.value != "replicated" else []
+            # the plan was computed outside the lock: cache it only if the
+            # partition did not change mid-compile (a concurrent
+            # commit_redistribution + invalidate must never be overwritten
+            # by a stale write-back) — otherwise replan against the new one
+            with ctl._lock:
+                if ctl._regions[app_id][region_name].partition == old:
+                    self.plans[key] = moves
+                    return moves
+
+    def transfer_programs(self, app_id: AppId, region_name: str,
+                          new_parts: int
+                          ) -> Optional[Dict[int, planlib.TransferProgram]]:
+        """Pre-staged (or compiled on demand) per-destination transfer
+        programs; None when the layout needs the client fallback."""
+        ctl = self.ctl
+        key = (app_id, region_name, new_parts)
+        while True:
+            with ctl._lock:
+                if key in self.programs:
+                    return self.programs[key]
+                region = ctl._regions[app_id][region_name]
+            old = region.partition
+            if old.scheme == PartitionScheme.MESH:
+                programs = None  # mesh boxes are only known at adapt time
+            else:
+                programs = planlib.compile_transfer_programs(
+                    region.shape[old.axis]
+                    if old.scheme.value != "replicated" else 1,
+                    old, old.renumbered(new_parts), region.shape)
+            # same stale write-back guard as plan_for_resize
+            with ctl._lock:
+                if ctl._regions[app_id][region_name].partition == old:
+                    self.programs[key] = programs
+                    return programs
+
+    def invalidate(self, app_id: AppId, region_name: Optional[str] = None
+                   ) -> int:
+        """Drop cached plans/programs of one region (its partition changed:
+        anything computed against the old layout is stale), or of the whole
+        app when ``region_name`` is None (app finished — long-lived
+        controllers must not accumulate programs across app turnover)."""
+        ctl = self.ctl
         with ctl._lock:
-            if key in self.plans:
-                return self.plans[key]
-            region = ctl._regions[app_id][region_name]
-        old = region.partition
-        new = old.renumbered(new_parts)
-        n = region.shape[old.axis] if old.scheme.value != "replicated" else 1
-        moves = planlib.redistribution_moves(n, old, new) \
-            if old.scheme.value != "replicated" else []
-        with ctl._lock:
-            self.plans[key] = moves
-        return moves
+            victims = [k for k in self.plans if k[0] == app_id
+                       and (region_name is None or k[1] == region_name)]
+            for k in victims:
+                del self.plans[k]
+            pvictims = [k for k in self.programs if k[0] == app_id
+                        and (region_name is None or k[1] == region_name)]
+            for k in pvictims:
+                del self.programs[k]
+        return len(set(victims) | set(pvictims))
 
     def on_app_info(self, app_id: str, info: dict) -> None:
-        """RM forewarning callback: pre-stage plans for every region."""
+        """RM forewarning callback: pre-stage plans AND transfer programs
+        for every region, so the adapt window only executes."""
         if info.get("event") != "impending_resize":
             return
         ctl = self.ctl
@@ -50,7 +129,7 @@ class ResizePlanner:
                 return
             app.pending_resize = new_ranks
             regions = dict(ctl._regions.get(app_id, {}))
-        planned = 0
+        planned = staged = 0
         for name, region in regions.items():
             # MESH regions replan against the *new mesh's* boxes, which only
             # the application knows at adapt time (redistribute_mesh)
@@ -58,5 +137,222 @@ class ResizePlanner:
                 continue
             self.plan_for_resize(app_id, name, new_ranks)
             planned += 1
+            if self.transfer_programs(app_id, name, new_ranks) is not None:
+                staged += 1
         ctl.bus.publish(E.RESIZE_FOREWARNED, app=app_id, new_ranks=new_ranks,
-                        plans=planned)
+                        plans=planned, programs=staged)
+
+
+class PeerRedistributionEngine:
+    """Executes pre-staged transfer programs agent→agent during the adapt
+    window; the client only dispatches and later fetches its local parts."""
+
+    def __init__(self, ctl):
+        self.ctl = ctl
+        self._gen = itertools.count()
+
+    # ------------------------------------------------------------ execution
+    def execute(self, app_id: AppId, region: RegionMeta, ckpt_id: int,
+                programs: Dict[int, planlib.TransferProgram]
+                ) -> Tuple[Dict[int, Tuple[Agent, ShardKey, int]], dict]:
+        """Run one region's programs.  Returns
+        ``({dst_part: (owning_agent, scratch_key, nbytes)}, stats)``; raises
+        :class:`ICheckError` (or the underlying connection error) when a
+        source is unreachable or an agent dies mid-transfer — the caller
+        falls back to the client funnel.
+        """
+        ctl = self.ctl
+        agents = ctl.agents_for(app_id)
+        if not agents:
+            raise ICheckError(f"no live agents for {app_id}")
+        chain: Tuple[int, ...] = tuple(region.chain) \
+            if region.codec == "q8-delta" and region.chain else (ckpt_id,)
+        providers = self._resolve_sources(app_id, region.name, chain,
+                                          programs)
+        gen = next(self._gen)
+        scratch_region = f"{region.name}.redist{gen}"
+        by_node: Dict[str, List[Agent]] = {}
+        for a in agents:
+            by_node.setdefault(a.node_id, []).append(a)
+        jobs = []
+        for dp in sorted(programs):
+            prog = programs[dp]
+            out_key = ShardKey(app_id, ckpt_id, scratch_region, dp)
+            fetches = tuple(
+                SliceFetch(vlo=op.src_lo, vhi=op.src_hi, dst_lo=op.dst_lo,
+                           codec=region.codec, dtype=region.dtype,
+                           sources=tuple(providers[(cid, op.src)]
+                                         for cid in chain))
+                for op in prog.ops)
+            agent = self._place_destination(dp, prog, chain, providers,
+                                            agents, by_node)
+            spec = AssembleSpec(out_key=out_key, dtype=region.dtype,
+                                nvals=prog.nvals, fetches=fetches)
+            jobs.append((dp, agent, out_key, agent.assemble(spec), prog))
+
+        # wall-clock deadline per job: with scaled real sleeps
+        # (time_scale > 0) the simulated transfers take real time, so the
+        # timeout must scale with the bytes the program moves (the
+        # CommitHandle straggler-deadline pattern); 60 s otherwise
+        scale = max(ctl.clock.time_scale, 0.0)
+        itemsize = max(1, np.dtype(region.dtype).itemsize)
+        results: Dict[int, Tuple[Agent, ShardKey, int]] = {}
+        reads: List[dict] = []
+        error: Optional[BaseException] = None
+        try:
+            for dp, agent, out_key, fut, prog in jobs:
+                if scale > 0:
+                    est_sim = prog.moved_vals * itemsize * len(chain) / 1e9
+                    wall = est_sim * scale * 4.0 + 10.0
+                else:
+                    wall = 60.0
+                try:
+                    res = fut.result(timeout=wall)
+                except _FutureTimeout:
+                    # on 3.10 this is NOT builtin TimeoutError: convert so
+                    # the client's fallback except-tuple always catches it
+                    error = error or ICheckError(
+                        f"assemble of part {dp} timed out on "
+                        f"{agent.agent_id}")
+                    continue
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    error = error or e
+                    continue
+                results[dp] = (agent, out_key, res["nbytes"])
+                reads.extend(res["reads"])
+        finally:
+            # decoded-payload memos on the source agents are adapt-window
+            # scratch too: drop them with the window
+            self._clear_source_memos(providers)
+        if error is not None:
+            self.release(results)
+            for dp, agent, out_key, fut, _ in jobs:
+                if dp in results:
+                    continue
+                # a timed-out assemble may still be running on the agent's
+                # worker thread and will store its scratch *after* an eager
+                # drop (and repopulate source decode memos after the eager
+                # clear) — defer both cleanups to the future's completion
+                # (runs immediately when the job already failed)
+                fut.add_done_callback(
+                    lambda f, a=agent, k=out_key:
+                    (self._drop_quiet(a, k),
+                     self._clear_source_memos(providers)))
+            raise error
+        return results, self._stats(results, reads)
+
+    def release(self, results: Dict[int, Tuple[Agent, ShardKey, int]]) -> None:
+        """Drop the scratch redistribution shards (after the adapt window)."""
+        for agent, key, _ in results.values():
+            self._drop_quiet(agent, key)
+
+    @staticmethod
+    def _drop_quiet(agent: Agent, key: ShardKey) -> None:
+        try:
+            agent.store.drop(key)
+        except Exception:  # noqa: BLE001 - scratch GC must never raise
+            pass
+
+    @staticmethod
+    def _clear_source_memos(providers: dict) -> None:
+        for provider, _ in providers.values():
+            if isinstance(provider, Agent):
+                try:
+                    provider.clear_peer_cache()
+                except Exception:  # noqa: BLE001 - scratch GC must never raise
+                    pass
+
+    # ------------------------------------------------------------ internals
+    def _place_destination(self, dp: int, prog: planlib.TransferProgram,
+                           chain: Tuple[int, ...], providers: dict,
+                           agents: List[Agent],
+                           by_node: Dict[str, List[Agent]]) -> Agent:
+        """Locality-aware owner for one destination part: the node holding
+        most of its source bytes assembles it, so the bulk of the slice
+        reads ride the memory bus instead of a NIC.  Ties and tier-resident
+        sources fall back to round-robin over the app's agents."""
+        node_vals: Dict[str, int] = {}
+        head = chain[0]                # keyframe carries the bulk
+        for op in prog.ops:
+            provider, _ = providers[(head, op.src)]
+            if isinstance(provider, Agent):
+                node_vals[provider.node_id] = \
+                    node_vals.get(provider.node_id, 0) + op.nvals
+        best = max(node_vals, key=lambda n: (node_vals[n], n), default=None)
+        if best is not None and best in by_node:
+            locals_ = by_node[best]
+            return locals_[dp % len(locals_)]
+        return agents[dp % len(agents)]
+
+    def _resolve_sources(self, app_id: AppId, region: str,
+                         chain: Tuple[int, ...],
+                         programs: Dict[int, planlib.TransferProgram]) -> dict:
+        """(ckpt_id, src_part) → (provider, key) for every needed source
+        frame: a live L1 agent holding a replica, else the PFS, else L3."""
+        ctl = self.ctl
+        l3 = getattr(ctl, "l3", None)
+        needed = sorted({op.src for prog in programs.values()
+                         for op in prog.ops})
+        providers = {}
+        for part in needed:
+            for cid in chain:
+                pair = next(ctl.catalog.agents_with(app_id, cid, region,
+                                                    part), None)
+                if pair is not None:
+                    providers[(cid, part)] = pair
+                    continue
+                key = ShardKey(app_id, cid, region, part)
+                if ctl.pfs.has_shard(key):
+                    providers[(cid, part)] = (ctl.pfs, key)
+                elif l3 is not None and l3.has_shard(key):
+                    providers[(cid, part)] = (l3, key)
+                else:
+                    raise ICheckError(
+                        f"source shard {app_id}/{cid}/{region}/{part} is "
+                        f"unreachable on every tier")
+        return providers
+
+    def _stats(self, results: dict, reads: List[dict]) -> dict:
+        """Analytic adapt-window timing: per-node serialized-at-full-bw sums
+        (== fluid-model concurrent completion), window = busiest lane."""
+        ctl = self.ctl
+        # fallback bandwidths for a node whose manager vanished mid-window:
+        # NodeSpec's own defaults, not re-hardcoded literals
+        fallback = NodeSpec(node_id="?")
+        lanes: Dict[str, float] = {}
+        counts = {"cross": 0, "intra": 0, "tier": 0}
+        bytes_moved = 0
+        for r in reads:
+            counts[r["kind"]] += 1
+            bytes_moved += r["bytes"]
+            node = r["node"]
+            if r["kind"] == "cross":
+                mgr = ctl._managers.get(node)
+                bw = mgr.nic.bandwidth if mgr else fallback.nic_bandwidth
+                lat = mgr.nic.latency if mgr else fallback.nic_latency
+                lanes[node] = lanes.get(node, 0.0) + r["bytes"] / bw + lat
+            elif r["kind"] == "intra":
+                mgr = ctl._managers.get(node)
+                bw = mgr.spec.mem_bandwidth if mgr \
+                    else fallback.mem_bandwidth
+                lanes[f"mem-{node}"] = lanes.get(f"mem-{node}", 0.0) \
+                    + r["bytes"] / bw
+            else:                         # shared tier (PFS/L3 object store)
+                bw = ctl.pfs.ingest.bandwidth if node == ctl.pfs.name else \
+                    getattr(getattr(ctl, "l3", None), "link",
+                            ctl.pfs.ingest).bandwidth
+                lanes[node] = lanes.get(node, 0.0) + r["bytes"] / bw
+        # assembled parts are written into the owning node's memory
+        for agent, _, nbytes in results.values():
+            mgr = ctl._managers.get(agent.node_id)
+            bw = mgr.spec.mem_bandwidth if mgr else fallback.mem_bandwidth
+            lanes[f"mem-{agent.node_id}"] = \
+                lanes.get(f"mem-{agent.node_id}", 0.0) + nbytes / bw
+        return {
+            "sim_s": max(lanes.values(), default=0.0),
+            "bytes_moved": bytes_moved,
+            "peer_hops": counts["cross"] + counts["intra"],
+            "cross_reads": counts["cross"],
+            "intra_reads": counts["intra"],
+            "tier_reads": counts["tier"],
+        }

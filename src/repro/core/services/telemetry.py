@@ -69,6 +69,14 @@ class AppTelemetry:
         self.delta_key_frames = 0
         self.delta_delta_frames = 0
         self.delta_chain_resets = 0
+        # adapt-window redistribution (redistribution_done / _fallback)
+        self.redistributions_peer = 0
+        self.redistributions_client = 0
+        self.redist_fallbacks = 0
+        self.redist_bytes_moved = 0          # slice wire bytes, cumulative
+        self.redist_bytes_through_client = 0
+        self.redist_peer_hops = 0            # agent→agent slice reads
+        self.redist_window_s = EWMA(alpha=alpha)
 
     def as_dict(self) -> dict:
         return {
@@ -93,6 +101,13 @@ class AppTelemetry:
             "delta_key_frames": self.delta_key_frames,
             "delta_delta_frames": self.delta_delta_frames,
             "delta_chain_resets": self.delta_chain_resets,
+            "redistributions_peer": self.redistributions_peer,
+            "redistributions_client": self.redistributions_client,
+            "redist_fallbacks": self.redist_fallbacks,
+            "redist_bytes_moved": self.redist_bytes_moved,
+            "redist_bytes_through_client": self.redist_bytes_through_client,
+            "redist_peer_hops": self.redist_peer_hops,
+            "redist_window_s": self.redist_window_s.predict(),
         }
 
 
@@ -121,7 +136,8 @@ class TelemetryService:
             self._on_event,
             events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
                     E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED,
-                    E.CKPT_DELTA_COMMITTED, E.DELTA_CHAIN_RESET)
+                    E.CKPT_DELTA_COMMITTED, E.DELTA_CHAIN_RESET,
+                    E.REDISTRIBUTION_DONE, E.REDISTRIBUTION_FALLBACK)
             + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
 
     def close(self) -> None:
@@ -170,6 +186,19 @@ class TelemetryService:
                 tel.delta_delta_frames += int(p.get("delta_frames", 0))
             elif name == E.DELTA_CHAIN_RESET:
                 self._app(p["app"]).delta_chain_resets += 1
+            elif name == E.REDISTRIBUTION_DONE:
+                tel = self._app(p["app"])
+                if p.get("via") == "peer":
+                    tel.redistributions_peer += 1
+                else:
+                    tel.redistributions_client += 1
+                tel.redist_bytes_moved += int(p.get("bytes_moved", 0))
+                tel.redist_bytes_through_client += \
+                    int(p.get("bytes_through_client", 0))
+                tel.redist_peer_hops += int(p.get("peer_hops", 0))
+                tel.redist_window_s.update(float(p.get("sim_s", 0.0)))
+            elif name == E.REDISTRIBUTION_FALLBACK:
+                self._app(p["app"]).redist_fallbacks += 1
             elif name == E.DRAIN_FAILED:
                 self._app(p["app"]).drain_failures += 1
             elif name == E.CKPT_FAILED:
@@ -341,6 +370,25 @@ class TelemetryService:
                "Delta chains invalidated (resize/failure/demotion/expiry)",
                [({"app": a}, t["delta_chain_resets"])
                 for a, t in apps.items()])
+        metric("icheck_redistributions_total", "counter",
+               "Adapt-window redistributions, by data path",
+               [({"app": a, "via": via}, t[f"redistributions_{via}"])
+                for a, t in apps.items() for via in ("peer", "client")])
+        metric("icheck_redist_fallbacks_total", "counter",
+               "Peer redistributions that fell back to the client funnel",
+               [({"app": a}, t["redist_fallbacks"]) for a, t in apps.items()])
+        metric("icheck_redist_bytes_total", "counter",
+               "Redistribution bytes: slice wire bytes moved vs bytes "
+               "funnelled through the client",
+               [({"app": a, "kind": kind}, t[f"redist_bytes_{kind}"])
+                for a, t in apps.items()
+                for kind in ("moved", "through_client")])
+        metric("icheck_redist_peer_hops_total", "counter",
+               "Agent-to-agent slice reads executed during adapt windows",
+               [({"app": a}, t["redist_peer_hops"]) for a, t in apps.items()])
+        metric("icheck_redist_window_seconds", "gauge",
+               "EWMA simulated adapt-window redistribution time",
+               [({"app": a}, t["redist_window_s"]) for a, t in apps.items()])
         metric("icheck_failures_total", "counter",
                "Failures charged to each application",
                [({"app": a}, t["failures"]) for a, t in apps.items()])

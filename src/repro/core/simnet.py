@@ -124,6 +124,21 @@ class SimNIC:
             }
 
 
+class MemBus(SimNIC):
+    """Node-local memory channel for intra-node peer copies.
+
+    Peer-to-peer redistribution between two agents on the *same* iCheck node
+    never touches the NIC: the bytes move at memory bandwidth with no
+    per-message latency.  Modelled with the same fluid shared-bandwidth
+    semantics as :class:`SimNIC` so concurrent intra-node copies contend for
+    the memory system like concurrent transfers contend for a link.
+    """
+
+    def __init__(self, name: str, bandwidth: float = 200e9,
+                 clock: Optional[SimClock] = None):
+        super().__init__(name, bandwidth, latency=0.0, clock=clock)
+
+
 class FaultInjector:
     """Central switchboard used by tests/benchmarks to break things on cue."""
 

@@ -277,6 +277,132 @@ def pack_q8_region(parts: Dict[int, Tuple[int, np.ndarray, np.ndarray]],
     return keys, states, "key"
 
 
+# --------------------------------------------------------------------------
+# slice frames — the peer-to-peer redistribution wire format
+# --------------------------------------------------------------------------
+# An agent serving a ``peer_read`` ships only the bytes another agent's
+# transfer program asked for (flattened element range [vlo, vhi) of one
+# stored shard), never the whole payload.  Three slice modes:
+#
+#   b"W"  raw value slice      W + exact [vlo*itemsize, vhi*itemsize) bytes
+#   b"S"  q8 block slice       S + vlo u64 + vhi u64 + scales f32[nb]
+#                                + codes i8[nb*BLOCK]   (blocks covering the
+#                                range, cut from a Q/K frame — no decode)
+#   b"T"  q8-delta block slice T + vlo u64 + vhi u64 + nnz u32
+#                                + idx u32[nnz] (absolute block indices)
+#                                + scales f32[nnz] + deltas i8[nnz*BLOCK]
+#
+# q8 frames are sliced at the 256-value block granularity of
+# ``kernels/ckpt_codec/blocks.py`` so encoded payloads move without decode
+# and are re-framed, not re-quantized; the destination replays S (+T chain)
+# slices and dequantizes only the needed blocks — bit-identical to slicing a
+# full-shard decode.
+_SL_RAW = b"W"
+_SL_FULL = b"S"
+_SL_DELTA = b"T"
+
+
+def slice_payload(blob: bytes, codec: str, dtype: str,
+                  vlo: int, vhi: int) -> bytes:
+    """Cut the slice frame for flattened elements [vlo, vhi) of one stored
+    shard payload (source-agent side of a ``peer_read``)."""
+    it = np.dtype(dtype).itemsize
+    if codec in ("raw", "none"):
+        return _SL_RAW + bytes(blob[vlo * it:vhi * it])
+    if codec == "zstd":
+        raw = decode_payload(blob, codec, dtype)
+        return _SL_RAW + raw[vlo * it:vhi * it]
+    if codec in ("q8", "q8-delta"):
+        mode = blob[:1]
+        if mode == _Q8_RAW:
+            return _SL_RAW + bytes(blob[1 + vlo * it:1 + vhi * it])
+        hdr = int(vlo).to_bytes(8, "little") + int(vhi).to_bytes(8, "little")
+        blo, bhi = vlo // _Q8_BLOCK, -(-vhi // _Q8_BLOCK)
+        if mode in (_Q8_QUANT, _Q8_KEY):
+            _, codes, scales = _q8_unpack_full(blob)
+            if bhi > codes.shape[0]:
+                raise RestoreError(
+                    f"slice [{vlo},{vhi}) beyond frame of {codes.shape[0]} "
+                    f"blocks")
+            return (_SL_FULL + hdr
+                    + np.ascontiguousarray(scales[blo:bhi], np.float32).tobytes()
+                    + np.ascontiguousarray(codes[blo:bhi], np.int8).tobytes())
+        if mode == _Q8_DELTA:
+            _, idx, scales, deltas = _q8_unpack_delta(blob)
+            sel = (idx >= blo) & (idx < bhi)
+            idx2 = idx[sel].astype(np.uint32)
+            return (_SL_DELTA + hdr + len(idx2).to_bytes(4, "little")
+                    + idx2.tobytes()
+                    + np.ascontiguousarray(scales[sel], np.float32).tobytes()
+                    + np.ascontiguousarray(deltas[sel], np.int8).tobytes())
+        raise RestoreError(f"bad q8 frame mode {mode!r}")
+    raise ICheckError(f"unknown codec {codec!r}")
+
+
+def decode_slice_frames(frames: Sequence[bytes], dtype: str,
+                        vlo: int, vhi: int) -> np.ndarray:
+    """Replay slice frames back to values (destination-agent assembly).
+
+    ``frames`` is chain-ordered (keyframe slice first, delta slices after)
+    for ``q8-delta``; a single frame otherwise.  Returns a 1-d array of
+    exactly ``vhi - vlo`` elements, bit-identical to decoding the full
+    shards and slicing.
+    """
+    if not frames:
+        raise RestoreError("empty slice chain")
+    if frames[-1][:1] == _SL_RAW:
+        # raw passthrough: every chain frame is full, only the last matters
+        arr = np.frombuffer(bytearray(frames[-1][1:]), dtype=np.dtype(dtype))
+        if arr.size != vhi - vlo:
+            raise RestoreError(
+                f"raw slice carries {arr.size} values, wanted {vhi - vlo}")
+        return arr
+    blo, bhi = vlo // _Q8_BLOCK, -(-vhi // _Q8_BLOCK)
+    nb = bhi - blo
+    codes: Optional[np.ndarray] = None
+    scales: Optional[np.ndarray] = None
+    for blob in frames:
+        mode = blob[:1]
+        flo = int.from_bytes(blob[1:9], "little")
+        fhi = int.from_bytes(blob[9:17], "little")
+        if (flo, fhi) != (vlo, vhi):
+            raise RestoreError(
+                f"slice range mismatch: frame [{flo},{fhi}) vs [{vlo},{vhi})")
+        if mode == _SL_FULL:
+            if len(blob) != 17 + nb * (4 + _Q8_BLOCK):
+                raise RestoreError(f"truncated q8 slice: {len(blob)} bytes")
+            scales = np.frombuffer(blob[17:17 + 4 * nb],
+                                   np.float32).reshape(nb, 1).copy()
+            codes = np.frombuffer(blob[17 + 4 * nb:],
+                                  np.int8).reshape(nb, _Q8_BLOCK).copy()
+        elif mode == _SL_DELTA:
+            if codes is None or scales is None:
+                raise RestoreError("delta slice without a keyframe slice")
+            nnz = int.from_bytes(blob[17:21], "little")
+            if len(blob) != 21 + nnz * (4 + 4 + _Q8_BLOCK):
+                raise RestoreError(
+                    f"truncated q8-delta slice: {len(blob)} bytes")
+            off = 21
+            idx = np.frombuffer(blob[off:off + 4 * nnz], np.uint32)
+            off += 4 * nnz
+            dsc = np.frombuffer(blob[off:off + 4 * nnz],
+                                np.float32).reshape(-1, 1)
+            off += 4 * nnz
+            dl = np.frombuffer(blob[off:], np.int8).reshape(-1, _Q8_BLOCK)
+            rel = idx.astype(np.int64) - blo
+            if len(rel) and (rel.min() < 0 or rel.max() >= nb):
+                raise RestoreError("delta slice block index out of range")
+            codes[rel] = np.bitwise_xor(codes[rel], dl)
+            scales[rel] = dsc
+        else:
+            raise RestoreError(f"bad slice mode {mode!r}")
+    if codes is None or scales is None:
+        raise RestoreError("q8 slice chain has no keyframe slice")
+    vals = (codes.astype(np.float32) * scales).reshape(-1)
+    return vals[vlo - blo * _Q8_BLOCK:vhi - blo * _Q8_BLOCK] \
+        .astype(np.dtype(dtype))
+
+
 @dataclasses.dataclass
 class EncodedRegion:
     """One region already encoded upstream of the client (device-side in

@@ -64,6 +64,7 @@ class NodeSpec:
     memory_bytes: int = 64 << 30           # 64 GiB of checkpoint RAM
     nic_bandwidth: float = 25e9            # 25 GB/s (e.g. 200 Gb HDR)
     nic_latency: float = 2e-6              # RDMA one-sided put latency
+    mem_bandwidth: float = 200e9           # intra-node copy bandwidth (DDR)
     max_agents: int = 16
 
 

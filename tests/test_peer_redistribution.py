@@ -1,0 +1,374 @@
+"""Peer-to-peer redistribution: transfer programs, slice frames, the agent
+engine, fallback behaviour, cache invalidation, and telemetry.
+
+The load-bearing property throughout: the peer path must reassemble every
+destination part *bit-identical* to the client-funnel path (which is itself
+tested against the numpy oracles in test_plan.py) for raw, q8 and q8-delta
+payloads, BLOCK/CYCLIC/MESH, grow and shrink.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import ICheckClient, ICheckCluster, PartitionScheme
+from repro.core import events as E
+from repro.core import plan as planlib
+from repro.core.agent import Agent, AgentDead
+from repro.core.tiers import (decode_payload, decode_slice_frames,
+                              encode_delta_region, encode_payload,
+                              slice_payload)
+from repro.core.types import PartitionDesc
+
+
+@pytest.fixture()
+def cluster():
+    c = ICheckCluster(n_icheck_nodes=4, n_spare_nodes=1,
+                      adaptive_interval=False)
+    yield c
+    c.close()
+
+
+def _parts(arr, desc):
+    return {i: p for i, p in enumerate(planlib.split_array(arr, desc))}
+
+
+def _flat_parts(arr, desc):
+    return {i: np.ravel(p).copy()
+            for i, p in enumerate(planlib.split_array(arr, desc))}
+
+
+# ---------------------------------------------------------------- programs
+@pytest.mark.parametrize("scheme", [PartitionScheme.BLOCK,
+                                    PartitionScheme.CYCLIC])
+@pytest.mark.parametrize("old_p,new_p", [(8, 12), (8, 4), (5, 7)])
+def test_transfer_programs_match_move_oracle(scheme, old_p, new_p):
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((173, 3)).astype(np.float32)
+    old = PartitionDesc(scheme=scheme, num_parts=old_p, block=8)
+    new = old.renumbered(new_p)
+    n = arr.shape[0]
+    programs = planlib.compile_transfer_programs(n, old, new, arr.shape)
+    assert programs is not None and set(programs) == set(range(new_p))
+    got = planlib.apply_transfer_programs(_flat_parts(arr, old), programs,
+                                          arr.dtype)
+    moves = planlib.redistribution_moves(n, old, new)
+    want = planlib.apply_moves(_parts(arr, old), moves, old, new, arr.shape)
+    for p in range(new_p):
+        np.testing.assert_array_equal(got[p],
+                                      np.ravel(want[p]))
+        assert got[p].size == programs[p].nvals
+
+
+def test_transfer_programs_unsupported_layouts():
+    old = PartitionDesc(scheme=PartitionScheme.BLOCK, axis=1, num_parts=4)
+    assert planlib.compile_transfer_programs(40, old, old.renumbered(2),
+                                             (8, 40)) is None
+    rep = PartitionDesc(scheme=PartitionScheme.REPLICATED, num_parts=4)
+    assert planlib.compile_transfer_programs(40, rep, rep.renumbered(2),
+                                             (40,)) is None
+
+
+def test_mesh_transfer_programs_match_oracle():
+    arr = np.arange(24 * 10, dtype=np.float32).reshape(24, 10)
+    old_boxes = (((0, 12), (0, 10)), ((12, 24), (0, 10)))
+    new_boxes = (((0, 12), (0, 5)), ((0, 12), (5, 10)),
+                 ((12, 24), (0, 5)), ((12, 24), (5, 10)))
+    programs = planlib.compile_mesh_transfer_programs(old_boxes, new_boxes)
+    src = {i: np.ravel(arr[tuple(slice(lo, hi) for lo, hi in b)]).copy()
+           for i, b in enumerate(old_boxes)}
+    got = planlib.apply_transfer_programs(src, programs, arr.dtype)
+    moves = planlib.mesh_moves(old_boxes, new_boxes)
+    src2 = {i: arr[tuple(slice(lo, hi) for lo, hi in b)].copy()
+            for i, b in enumerate(old_boxes)}
+    want = planlib.apply_mesh_moves(src2, moves, new_boxes, arr.dtype)
+    for p in range(len(new_boxes)):
+        np.testing.assert_array_equal(got[p], np.ravel(want[p]))
+
+
+# ------------------------------------------------------------- slice frames
+def test_q8_slice_frames_match_full_decode():
+    rng = np.random.default_rng(1)
+    data = rng.standard_normal(1500).astype(np.float32)
+    blob = encode_payload(data.tobytes(), "q8", "float32")
+    full = np.frombuffer(decode_payload(blob, "q8", "float32"), np.float32)
+    for vlo, vhi in ((0, 1500), (100, 900), (256, 512), (3, 5), (1490, 1500)):
+        sl = slice_payload(blob, "q8", "float32", vlo, vhi)
+        vals = decode_slice_frames([sl], "float32", vlo, vhi)
+        np.testing.assert_array_equal(vals, full[vlo:vhi])
+
+
+def test_q8_delta_slice_chain_matches_full_replay():
+    from repro.core.tiers import q8_chain_decode
+
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal(2000).astype(np.float32)
+    key_blobs, states, frame = encode_delta_region({0: a.tobytes()},
+                                                   "float32", None)
+    assert frame == "key"
+    b = a.copy()
+    b[100:400] += 1.0                       # touch a few blocks only
+    delta_blobs, _, frame2 = encode_delta_region({0: b.tobytes()},
+                                                 "float32", states)
+    assert frame2 == "delta"
+    chain = [key_blobs[0], delta_blobs[0]]
+    full = np.frombuffer(q8_chain_decode(chain, "float32"), np.float32)
+    for vlo, vhi in ((0, 2000), (90, 410), (300, 700), (512, 768)):
+        frames = [slice_payload(blob, "q8-delta", "float32", vlo, vhi)
+                  for blob in chain]
+        vals = decode_slice_frames(frames, "float32", vlo, vhi)
+        np.testing.assert_array_equal(vals, full[vlo:vhi])
+
+
+# ----------------------------------------------------- peer ≡ client (e2e)
+@pytest.mark.parametrize("codec", ["raw", "q8", "q8-delta"])
+@pytest.mark.parametrize("scheme", [PartitionScheme.BLOCK,
+                                    PartitionScheme.CYCLIC])
+@pytest.mark.parametrize("old_p,new_p", [(6, 9), (6, 3)])
+def test_peer_matches_client(cluster, codec, scheme, old_p, new_p):
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal(1 << 14).astype(np.float32)
+    desc = PartitionDesc(scheme=scheme, num_parts=old_p, block=512)
+    client = ICheckClient("app", cluster.controller, ranks=old_p,
+                          codec=codec).init()
+    client.add_adapt("x", data.shape, "float32", scheme=scheme,
+                     num_parts=old_p, block=512)
+    if codec == "q8-delta":
+        # three commits so the chain head is a sparse delta frame
+        for step in range(3):
+            data[:700] += step
+            client.commit(step, {"x": _parts(data, desc)}, blocking=True,
+                          drain=False)
+    else:
+        client.commit(0, {"x": _parts(data, desc)}, blocking=True,
+                      drain=False)
+    peer = client.redistribute("x", new_p, via="peer")
+    funnel = client.redistribute("x", new_p, via="client")
+    assert set(peer) == set(funnel) == set(range(new_p))
+    for p in range(new_p):
+        np.testing.assert_array_equal(peer[p], funnel[p])
+    done = [e for e in cluster.controller.events
+            if e["event"] == E.REDISTRIBUTION_DONE]
+    assert [d["via"] for d in done] == ["peer", "client"]
+    assert done[0]["peer_hops"] > 0
+    assert not [e for e in cluster.controller.events
+                if e["event"] == E.REDISTRIBUTION_FALLBACK]
+    client.finalize()
+
+
+def test_peer_mesh_matches_client(cluster):
+    data = np.arange(64 * 48, dtype=np.float32).reshape(64, 48)
+    old_boxes = (((0, 32), (0, 48)), ((32, 64), (0, 48)))
+    new_boxes = (((0, 32), (0, 24)), ((0, 32), (24, 48)),
+                 ((32, 64), (0, 24)), ((32, 64), (24, 48)))
+    client = ICheckClient("app", cluster.controller, ranks=2,
+                          codec="q8").init()
+    client.add_adapt("w", data.shape, "float32",
+                     scheme=PartitionScheme.MESH, num_parts=2,
+                     bounds=old_boxes)
+    parts = {i: data[tuple(slice(lo, hi) for lo, hi in b)].copy()
+             for i, b in enumerate(old_boxes)}
+    client.commit(0, {"w": parts}, blocking=True, drain=False)
+    peer = client.redistribute_mesh("w", new_boxes, via="peer")
+    funnel = client.redistribute_mesh("w", new_boxes, via="client")
+    for p in range(len(new_boxes)):
+        np.testing.assert_array_equal(peer[p], funnel[p])
+    # shrink back down (mesh merge)
+    peer2 = client.redistribute_mesh("w", old_boxes, via="peer")
+    funnel2 = client.redistribute_mesh("w", old_boxes, via="client")
+    for p in range(len(old_boxes)):
+        np.testing.assert_array_equal(peer2[p], funnel2[p])
+    client.finalize()
+
+
+def test_peer_mesh_subset_fetch(cluster):
+    """A joining mesh rank only pulls its own shard through the client."""
+    data = np.arange(32 * 16, dtype=np.float32).reshape(32, 16)
+    old_boxes = (((0, 16), (0, 16)), ((16, 32), (0, 16)))
+    new_boxes = (((0, 16), (0, 8)), ((0, 16), (8, 16)),
+                 ((16, 32), (0, 8)), ((16, 32), (8, 16)))
+    client = ICheckClient("app", cluster.controller, ranks=2).init()
+    client.add_adapt("w", data.shape, "float32",
+                     scheme=PartitionScheme.MESH, num_parts=2,
+                     bounds=old_boxes)
+    parts = {i: data[tuple(slice(lo, hi) for lo, hi in b)].copy()
+             for i, b in enumerate(old_boxes)}
+    client.commit(0, {"w": parts}, blocking=True, drain=False)
+    for via in ("peer", "client"):
+        mine = client.redistribute_mesh("w", new_boxes, parts_needed=[3],
+                                        via=via)
+        assert sorted(mine) == [3]
+        np.testing.assert_array_equal(mine[3], data[16:32, 8:16])
+        done = [e for e in cluster.controller.events
+                if e["event"] == E.REDISTRIBUTION_DONE][-1]
+        assert done["via"] == via
+        if via == "peer":
+            assert done["bytes_through_client"] == data[16:32, 8:16].nbytes
+    client.finalize()
+
+
+def test_peer_subset_fetch_and_scratch_release(cluster):
+    """Only the local new ranks' parts flow through the client, and the
+    scratch redistribution shards are dropped after the adapt window."""
+    rng = np.random.default_rng(4)
+    data = rng.standard_normal(1 << 14).astype(np.float32)
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=8)
+    client = ICheckClient("app", cluster.controller, ranks=8).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=8)
+    client.commit(0, {"x": _parts(data, desc)}, blocking=True, drain=False)
+    mine = client.redistribute("x", 12, parts_needed=[3, 7], via="peer")
+    assert sorted(mine) == [3, 7]
+    oracle = planlib.split_array(data, desc.renumbered(12))
+    np.testing.assert_array_equal(mine[3], oracle[3])
+    np.testing.assert_array_equal(mine[7], oracle[7])
+    done = [e for e in cluster.controller.events
+            if e["event"] == E.REDISTRIBUTION_DONE][-1]
+    assert done["via"] == "peer"
+    assert done["bytes_through_client"] == \
+        oracle[3].nbytes + oracle[7].nbytes
+    assert done["bytes_moved"] > 0 and done["peer_hops"] > 0
+    for mgr in cluster.controller.managers():
+        leftovers = [k for k in mgr.store.keys() if ".redist" in k.region]
+        assert not leftovers, leftovers
+    client.finalize()
+
+
+def test_agent_death_mid_transfer_falls_back(cluster, monkeypatch):
+    """A mid-transfer agent death must not wedge the adapt window: the
+    client funnel takes over and still produces correct parts."""
+    rng = np.random.default_rng(5)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=6)
+    client = ICheckClient("app", cluster.controller, ranks=6).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=6)
+    client.commit(0, {"x": _parts(data, desc)}, blocking=True, drain=False)
+
+    def dead_read(self, *a, **kw):
+        raise AgentDead(f"agent {self.agent_id} died mid-transfer")
+
+    monkeypatch.setattr(Agent, "peer_read", dead_read)
+    out = client.redistribute("x", 4, via="peer")
+    oracle = planlib.split_array(data, desc.renumbered(4))
+    for p in range(4):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    fallbacks = [e for e in cluster.controller.events
+                 if e["event"] == E.REDISTRIBUTION_FALLBACK]
+    assert fallbacks and "AgentDead" in fallbacks[0]["reason"]
+    done = [e for e in cluster.controller.events
+            if e["event"] == E.REDISTRIBUTION_DONE][-1]
+    assert done["via"] == "client"
+    # scratch of the aborted peer attempt must not linger
+    for mgr in cluster.controller.managers():
+        assert not [k for k in mgr.store.keys() if ".redist" in k.region]
+    client.finalize()
+
+
+def test_unknown_via_rejected(cluster):
+    from repro.core.types import ICheckError
+
+    client = ICheckClient("app", cluster.controller, ranks=2).init()
+    client.add_adapt("x", (64,), "float32", num_parts=2)
+    with pytest.raises(ICheckError, match="unknown redistribution path"):
+        client.redistribute("x", 4, via="p2p")
+    client.finalize()
+
+
+def test_unsupported_axis_falls_back(cluster):
+    arr = np.arange(8 * 40, dtype=np.float32).reshape(8, 40)
+    client = ICheckClient("app", cluster.controller, ranks=4).init()
+    client.add_adapt("y", arr.shape, "float32", axis=1, num_parts=4)
+    client.commit(0, {"y": _parts(arr, client.regions["y"].partition)},
+                  blocking=True, drain=False)
+    out = client.redistribute("y", 2)
+    np.testing.assert_array_equal(np.concatenate([out[0], out[1]], axis=1),
+                                  arr)
+    fb = [e for e in cluster.controller.events
+          if e["event"] == E.REDISTRIBUTION_FALLBACK]
+    assert fb and fb[0]["reason"] == "unsupported_layout"
+    client.finalize()
+
+
+# ----------------------------------------------- chains / cache / staging
+def test_delta_chain_resets_once_on_commit_redistribution(cluster):
+    rng = np.random.default_rng(6)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=4)
+    client = ICheckClient("app", cluster.controller, ranks=4,
+                          codec="q8-delta").init()
+    client.add_adapt("x", data.shape, "float32", num_parts=4)
+    for step in range(2):
+        data[:100] += 1.0
+        client.commit(step, {"x": _parts(data, desc)}, blocking=True,
+                      drain=False)
+    resets = []
+    unsub = cluster.bus.subscribe(lambda ev: resets.append(ev.payload),
+                                  events=(E.DELTA_CHAIN_RESET,))
+    client.redistribute("x", 6, via="peer")       # the window itself: none
+    assert resets == []
+    client.commit_redistribution("x", 6)          # the commit: exactly one
+    assert len(resets) == 1 and resets[0]["region"] == "x" \
+        and resets[0]["reason"] == "resize"
+    unsub()
+    client.finalize()
+
+
+def test_stale_plan_cache_invalidated_on_partition_change(cluster):
+    """Regression: a plan pre-staged under the old layout must not be
+    reused after commit_redistribution changed the partition."""
+    ctl = cluster.controller
+    data = np.arange(96, dtype=np.float32)
+    client = ICheckClient("app", ctl, ranks=8).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=8)
+    desc8 = client.regions["x"].partition
+    stale = ctl.plan_for_resize("app", "x", 4)     # planned against 8 parts
+    assert stale == planlib.redistribution_moves(96, desc8,
+                                                 desc8.renumbered(4))
+    assert ctl.transfer_programs("app", "x", 4) is not None
+    client.commit_redistribution("x", 12)          # partition now 12 parts
+    assert ("app", "x", 4) not in ctl.resize.plans
+    assert ("app", "x", 4) not in ctl.resize.programs
+    fresh = ctl.plan_for_resize("app", "x", 4)
+    desc12 = client.regions["x"].partition
+    assert desc12.num_parts == 12
+    assert fresh == planlib.redistribution_moves(96, desc12,
+                                                 desc12.renumbered(4))
+    assert fresh != stale and max(mv.src for mv in fresh) >= 8
+    client.finalize()
+
+
+def test_forewarning_prestages_transfer_programs(cluster):
+    data = np.arange(256, dtype=np.float32)
+    client = ICheckClient("app", cluster.controller, ranks=4).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=4)
+    cluster.rm.schedule_resize("app", 6)
+    key = ("app", "x", 6)
+    assert key in cluster.controller.resize.plans
+    assert cluster.controller.resize.programs.get(key) is not None
+    fw = [e for e in cluster.controller.events
+          if e["event"] == E.RESIZE_FOREWARNED][-1]
+    assert fw["plans"] == 1 and fw["programs"] == 1
+    client.finalize()
+
+
+def test_redistribution_telemetry_and_prometheus(cluster):
+    rng = np.random.default_rng(7)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=4)
+    client = ICheckClient("app", cluster.controller, ranks=4).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=4)
+    client.commit(0, {"x": _parts(data, desc)}, blocking=True, drain=False)
+    client.redistribute("x", 6, parts_needed=[0], via="peer")
+    client.redistribute("x", 6, via="client")
+    snap = cluster.telemetry.snapshot()["per_app"]["app"]
+    assert snap["redistributions_peer"] == 1
+    assert snap["redistributions_client"] == 1
+    assert snap["redist_peer_hops"] > 0
+    assert snap["redist_bytes_moved"] > 0
+    assert snap["redist_bytes_through_client"] > 0
+    assert snap["redist_window_s"] > 0
+    prom = cluster.telemetry.prometheus()
+    assert 'icheck_redistributions_total{app="app",via="peer"} 1' in prom
+    assert 'icheck_redist_peer_hops_total{app="app"}' in prom
+    assert 'icheck_redist_bytes_total{app="app",kind="through_client"}' \
+        in prom
+    client.finalize()
