@@ -18,6 +18,13 @@ stay ≥3x) and ``b3_bytes_through_client_reduction`` (funnel bytes through
 the client / peer bytes through the client) — both higher-is-better and
 enforced by ``benchmarks/check_regression.py``.  It also appends the new
 ``icheck_redist*`` gauges to ``BENCH_prometheus.txt``.
+
+A third leg measures the *zero-stall* (two-phase) resize: the base
+checkpoint streams to the new partition while the app keeps committing
+q8-deltas; the cutover replays only the tail frames.  Exported as
+``b3_stall_s`` (the bounded cutover stall, lower-is-better in the gate) and
+``b3_overlap_steps`` (commits absorbed during the window); the leg asserts
+the stall is ≥5x smaller than the equivalent stop-the-world window.
 """
 from __future__ import annotations
 
@@ -85,6 +92,74 @@ def _leg(data: np.ndarray, scheme: PartitionScheme, old_p: int, new_p: int,
     }
 
 
+def _stall_leg(data: np.ndarray, old_p: int, new_p: int,
+               window_commits: int = 3) -> dict:
+    """Zero-stall resize vs stop-the-world on the same cluster.
+
+    Commits a q8-delta base, opens an overlap window (16→24 BLOCK), keeps
+    committing mutated deltas while the base streams, then cuts over and
+    compares the bounded stall against a stop-the-world peer window of the
+    same head state.  Verifies the overlap result is bit-identical to the
+    client funnel restored from the head.
+    """
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=old_p,
+                         block=4096)
+    local = list(range(max(1, new_p // NODES)))
+    buf = data.copy()
+    with ICheckCluster(n_icheck_nodes=NODES, node_memory=8 << 30,
+                       policy=FixedCountPolicy(NODES),
+                       adaptive_interval=False) as c:
+        client = ICheckClient("app", c.controller, ranks=old_p,
+                              codec="q8-delta").init(
+            ckpt_bytes_estimate=buf.nbytes)
+        client.add_adapt("x", buf.shape, "float32", num_parts=old_p,
+                         block=4096)
+        client.commit(0, {"x": _parts(buf, desc)}, blocking=True,
+                      drain=False)
+        handle = client.redistribute("x", new_p, parts_needed=local,
+                                     overlap=True)
+        # the app keeps stepping: each "step" mutates ~1% of the array and
+        # commits a q8-delta against the chain the window holds open
+        chunk = max(1, buf.size // 100)
+        for i in range(1, window_commits + 1):
+            lo = (i * chunk) % max(1, buf.size - chunk)
+            buf[lo:lo + chunk] += np.float32(0.25 * i)
+            client.commit(i, {"x": _parts(buf, desc)}, blocking=True,
+                          drain=False)
+        assert handle.wait(60), "overlap stream did not land"
+        out = handle.cutover()
+        done = [e for e in c.controller.events
+                if e["event"] == "redistribution_done"][-1]
+        assert done["via"] == "peer", f"overlap fell back: {done}"
+        assert not done["rehydrated"], "no chain reset happened: the " \
+            "cutover must replay the tail, not re-hydrate"
+        assert done["tail_frames"] == window_commits, \
+            f"expected {window_commits} tail frames, got " \
+            f"{done['tail_frames']}"
+        # bit-identity vs the funnel restored from the same head
+        oracle = client.redistribute("x", new_p, parts_needed=local,
+                                     via="client")
+        for p in local:
+            np.testing.assert_array_equal(out[p], oracle[p])
+        # stop-the-world comparator: one blocking peer window of the same
+        # head state (full chain stream + local part fetch, app stalled)
+        client.redistribute("x", new_p, parts_needed=local, via="peer")
+        sw = [e for e in c.controller.events
+              if e["event"] == "redistribution_done"
+              and e["via"] == "peer"][-1]
+        client.finalize()
+    return {
+        "old": old_p, "new": new_p,
+        "stall_s": done["stall_s"],
+        "overlap_sim_s": done["overlap_sim_s"],
+        "overlap_steps": done["overlap_commits"],
+        "tail_frames": done["tail_frames"],
+        "bytes_through_client": done["bytes_through_client"],
+        "stop_world_s": sw["sim_s"],
+        "stall_reduction": sw["sim_s"] / max(done["stall_s"], 1e-12),
+    }
+
+
 def _case(data, scheme, old_p, new_p) -> dict:
     client_leg = _leg(data, scheme, old_p, new_p, "client")
     peer_leg = _leg(data, scheme, old_p, new_p, "peer")
@@ -115,6 +190,15 @@ def _print_rows(nbytes: int, rows) -> None:
               f"{r['peer']['peer_hops']} peer hops)")
 
 
+def _print_stall(stall: dict) -> None:
+    print(f"  zero-stall {stall['old']:3d}->{stall['new']:3d}: "
+          f"stop-the-world {stall['stop_world_s'] * 1e3:7.3f}ms  "
+          f"cutover stall {stall['stall_s'] * 1e3:7.3f}ms "
+          f"({stall['stall_reduction']:4.1f}x less, "
+          f"{stall['overlap_steps']} commits absorbed, "
+          f"{stall['tail_frames']} tail frames replayed)")
+
+
 def run(verbose: bool = True) -> dict:
     rng = np.random.default_rng(0)
     data = rng.standard_normal(N).astype(np.float32)
@@ -122,15 +206,18 @@ def run(verbose: bool = True) -> dict:
     for scheme in (PartitionScheme.BLOCK, PartitionScheme.CYCLIC):
         for old_p, new_p in ((8, 12), (8, 4), (16, 24)):
             results.append(_case(data, scheme, old_p, new_p))
-    out = {"elements": N, "rows": results}
+    stall = _stall_leg(data, 16, 24)
+    out = {"elements": N, "rows": results, "stall": stall}
     save("b3_redistribution", out)
     if verbose:
         _print_rows(data.nbytes, results)
+        _print_stall(stall)
     return out
 
 
 def run_smoke(verbose: bool = True) -> dict:
-    """CI perf canary: the 16→24 cross-node BLOCK case, peer vs client."""
+    """CI perf canary: the 16→24 cross-node BLOCK case, peer vs client,
+    plus the zero-stall overlap leg."""
     rng = np.random.default_rng(0)
     data = rng.standard_normal(SMOKE_N).astype(np.float32)
     row = _case(data, PartitionScheme.BLOCK, 16, 24)
@@ -145,10 +232,15 @@ def run_smoke(verbose: bool = True) -> dict:
     assert row["peer"]["bytes_through_client"] == local_bytes, \
         "peer path must funnel exactly the local new ranks' parts " \
         "through the client"
-    out = {"elements": SMOKE_N, "rows": [row]}
+    stall = _stall_leg(data, 16, 24)
+    assert stall["stall_reduction"] >= 5.0, \
+        f"zero-stall cutover must be >=5x shorter than the " \
+        f"stop-the-world window (got {stall['stall_reduction']:.2f}x)"
+    out = {"elements": SMOKE_N, "rows": [row], "stall": stall}
     save("b3_redistribution_smoke", out)
     if verbose:
         _print_rows(data.nbytes, [row])
+        _print_stall(stall)
     _append_prometheus(verbose)
     return out
 

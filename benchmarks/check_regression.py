@@ -19,10 +19,15 @@ import argparse
 import json
 import sys
 
-# every smoke metric is higher-is-better; a new metric added to the current
-# file without a baseline entry is reported but does not fail the gate (the
-# baseline must be refreshed deliberately to start tracking it)
+# smoke metrics are higher-is-better unless listed in LOWER_IS_BETTER; a new
+# metric added to the current file without a baseline entry is reported but
+# does not fail the gate (the baseline must be refreshed deliberately to
+# start tracking it)
 DEFAULT_THRESHOLD = 0.15
+
+# metrics where a *rise* is the regression (latencies/stalls): the delta
+# comparison is flipped for these
+LOWER_IS_BETTER = {"b3_stall_s"}
 
 
 def load(path: str) -> dict:
@@ -65,7 +70,14 @@ def main(argv=None) -> None:
             continue
         delta = (cur_val - base_val) / base_val
         flag = ""
-        if delta < -args.threshold:
+        if name in LOWER_IS_BETTER:
+            if delta > args.threshold:
+                regressions.append(
+                    f"{name}: {base_val:.4g} -> {cur_val:.4g} "
+                    f"({100 * delta:+.1f}% > +{100 * args.threshold:.0f}%, "
+                    f"lower-is-better)")
+                flag = "  << REGRESSION"
+        elif delta < -args.threshold:
             regressions.append(
                 f"{name}: {base_val:.4g} -> {cur_val:.4g} "
                 f"({100 * delta:+.1f}% < -{100 * args.threshold:.0f}%)")

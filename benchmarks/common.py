@@ -75,7 +75,8 @@ def failure_schedule(mtbf_s: float, horizon_s: float, seed: int = 0,
 def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
                       total_work_s: float, failure_times: Sequence[float],
                       interval_fn: Callable[[], float],
-                      work_slice_s: float = 0.05, keep_l1: int = 2) -> dict:
+                      work_slice_s: float = 0.05, keep_l1: int = 2,
+                      resize_probe: Callable[[], bool] = None) -> dict:
     """Drive a simulated compute loop with checkpoints on the cluster clock.
 
     The application "computes" by advancing the sim clock in slices; every
@@ -87,6 +88,12 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
 
     Returns the wasted-work / checkpoint-overhead / restart-cost accounting
     that the adaptive-interval benchmarks compare across policies.
+
+    ``resize_probe`` (optional) is sampled once per work slice: while it
+    returns True the app is inside an adapt window that it *kept stepping
+    through* (a zero-stall overlap resize), and the slice is counted into
+    ``steps_during_resize`` / ``work_during_resize_s`` — the work a
+    stop-the-world resize would have forfeited.
     """
     clock, bus = cluster.clock, cluster.controller.bus
     app_id = client.app_id
@@ -100,6 +107,8 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
     ckpt_overhead_s = clock.now() - t0
     commits, failures = 1, 0
     wasted_s = restart_s = 0.0
+    steps_during_resize = 0
+    work_during_resize_s = 0.0
     work_done = 0.0
     work_at_ckpt = 0.0
     last_ckpt_t = clock.now()
@@ -142,6 +151,9 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
                  max(next_fail - now, 1e-9))
         clock.sleep(dt)
         work_done += dt
+        if resize_probe is not None and resize_probe():
+            steps_during_resize += 1
+            work_during_resize_s += dt
 
     elapsed = clock.now() - start_t
     return {
@@ -154,4 +166,6 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
         "restart_s": restart_s,
         "total_overhead_s": wasted_s + ckpt_overhead_s + restart_s,
         "final_interval_s": interval_fn(),
+        "steps_during_resize": steps_during_resize,
+        "work_during_resize_s": work_during_resize_s,
     }

@@ -51,7 +51,9 @@ SMOKE_JSON = "BENCH_smoke.json"
 
 def smoke_metrics(results: dict) -> dict:
     """Flat, deterministic (sim-time-derived) metrics for the CI regression
-    gate.  All are higher-is-better throughput/overlap numbers."""
+    gate.  Higher-is-better throughput/overlap numbers, except the metrics
+    listed in ``check_regression.LOWER_IS_BETTER`` (currently
+    ``b3_stall_s``)."""
     metrics = {}
     b1 = results.get("b1")
     if b1:
@@ -70,6 +72,13 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b3_peer_speedup"] = row["peer_speedup"]
         metrics["b3_bytes_through_client_reduction"] = \
             row["bytes_through_client_reduction"]
+        stall = b3.get("stall")
+        if stall:
+            # the bounded cutover stall of a zero-stall resize — the one
+            # LOWER-is-better smoke metric (check_regression flips its
+            # comparison) — and the work retained inside the window
+            metrics["b3_stall_s"] = stall["stall_s"]
+            metrics["b3_overlap_steps"] = stall["overlap_steps"]
     b9 = results.get("b9")
     if b9:
         metrics["b9_lifecycle_commit_rate_Bps"] = \

@@ -25,9 +25,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .simnet import EWMA, FaultInjector, MemBus, SimNIC
-from .tiers import (PFSTier, TierPipeline, decode_payload,
-                    decode_slice_frames, slice_payload)
-from .types import AgentId, NodeId, ShardKey, TransferRecord
+from .tiers import (PFSTier, SliceState, TierPipeline, decode_payload,
+                    decode_slice_frames, replay_slice_frames, slice_payload)
+from .types import AgentId, ICheckError, NodeId, ShardKey, TransferRecord
 
 
 class AgentDead(ConnectionError):
@@ -56,11 +56,30 @@ class SliceFetch:
 @dataclasses.dataclass(frozen=True)
 class AssembleSpec:
     """One destination part of a redistribution: the scratch key the
-    assembled payload lands under in this agent's L1, and its slice reads."""
+    assembled payload lands under in this agent's L1, and its slice reads.
+
+    ``keep_state`` retains the per-fetch q8 decode state
+    (:class:`~.tiers.SliceState`) after the assembly, so a zero-stall
+    cutover can later :meth:`~Agent.replay` tail delta frames onto the
+    stored payload instead of re-streaming the keyframe."""
 
     out_key: ShardKey
     dtype: str
     nvals: int
+    fetches: Tuple[SliceFetch, ...]
+    keep_state: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySpec:
+    """Tail catch-up of one already-assembled destination part: advance the
+    retained slice states by the delta frames committed during an overlap
+    window and patch the stored scratch payload in place.  ``fetches`` must
+    cover the same (vlo, vhi, dst_lo) ranges as the original assemble, with
+    ``sources`` listing only the *tail* chain frames."""
+
+    out_key: ShardKey
+    dtype: str
     fetches: Tuple[SliceFetch, ...]
 
 
@@ -98,6 +117,10 @@ class Agent:
         # window, not once per TransferOp (other codecs slice the stored
         # bytes directly).  Cleared by the engine when the window ends.
         self._decoded_memo: Dict[ShardKey, bytes] = {}
+        # retained q8 decode state of keep_state assemblies (scratch key →
+        # per-fetch SliceState), consumed by replay() at zero-stall cutover
+        # and dropped with the scratch shard when the window ends
+        self._assembly_state: Dict[ShardKey, List[Optional[SliceState]]] = {}
         self._inbox: "queue.Queue[_Op]" = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, name=f"agent-{agent_id}",
@@ -174,6 +197,21 @@ class Agent:
         self._inbox.put(_Op("assemble", payload=spec, future=fut))
         return fut
 
+    def replay(self, spec: ReplaySpec) -> Future:
+        """Catch an assembled part up with the tail delta frames committed
+        during an overlap window (asynchronous; requires the original
+        assemble to have run with ``keep_state=True``).  Resolves to
+        ``{nbytes, reads, patches}`` where ``patches`` lists the
+        ``(dst_offset_vals, value_bytes)`` spans that changed — what the
+        client splices into parts it already prefetched."""
+        fut: Future = Future()
+        self._inbox.put(_Op("replay", payload=spec, future=fut))
+        return fut
+
+    def drop_assembly_state(self, key: ShardKey) -> None:
+        with self._lock:
+            self._assembly_state.pop(key, None)
+
     # ------------------------------------------------------------------ L2
     def drain(self, keys: List[ShardKey], pfs: PFSTier,
               on_done: Optional[Callable] = None) -> Future:
@@ -231,6 +269,8 @@ class Agent:
                         op.on_done(res)
                 elif op.kind == "assemble":
                     op.future.set_result(self._do_assemble(op.payload))
+                elif op.kind == "replay":
+                    op.future.set_result(self._do_replay(op.payload))
             except BaseException as e:  # noqa: BLE001 - surface through future
                 if op.future is not None and not op.future.done():
                     op.future.set_exception(e)
@@ -268,43 +308,90 @@ class Agent:
         buf = np.zeros(spec.nvals, dtype=np.dtype(spec.dtype))
         reads: List[dict] = []
         tier_cache: dict = {}       # one whole-object read per shard, not per op
+        states: List[Optional[SliceState]] = []
         for f in spec.fetches:
-            frames = []
-            for provider, key in f.sources:
-                if isinstance(provider, Agent):
-                    blob = provider.peer_read(key, f.codec, f.dtype,
-                                              f.vlo, f.vhi, self.node_id)
-                    reads.append({
-                        "node": provider.node_id, "bytes": len(blob),
-                        "kind": "intra" if provider.node_id == self.node_id
-                        else "cross"})
-                else:
-                    # shared-tier fallback (PFS/L3): whole-object read, then
-                    # slice locally — rare, but it keeps a partially-drained
-                    # source from wedging the adapt window.  The cache holds
-                    # the *decoded* bytes for zstd so k ops on one source
-                    # cost one read and one decompress, not k
-                    cached = tier_cache.get(key)
-                    if cached is None:
-                        payload = provider.read_shard(key)
-                        reads.append({"node": provider.name,
-                                      "bytes": len(payload), "kind": "tier"})
-                        if f.codec == "zstd":
-                            payload = decode_payload(payload, f.codec,
-                                                     f.dtype)
-                        cached = tier_cache[key] = payload
-                    blob = slice_payload(
-                        cached, "none" if f.codec == "zstd" else f.codec,
-                        f.dtype, f.vlo, f.vhi)
-                frames.append(blob)
-            vals = decode_slice_frames(frames, f.dtype, f.vlo, f.vhi)
+            frames = self._gather_frames(f, reads, tier_cache)
+            if spec.keep_state:
+                vals, st = decode_slice_frames(frames, f.dtype, f.vlo, f.vhi,
+                                               return_state=True)
+                states.append(st)
+            else:
+                vals = decode_slice_frames(frames, f.dtype, f.vlo, f.vhi)
             buf[f.dst_lo:f.dst_lo + vals.size] = vals
         self._check_alive()
         payload = buf.tobytes()
         self.store.put(spec.out_key, payload)
         with self._lock:
             self.bytes_in += len(payload)
+            if spec.keep_state:
+                self._assembly_state[spec.out_key] = states
         return {"key": spec.out_key, "nbytes": len(payload), "reads": reads}
+
+    def _gather_frames(self, f: SliceFetch, reads: List[dict],
+                       tier_cache: dict) -> List[bytes]:
+        """Pull one fetch's slice frames (chain order) from its sources:
+        live peer agents over the fabric, else a shared tier."""
+        frames = []
+        for provider, key in f.sources:
+            if isinstance(provider, Agent):
+                blob = provider.peer_read(key, f.codec, f.dtype,
+                                          f.vlo, f.vhi, self.node_id)
+                reads.append({
+                    "node": provider.node_id, "bytes": len(blob),
+                    "kind": "intra" if provider.node_id == self.node_id
+                    else "cross"})
+            else:
+                # shared-tier fallback (PFS/L3): whole-object read, then
+                # slice locally — rare, but it keeps a partially-drained
+                # source from wedging the adapt window.  The cache holds
+                # the *decoded* bytes for zstd so k ops on one source
+                # cost one read and one decompress, not k
+                cached = tier_cache.get(key)
+                if cached is None:
+                    payload = provider.read_shard(key)
+                    reads.append({"node": provider.name,
+                                  "bytes": len(payload), "kind": "tier"})
+                    if f.codec == "zstd":
+                        payload = decode_payload(payload, f.codec,
+                                                 f.dtype)
+                    cached = tier_cache[key] = payload
+                blob = slice_payload(
+                    cached, "none" if f.codec == "zstd" else f.codec,
+                    f.dtype, f.vlo, f.vhi)
+            frames.append(blob)
+        return frames
+
+    def _do_replay(self, spec: ReplaySpec) -> dict:
+        """Advance a retained assembly by its tail frames and patch the
+        stored scratch payload in place (zero-stall cutover, phase 2)."""
+        self._check_alive()
+        with self._lock:
+            states = self._assembly_state.get(spec.out_key)
+        if states is None or len(states) != len(spec.fetches):
+            raise ICheckError(
+                f"no retained assembly state for {spec.out_key} "
+                f"(assemble must run with keep_state=True)")
+        payload = bytearray(self.store.get(spec.out_key, promote=False))
+        buf = np.frombuffer(payload, dtype=np.dtype(spec.dtype))
+        reads: List[dict] = []
+        tier_cache: dict = {}
+        patches: List[Tuple[int, bytes]] = []
+        patch_bytes = 0
+        for i, f in enumerate(spec.fetches):
+            frames = self._gather_frames(f, reads, tier_cache)
+            spans, states[i] = replay_slice_frames(states[i], frames,
+                                                   f.dtype, f.vlo, f.vhi)
+            for off, vals in spans:
+                buf[f.dst_lo + off:f.dst_lo + off + vals.size] = vals
+                patches.append((f.dst_lo + off, vals.tobytes()))
+                patch_bytes += vals.nbytes
+        self._check_alive()
+        self.store.put(spec.out_key, bytes(payload))
+        with self._lock:
+            self.bytes_in += patch_bytes
+            self._assembly_state[spec.out_key] = states
+        return {"key": spec.out_key, "nbytes": patch_bytes, "reads": reads,
+                "patches": patches}
 
     def _do_drain(self, op: _Op) -> dict:
         self._check_alive()

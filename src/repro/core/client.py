@@ -147,6 +147,167 @@ class CommitHandle:
         raise ICheckError(f"shard {key} could not be stored after retries")
 
 
+class ResizeCutoverHandle:
+    """Phase-1 handle of a zero-stall redistribution
+    (``redistribute(..., overlap=True)``).
+
+    While the handle is held, the application keeps stepping — and keeps
+    committing — as the base checkpoint streams to the new partition in the
+    background.  ``ready()`` flips once the stream landed and prefetches this
+    client's wanted *base* parts (still overlap, not stall); ``cutover()``
+    quiesces the window: the tail delta frames that accumulated meanwhile
+    are replayed agent-side and only the changed value spans travel to the
+    client, so the visible stall is bounded by one delta frame rather than
+    the whole stream.
+
+    Every failure shape degrades to the client funnel from the catalog head
+    — bit-identical to a stop-the-world redistribution, just slower.
+    """
+
+    _FALLBACK_ERRORS = (ICheckError, ConnectionError, TimeoutError, KeyError)
+
+    def __init__(self, client: "ICheckClient", name: str, window,
+                 wanted: set, new_parts: int, part_shape, fallback):
+        self.client = client
+        self.name = name
+        self.window = window              # None = funnel-only degenerate
+        self.wanted = set(wanted)
+        self.new_parts = new_parts
+        self._part_shape = part_shape
+        self._fallback = fallback
+        self._base: Optional[Dict[int, np.ndarray]] = None
+        self._prefetch_s = 0.0
+        self._prefetch_bytes = 0
+        self._result: Optional[Dict[int, np.ndarray]] = None
+
+    # -- phase 1 ------------------------------------------------------------
+    def ready(self) -> bool:
+        """True once the background stream resolved (the app may keep
+        stepping until then — and after, right up to ``cutover()``)."""
+        if self.window is None:
+            return True
+        if not self.window.ready():
+            return False
+        self._maybe_prefetch()
+        return True
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        if self.window is None:
+            return True
+        ok = self.window.wait(timeout)
+        if ok:
+            self._maybe_prefetch()
+        return ok
+
+    def _maybe_prefetch(self) -> None:
+        """Pull the wanted parts' base payloads while still overlapped: at
+        cutover only the replayed spans need to travel through the client."""
+        if self._base is not None or self.window is None:
+            return
+        try:
+            base: Dict[int, np.ndarray] = {}
+            lane: Dict[str, float] = {}
+            dtype = np.dtype(self.window.region.dtype)
+            for dp, agent, out_key, fut, _ in self.window.jobs:
+                if dp not in self.wanted:
+                    continue
+                if fut.exception() is not None:
+                    return    # cutover will surface it as a funnel fallback
+                payload = agent.get(out_key)
+                self._prefetch_bytes += len(payload)
+                lane[agent.node_id] = lane.get(agent.node_id, 0.0) \
+                    + len(payload) / agent.nic.bandwidth + agent.nic.latency
+                base[dp] = np.frombuffer(bytearray(payload), dtype=dtype)
+            self._prefetch_s = max(lane.values(), default=0.0)
+            self._base = base
+        except Exception:   # noqa: BLE001 - prefetch is an optimisation only
+            self._base = None
+
+    # -- phase 2 ------------------------------------------------------------
+    def cutover(self) -> Dict[int, np.ndarray]:
+        """Quiesce-and-switch: returns the wanted parts at the catalog head.
+        Idempotent; call after the last pre-switch commit has been acked."""
+        if self._result is not None:
+            return self._result
+        client = self.client
+        ctl = client.controller
+        if self.window is None:
+            self._result = self._fallback()
+            return self._result
+        try:
+            results, stats, patches = ctl.cutover_redistribution(self.window)
+        except self._FALLBACK_ERRORS as e:
+            ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=client.app_id,
+                            region=self.name, reason=repr(e))
+            ctl.abort_overlap_redistribution(self.window)
+            self._result = self._fallback()
+            return self._result
+        try:
+            out, stall_fetch_s, bytes_client = self._apply(results, stats,
+                                                           patches)
+        except self._FALLBACK_ERRORS as e:
+            ctl.release_redistribution(results)
+            ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=client.app_id,
+                            region=self.name, reason=repr(e))
+            self._result = self._fallback()
+            return self._result
+        ctl.release_redistribution(results)
+        overlap_s = stats["overlap_sim_s"] + self._prefetch_s
+        stall_s = stats["stall_sim_s"] + stall_fetch_s
+        client._publish_redistribution_done(
+            self.name, self.new_parts, "peer", overlap_s + stall_s,
+            bytes_client + self._prefetch_bytes, stats,
+            overlap_sim_s=overlap_s, stall_s=stall_s,
+            overlap_commits=stats["overlap_commits"],
+            tail_frames=stats["tail_frames"],
+            rehydrated=stats["rehydrated"],
+            wall_sim_s=stats["wall_sim_s"],
+            window_skew=stats["window_skew"])
+        self._result = out
+        return out
+
+    def _apply(self, results, stats, patches
+               ) -> Tuple[Dict[int, np.ndarray], float, int]:
+        """Turn the caught-up scratch parts into the wanted arrays.  With a
+        prefetched base and a tail replay, only the patch spans travel (the
+        stall); a re-hydration — or a cutover without a prior ``ready()`` —
+        fetches the parts whole."""
+        dtype = np.dtype(self.window.region.dtype)
+        fetch_lane: Dict[str, float] = {}
+        bytes_client = 0
+        out: Dict[int, np.ndarray] = {}
+        if self._base is not None and not stats["rehydrated"]:
+            for p in sorted(self.wanted):
+                arr = self._base[p]
+                agent, _, _ = results[p]
+                for off, valbytes in (patches or {}).get(p, []):
+                    vals = np.frombuffer(valbytes, dtype=dtype)
+                    arr[off:off + vals.size] = vals
+                    bytes_client += len(valbytes)
+                    fetch_lane[agent.node_id] = \
+                        fetch_lane.get(agent.node_id, 0.0) \
+                        + len(valbytes) / agent.nic.bandwidth \
+                        + agent.nic.latency
+                out[p] = arr.reshape(self._part_shape(p))
+        else:
+            for p in sorted(self.wanted):
+                agent, key, _ = results[p]
+                payload = agent.get(key)
+                bytes_client += len(payload)
+                fetch_lane[agent.node_id] = \
+                    fetch_lane.get(agent.node_id, 0.0) \
+                    + len(payload) / agent.nic.bandwidth + agent.nic.latency
+                out[p] = np.frombuffer(bytearray(payload), dtype=dtype) \
+                    .reshape(self._part_shape(p))
+        return out, max(fetch_lane.values(), default=0.0), bytes_client
+
+    def cancel(self) -> None:
+        """Abandon the window without switching (scratch is released; the
+        app stays on its old partition)."""
+        if self.window is not None and self._result is None:
+            self.client.controller.abort_overlap_redistribution(self.window)
+
+
 class ICheckClient:
     def __init__(self, app_id: AppId, controller: Controller, ranks: int = 1,
                  replication: int = 1, codec: str = "raw",
@@ -543,7 +704,11 @@ class ICheckClient:
     def _publish_redistribution_done(self, name: str, new_parts: int,
                                      via: str, sim_s: float,
                                      bytes_through_client: int,
-                                     stats: Optional[dict] = None) -> None:
+                                     stats: Optional[dict] = None,
+                                     **extra) -> None:
+        """``extra`` carries the zero-stall payload (overlap_sim_s, stall_s,
+        overlap_commits, tail_frames, rehydrated, wall/skew) when the
+        window ran two-phase."""
         stats = stats or {}
         self.controller.bus.publish(
             E.REDISTRIBUTION_DONE, app=self.app_id, region=name,
@@ -553,7 +718,7 @@ class ICheckClient:
             peer_hops=stats.get("peer_hops", 0),
             cross_reads=stats.get("cross_reads", 0),
             intra_reads=stats.get("intra_reads", 0),
-            tier_reads=stats.get("tier_reads", 0))
+            tier_reads=stats.get("tier_reads", 0), **extra)
 
     def _try_peer(self, name: str, ckpt_id: int, programs_fn, wanted: set,
                   new_parts: int, part_shape
@@ -612,14 +777,66 @@ class ICheckClient:
         finally:
             ctl.release_redistribution(results)
         sim_s = stats["sim_s"] + max(fetch_lane.values(), default=0.0)
-        self._publish_redistribution_done(name, new_parts, "peer", sim_s,
-                                          bytes_client, stats)
+        self._publish_redistribution_done(
+            name, new_parts, "peer", sim_s, bytes_client, stats,
+            wall_sim_s=stats.get("wall_sim_s", 0.0),
+            window_skew=stats.get("window_skew", 1.0))
         return out
+
+    def _funnel_1d(self, name: str, new_num_parts: int, wanted: set,
+                   ckpt_id: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """The legacy gather-through-the-client funnel for 1-d (BLOCK/
+        CYCLIC) regions.  ``ckpt_id=None`` resolves the catalog head at call
+        time — the overlap fallback path relies on that, because by cutover
+        time the head has moved past the base the window streamed."""
+        ctl = self.controller
+        region = self.regions[name]
+        old = region.partition
+        new = old.renumbered(new_num_parts)
+        moves = ctl.plan_for_resize(self.app_id, name, new_num_parts)
+        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
+        t0 = ctl.clock.now()
+        stats = {"wire_bytes": 0}
+        sub_moves = [mv for mv in moves if mv.dst in wanted]
+        needed_src = sorted({mv.src for mv in sub_moves})
+        src_parts = self._fetch_source_parts(name, ckpt_id, needed_src,
+                                             stats)
+        dst = planlib.apply_moves(src_parts, sub_moves, old, new,
+                                  region.shape)
+        result = {p: dst[p] for p in wanted}
+        self._publish_redistribution_done(name, new_num_parts, "client",
+                                          ctl.clock.now() - t0,
+                                          stats["wire_bytes"])
+        return result
+
+    def _begin_overlap(self, name: str, ckpt_id: int, programs_fn,
+                       wanted: set, new_parts: int, part_shape,
+                       fallback) -> ResizeCutoverHandle:
+        """Open phase 1 of a zero-stall redistribution and wrap it in a
+        :class:`ResizeCutoverHandle`.  Unlike the stop-the-world peer path,
+        a single-destination program is still worth overlapping — its extra
+        round trip hides inside the window instead of stretching it."""
+        ctl = self.controller
+        region = self._ckpt_region(ckpt_id, name)
+        window = None
+        try:
+            programs = programs_fn()
+            if programs is None:
+                ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=self.app_id,
+                                region=name, reason="unsupported_layout")
+            else:
+                window = ctl.begin_overlap_redistribution(
+                    self.app_id, region, ckpt_id, programs)
+        except ResizeCutoverHandle._FALLBACK_ERRORS as e:
+            ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=self.app_id,
+                            region=name, reason=repr(e))
+        return ResizeCutoverHandle(self, name, window, wanted, new_parts,
+                                   part_shape, fallback)
 
     def redistribute(self, name: str, new_num_parts: int,
                      ckpt_id: Optional[int] = None,
                      parts_needed: Optional[Sequence[int]] = None,
-                     via: str = "peer") -> Dict[int, np.ndarray]:
+                     via: str = "peer", overlap: bool = False):
         """icheck_redistribute(): build the *new* distribution's parts from
         the latest checkpoint, moving only the slices each new part needs
         (paper §III-B; BLOCK/CYCLIC preserved, part count changes).
@@ -630,47 +847,46 @@ class ICheckClient:
         legacy gather-through-the-client funnel, which is also the automatic
         fallback when the peer engine cannot run (unsupported layout, agent
         death mid-transfer, lost source shard).
+
+        ``overlap=True`` (peer only) returns a :class:`ResizeCutoverHandle`
+        immediately instead of blocking for the adapt window: the base
+        checkpoint streams in the background while the caller keeps
+        stepping/committing, and ``handle.cutover()`` later returns the
+        wanted parts caught up to the catalog head.
         """
         if via not in ("peer", "client"):
             raise ICheckError(f"unknown redistribution path via={via!r}")
+        if overlap and via != "peer":
+            raise ICheckError("overlap resize requires via='peer'")
         region = self.regions[name]
         old = region.partition
         if old.scheme == PartitionScheme.MESH:
             raise ICheckError("use redistribute_mesh for mesh regions")
         new = old.renumbered(new_num_parts)
-        moves = self.controller.plan_for_resize(self.app_id, name,
-                                                new_num_parts)
+        self.controller.plan_for_resize(self.app_id, name, new_num_parts)
         ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
         wanted = set(parts_needed) if parts_needed is not None \
             else set(range(new_num_parts))
         ctl = self.controller
         ctl.bus.publish(E.REDISTRIBUTION_STARTED, app=self.app_id,
                         region=name, new_parts=new_num_parts, ckpt=ckpt_id,
-                        via=via)
+                        via=via, overlap=overlap)
+        part_shape = lambda p: planlib.local_shape(region.shape, new, p)  # noqa: E731
+        programs_fn = lambda: ctl.transfer_programs(self.app_id, name,  # noqa: E731
+                                                    new_num_parts)
+        if overlap:
+            return self._begin_overlap(
+                name, ckpt_id, programs_fn, wanted, new_num_parts,
+                part_shape,
+                fallback=lambda: self._funnel_1d(name, new_num_parts,
+                                                 wanted))
         if via == "peer":
-            out = self._try_peer(
-                name, ckpt_id,
-                lambda: ctl.transfer_programs(self.app_id, name,
-                                              new_num_parts),
-                wanted, new_num_parts,
-                part_shape=lambda p: planlib.local_shape(region.shape, new,
-                                                         p))
+            out = self._try_peer(name, ckpt_id, programs_fn, wanted,
+                                 new_num_parts, part_shape)
             if out is not None:
                 return out
         # client funnel (forced, unsupported layout, or peer failure)
-        t0 = ctl.clock.now()
-        stats = {"wire_bytes": 0}
-        needed_src = sorted({mv.src for mv in moves if mv.dst in wanted})
-        src_parts = self._fetch_source_parts(name, ckpt_id, needed_src,
-                                             stats)
-        sub_moves = [mv for mv in moves if mv.dst in wanted]
-        dst = planlib.apply_moves(src_parts, sub_moves, old, new,
-                                  region.shape)
-        result = {p: dst[p] for p in wanted}
-        self._publish_redistribution_done(name, new_num_parts, "client",
-                                          ctl.clock.now() - t0,
-                                          stats["wire_bytes"])
-        return result
+        return self._funnel_1d(name, new_num_parts, wanted, ckpt_id)
 
     def commit_redistribution(self, name: str, new_num_parts: int) -> None:
         """MPI_Comm_adapt_commit side-effect: region now has the new mapping.
@@ -685,41 +901,14 @@ class ICheckClient:
         self.regions[name] = region
         self.controller.register_region(self.app_id, region)
 
-    def redistribute_mesh(self, name: str, new_boxes: Sequence[planlib.Box],
-                          ckpt_id: Optional[int] = None,
-                          parts_needed: Optional[Sequence[int]] = None,
-                          via: str = "peer") -> Dict[int, np.ndarray]:
-        """Mesh-sharded (JAX) variant: old boxes from the region registry,
-        new boxes from the target sharding.  Same peer-first execution as
-        :meth:`redistribute` — pass ``parts_needed`` (the local new ranks'
-        shard indices) so only those parts flow through this client; mesh
-        programs are compiled at adapt time because only the application
-        knows the new mesh's boxes."""
-        if via not in ("peer", "client"):
-            raise ICheckError(f"unknown redistribution path via={via!r}")
-        region = self.regions[name]
-        if region.partition.scheme != PartitionScheme.MESH:
-            raise ICheckError(f"{name} is not a mesh region")
-        old_boxes = region.partition.bounds
-        new_boxes = tuple(new_boxes)
-        moves = planlib.mesh_moves(old_boxes, new_boxes)
-        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
-        wanted = set(parts_needed) if parts_needed is not None \
-            else set(range(len(new_boxes)))
+    def _funnel_mesh(self, name: str, new_boxes: tuple, wanted: set,
+                     ckpt_id: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Client funnel for mesh regions (``ckpt_id=None`` = catalog head
+        at call time, see :meth:`_funnel_1d`)."""
         ctl = self.controller
-        ctl.bus.publish(E.REDISTRIBUTION_STARTED, app=self.app_id,
-                        region=name, new_parts=len(new_boxes), ckpt=ckpt_id,
-                        via=via)
-        if via == "peer":
-            out = self._try_peer(
-                name, ckpt_id,
-                lambda: planlib.compile_mesh_transfer_programs(old_boxes,
-                                                               new_boxes),
-                wanted, len(new_boxes),
-                part_shape=lambda p: tuple(hi - lo
-                                           for lo, hi in new_boxes[p]))
-            if out is not None:
-                return out
+        region = self.regions[name]
+        moves = planlib.mesh_moves(region.partition.bounds, new_boxes)
+        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
         t0 = ctl.clock.now()
         stats = {"wire_bytes": 0}
         sub_moves = [mv for mv in moves if mv.dst in wanted]
@@ -733,6 +922,48 @@ class ICheckClient:
                                           ctl.clock.now() - t0,
                                           stats["wire_bytes"])
         return result
+
+    def redistribute_mesh(self, name: str, new_boxes: Sequence[planlib.Box],
+                          ckpt_id: Optional[int] = None,
+                          parts_needed: Optional[Sequence[int]] = None,
+                          via: str = "peer", overlap: bool = False):
+        """Mesh-sharded (JAX) variant: old boxes from the region registry,
+        new boxes from the target sharding.  Same peer-first execution as
+        :meth:`redistribute` — pass ``parts_needed`` (the local new ranks'
+        shard indices) so only those parts flow through this client; mesh
+        programs are compiled at adapt time because only the application
+        knows the new mesh's boxes.  ``overlap=True`` returns a
+        :class:`ResizeCutoverHandle` (see :meth:`redistribute`)."""
+        if via not in ("peer", "client"):
+            raise ICheckError(f"unknown redistribution path via={via!r}")
+        if overlap and via != "peer":
+            raise ICheckError("overlap resize requires via='peer'")
+        region = self.regions[name]
+        if region.partition.scheme != PartitionScheme.MESH:
+            raise ICheckError(f"{name} is not a mesh region")
+        old_boxes = region.partition.bounds
+        new_boxes = tuple(new_boxes)
+        ckpt_id = self._resolve_redistribution_ckpt(ckpt_id)
+        wanted = set(parts_needed) if parts_needed is not None \
+            else set(range(len(new_boxes)))
+        ctl = self.controller
+        ctl.bus.publish(E.REDISTRIBUTION_STARTED, app=self.app_id,
+                        region=name, new_parts=len(new_boxes), ckpt=ckpt_id,
+                        via=via, overlap=overlap)
+        part_shape = lambda p: tuple(hi - lo for lo, hi in new_boxes[p])  # noqa: E731
+        programs_fn = lambda: planlib.compile_mesh_transfer_programs(  # noqa: E731
+            old_boxes, new_boxes)
+        if overlap:
+            return self._begin_overlap(
+                name, ckpt_id, programs_fn, wanted, len(new_boxes),
+                part_shape,
+                fallback=lambda: self._funnel_mesh(name, new_boxes, wanted))
+        if via == "peer":
+            out = self._try_peer(name, ckpt_id, programs_fn, wanted,
+                                 len(new_boxes), part_shape)
+            if out is not None:
+                return out
+        return self._funnel_mesh(name, new_boxes, wanted, ckpt_id)
 
     # ---------------------------------------------------------- probe_agents
     def probe_agents(self) -> List[Agent]:

@@ -323,6 +323,22 @@ class Controller:
     def release_redistribution(self, results) -> None:
         self.resize.engine.release(results)
 
+    def begin_overlap_redistribution(self, app_id: AppId, region: RegionMeta,
+                                     ckpt_id: CkptId, programs):
+        """Open a zero-stall resize window: stream the base checkpoint in the
+        background while the app keeps stepping; see
+        :meth:`PeerRedistributionEngine.begin_overlap`."""
+        return self.resize.engine.begin_overlap(app_id, region, ckpt_id,
+                                                programs)
+
+    def cutover_redistribution(self, window):
+        """Land an overlap window: replay the tail deltas (or re-hydrate)
+        and return ``(results, stats, patches)``."""
+        return self.resize.engine.cutover(window)
+
+    def abort_overlap_redistribution(self, window) -> None:
+        self.resize.engine.abort(window)
+
     # ================================================================== misc
     def close(self) -> None:
         self.lifecycle.close()

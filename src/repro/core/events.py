@@ -61,6 +61,17 @@ REDISTRIBUTION_DONE = "redistribution_done"
 # mid-transfer, lost source shard): the client funnel takes over so the
 # adapt window completes instead of wedging
 REDISTRIBUTION_FALLBACK = "redistribution_fallback"
+# -- zero-stall (two-phase) resize ------------------------------------------
+# phase 1 opened: the base checkpoint is streaming to the new partition in
+# the background while the application keeps stepping (and keeps committing
+# q8-deltas against the pre-resize chain)
+RESIZE_OVERLAP_STARTED = "resize_overlap_started"
+# phase 2 finished: tail deltas replayed onto the assembled scratch parts
+# (or a keyframe re-hydration when the chain reset mid-window) and the app
+# switched to the new partition; payload carries the bounded stall seconds,
+# the hidden overlap seconds, commits absorbed during the window, tail frame
+# count and whether re-hydration was needed
+CUTOVER_DONE = "cutover_done"
 CODEC_DEGRADED = "codec_degraded"
 SHARD_SPILLED = "shard_spilled"
 SHARD_PROMOTED = "shard_promoted"

@@ -46,6 +46,12 @@ class RegionChain:
 
 
 class CheckpointCatalog:
+    # while a zero-stall resize holds a chain open, the keyframe-every-K
+    # horizon stretches by this factor (a safety cap, not a policy: the
+    # overlap window is short, but a wedged cutover must not let the chain
+    # grow without bound)
+    HOLD_HORIZON_FACTOR = 4
+
     def __init__(self, ctl, delta_keyframe_every: int = 8):
         self.ctl = ctl
         self._seq: Dict[AppId, itertools.count] = {}
@@ -53,6 +59,11 @@ class CheckpointCatalog:
         self._kf_every: Dict[AppId, int] = {}
         self._chain_lock = threading.Lock()
         self._chains: Dict[Tuple[AppId, str], RegionChain] = {}
+        # (app, region) -> refcount of open overlap windows; a held chain
+        # keeps producing deltas past the keyframe horizon so the window's
+        # commits stay replayable tail frames (reset still happens normally
+        # — the cutover detects it and re-hydrates instead)
+        self._holds: Dict[Tuple[AppId, str], int] = {}
         self._unsub_chain = ctl.bus.subscribe(self._on_chain_event,
                                               events=_CHAIN_RESET_EVENTS)
 
@@ -111,14 +122,35 @@ class CheckpointCatalog:
                     num_parts: int) -> Optional[RegionChain]:
         """Previous-codes state the next commit of ``region`` may delta
         against, or None when a keyframe is due (no chain, chain at the
-        keyframe-every-K horizon, or a part-count mismatch)."""
+        keyframe-every-K horizon, or a part-count mismatch).  A held chain
+        (open overlap window) stretches the horizon so the window's commits
+        keep extending the replayable tail instead of keyframing under it."""
         with self._chain_lock:
             rc = self._chains.get((app_id, region))
-            if rc is None or len(rc.chain) >= self.keyframe_every(app_id):
+            horizon = self.keyframe_every(app_id)
+            if self._holds.get((app_id, region), 0) > 0:
+                horizon *= self.HOLD_HORIZON_FACTOR
+            if rc is None or len(rc.chain) >= horizon:
                 return None
             if set(rc.parts) != set(range(num_parts)):
                 return None
             return rc
+
+    def hold_chain(self, app_id: AppId, region: str) -> None:
+        """Keep ``region``'s chain open across a zero-stall resize window
+        (ref-counted; pair with :meth:`release_chain`)."""
+        with self._chain_lock:
+            k = (app_id, region)
+            self._holds[k] = self._holds.get(k, 0) + 1
+
+    def release_chain(self, app_id: AppId, region: str) -> None:
+        with self._chain_lock:
+            k = (app_id, region)
+            n = self._holds.get(k, 0) - 1
+            if n <= 0:
+                self._holds.pop(k, None)
+            else:
+                self._holds[k] = n
 
     def advance_chain(self, app_id: AppId, ckpt_id: CkptId, region: str,
                       states: Optional[Dict[int, DeltaState]],

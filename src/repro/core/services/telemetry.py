@@ -77,6 +77,17 @@ class AppTelemetry:
         self.redist_bytes_through_client = 0
         self.redist_peer_hops = 0            # agent→agent slice reads
         self.redist_window_s = EWMA(alpha=alpha)
+        # analytic max-lane model vs serialized sim-clock wall time of the
+        # same window — the gauge CI watches to validate the lane model
+        self.redist_window_skew = EWMA(alpha=alpha)
+        # zero-stall (two-phase) resize: overlap windows opened, cutovers
+        # landed, commits absorbed while streaming, re-hydration fallbacks,
+        # and the bounded cutover stall
+        self.overlap_windows = 0
+        self.overlap_cutovers = 0
+        self.overlap_commits = 0
+        self.overlap_rehydrations = 0
+        self.cutover_stall_s = EWMA(alpha=alpha)
 
     def as_dict(self) -> dict:
         return {
@@ -108,6 +119,12 @@ class AppTelemetry:
             "redist_bytes_through_client": self.redist_bytes_through_client,
             "redist_peer_hops": self.redist_peer_hops,
             "redist_window_s": self.redist_window_s.predict(),
+            "redist_window_skew": self.redist_window_skew.predict(),
+            "overlap_windows": self.overlap_windows,
+            "overlap_cutovers": self.overlap_cutovers,
+            "overlap_commits": self.overlap_commits,
+            "overlap_rehydrations": self.overlap_rehydrations,
+            "cutover_stall_s": self.cutover_stall_s.predict(),
         }
 
 
@@ -137,7 +154,8 @@ class TelemetryService:
             events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
                     E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED,
                     E.CKPT_DELTA_COMMITTED, E.DELTA_CHAIN_RESET,
-                    E.REDISTRIBUTION_DONE, E.REDISTRIBUTION_FALLBACK)
+                    E.REDISTRIBUTION_DONE, E.REDISTRIBUTION_FALLBACK,
+                    E.RESIZE_OVERLAP_STARTED, E.CUTOVER_DONE)
             + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
 
     def close(self) -> None:
@@ -197,6 +215,16 @@ class TelemetryService:
                     int(p.get("bytes_through_client", 0))
                 tel.redist_peer_hops += int(p.get("peer_hops", 0))
                 tel.redist_window_s.update(float(p.get("sim_s", 0.0)))
+                if "window_skew" in p:
+                    tel.redist_window_skew.update(float(p["window_skew"]))
+            elif name == E.RESIZE_OVERLAP_STARTED:
+                self._app(p["app"]).overlap_windows += 1
+            elif name == E.CUTOVER_DONE:
+                tel = self._app(p["app"])
+                tel.overlap_cutovers += 1
+                tel.overlap_commits += int(p.get("overlap_commits", 0))
+                tel.overlap_rehydrations += int(bool(p.get("rehydrated")))
+                tel.cutover_stall_s.update(float(p.get("stall_sim_s", 0.0)))
             elif name == E.REDISTRIBUTION_FALLBACK:
                 self._app(p["app"]).redist_fallbacks += 1
             elif name == E.DRAIN_FAILED:
@@ -389,6 +417,28 @@ class TelemetryService:
         metric("icheck_redist_window_seconds", "gauge",
                "EWMA simulated adapt-window redistribution time",
                [({"app": a}, t["redist_window_s"]) for a, t in apps.items()])
+        metric("icheck_redist_window_skew_ratio", "gauge",
+               "EWMA analytic-max-lane / sim-clock-wall ratio of the adapt "
+               "window (validates the CommitHandle lane model)",
+               [({"app": a}, t["redist_window_skew"])
+                for a, t in apps.items()])
+        metric("icheck_overlap_windows_total", "counter",
+               "Zero-stall resize overlap windows opened",
+               [({"app": a}, t["overlap_windows"]) for a, t in apps.items()])
+        metric("icheck_overlap_cutovers_total", "counter",
+               "Zero-stall resize cutovers landed",
+               [({"app": a}, t["overlap_cutovers"]) for a, t in apps.items()])
+        metric("icheck_overlap_commits_total", "counter",
+               "Commits absorbed while overlap windows streamed",
+               [({"app": a}, t["overlap_commits"]) for a, t in apps.items()])
+        metric("icheck_overlap_rehydrations_total", "counter",
+               "Cutovers that re-hydrated from the head instead of "
+               "replaying the tail (chain reset raced the window)",
+               [({"app": a}, t["overlap_rehydrations"])
+                for a, t in apps.items()])
+        metric("icheck_cutover_stall_seconds", "gauge",
+               "EWMA bounded cutover stall (tail replay + patch fetch)",
+               [({"app": a}, t["cutover_stall_s"]) for a, t in apps.items()])
         metric("icheck_failures_total", "counter",
                "Failures charged to each application",
                [({"app": a}, t["failures"]) for a, t in apps.items()])

@@ -83,6 +83,10 @@ _Q8_QUANT = b"Q"
 _Q8_RAW = b"R"
 _Q8_KEY = b"K"
 _Q8_DELTA = b"D"
+# a delta frame of a part with zero changed blocks is exactly the header:
+# D + n u64le + nnz u32le (nnz=0) — knowing this lets consumers prune reads
+# of unchanged parts from shard *sizes* alone (already in every manifest)
+Q8_EMPTY_DELTA_NBYTES = 1 + 8 + 4
 
 
 @dataclasses.dataclass
@@ -302,6 +306,133 @@ _SL_FULL = b"S"
 _SL_DELTA = b"T"
 
 
+@dataclasses.dataclass
+class SliceState:
+    """Retained q8 decode state of one assembled slice range [vlo, vhi):
+    the (codes, scales) of the covering blocks after replaying the base
+    chain.  A zero-stall cutover advances this state with the tail delta
+    frames committed during the overlap window instead of re-streaming the
+    keyframe — the decoded scratch bytes alone could not absorb a ``T``
+    frame (XOR needs the codes, not the dequantized values)."""
+
+    vlo: int
+    vhi: int
+    codes: np.ndarray         # (nb, BLOCK) int8, blocks [vlo//B, ceil(vhi/B))
+    scales: np.ndarray        # (nb, 1) f32
+
+
+def _apply_slice_frame(blob: bytes, codes, scales, vlo: int, vhi: int):
+    """Apply one S/T slice frame to (codes, scales); returns the new
+    ``(codes, scales, changed_rel)`` where ``changed_rel`` is the array of
+    relative block indices the frame touched (None = every block)."""
+    blo, bhi = vlo // _Q8_BLOCK, -(-vhi // _Q8_BLOCK)
+    nb = bhi - blo
+    mode = blob[:1]
+    flo = int.from_bytes(blob[1:9], "little")
+    fhi = int.from_bytes(blob[9:17], "little")
+    if (flo, fhi) != (vlo, vhi):
+        raise RestoreError(
+            f"slice range mismatch: frame [{flo},{fhi}) vs [{vlo},{vhi})")
+    if mode == _SL_FULL:
+        if len(blob) != 17 + nb * (4 + _Q8_BLOCK):
+            raise RestoreError(f"truncated q8 slice: {len(blob)} bytes")
+        scales = np.frombuffer(blob[17:17 + 4 * nb],
+                               np.float32).reshape(nb, 1).copy()
+        codes = np.frombuffer(blob[17 + 4 * nb:],
+                              np.int8).reshape(nb, _Q8_BLOCK).copy()
+        return codes, scales, None
+    if mode == _SL_DELTA:
+        if codes is None or scales is None:
+            raise RestoreError("delta slice without a keyframe slice")
+        nnz = int.from_bytes(blob[17:21], "little")
+        if len(blob) != 21 + nnz * (4 + 4 + _Q8_BLOCK):
+            raise RestoreError(
+                f"truncated q8-delta slice: {len(blob)} bytes")
+        off = 21
+        idx = np.frombuffer(blob[off:off + 4 * nnz], np.uint32)
+        off += 4 * nnz
+        dsc = np.frombuffer(blob[off:off + 4 * nnz],
+                            np.float32).reshape(-1, 1)
+        off += 4 * nnz
+        dl = np.frombuffer(blob[off:], np.int8).reshape(-1, _Q8_BLOCK)
+        rel = idx.astype(np.int64) - blo
+        if len(rel) and (rel.min() < 0 or rel.max() >= nb):
+            raise RestoreError("delta slice block index out of range")
+        codes[rel] = np.bitwise_xor(codes[rel], dl)
+        scales[rel] = dsc
+        return codes, scales, rel
+    raise RestoreError(f"bad slice mode {mode!r}")
+
+
+def _dequantize_slice(codes: np.ndarray, scales: np.ndarray,
+                      dtype: str, vlo: int, vhi: int) -> np.ndarray:
+    blo = vlo // _Q8_BLOCK
+    vals = (codes.astype(np.float32) * scales).reshape(-1)
+    return vals[vlo - blo * _Q8_BLOCK:vhi - blo * _Q8_BLOCK] \
+        .astype(np.dtype(dtype))
+
+
+def replay_slice_frames(state: Optional[SliceState], frames: Sequence[bytes],
+                        dtype: str, vlo: int, vhi: int
+                        ) -> Tuple[List[Tuple[int, np.ndarray]],
+                                   Optional[SliceState]]:
+    """Advance a retained :class:`SliceState` by tail frames (the deltas
+    committed during an overlap window) and return the *value patches* a
+    cutover must splice into the already-assembled scratch payload.
+
+    Returns ``(patches, new_state)`` where each patch is ``(rel_offset,
+    values)`` relative to ``vlo``, covering exactly the value spans whose
+    blocks changed (adjacent changed blocks coalesce into one patch).  A
+    raw (``W``) tail frame replaces the whole range and needs no state.
+    """
+    if not frames:
+        return [], state
+    if frames[-1][:1] == _SL_RAW:
+        # raw passthrough: every chain frame is full, only the last matters
+        arr = np.frombuffer(bytearray(frames[-1][1:]), dtype=np.dtype(dtype))
+        if arr.size != vhi - vlo:
+            raise RestoreError(
+                f"raw slice carries {arr.size} values, wanted {vhi - vlo}")
+        return [(0, arr)], state
+    if state is not None and (state.vlo, state.vhi) != (vlo, vhi):
+        raise RestoreError(
+            f"slice state covers [{state.vlo},{state.vhi}), "
+            f"tail frames cover [{vlo},{vhi})")
+    codes = state.codes if state is not None else None
+    scales = state.scales if state is not None else None
+    blo, bhi = vlo // _Q8_BLOCK, -(-vhi // _Q8_BLOCK)
+    nb = bhi - blo
+    touched: Optional[set] = set()
+    for blob in frames:
+        codes, scales, changed = _apply_slice_frame(blob, codes, scales,
+                                                    vlo, vhi)
+        if changed is None:           # a full S frame rewrote every block
+            touched = None
+        elif touched is not None:
+            touched.update(int(r) for r in changed)
+    new_state = SliceState(vlo=vlo, vhi=vhi, codes=codes, scales=scales)
+    if touched is None:
+        return [(0, _dequantize_slice(codes, scales, dtype, vlo, vhi))], \
+            new_state
+    if not touched:
+        return [], new_state
+    vals = _dequantize_slice(codes, scales, dtype, vlo, vhi)
+    patches: List[Tuple[int, np.ndarray]] = []
+    run_lo: Optional[int] = None
+    prev = None
+    for rb in sorted(touched) + [None]:       # sentinel flushes the last run
+        if run_lo is not None and (rb is None or rb != prev + 1):
+            lo = max(vlo, (blo + run_lo) * _Q8_BLOCK)
+            hi = min(vhi, (blo + prev + 1) * _Q8_BLOCK)
+            patches.append((lo - vlo, vals[lo - vlo:hi - vlo]))
+            run_lo = None
+        if rb is not None:
+            if run_lo is None:
+                run_lo = rb
+            prev = rb
+    return patches, new_state
+
+
 def slice_payload(blob: bytes, codec: str, dtype: str,
                   vlo: int, vhi: int) -> bytes:
     """Cut the slice frame for flattened elements [vlo, vhi) of one stored
@@ -340,13 +471,16 @@ def slice_payload(blob: bytes, codec: str, dtype: str,
 
 
 def decode_slice_frames(frames: Sequence[bytes], dtype: str,
-                        vlo: int, vhi: int) -> np.ndarray:
+                        vlo: int, vhi: int, return_state: bool = False):
     """Replay slice frames back to values (destination-agent assembly).
 
     ``frames`` is chain-ordered (keyframe slice first, delta slices after)
     for ``q8-delta``; a single frame otherwise.  Returns a 1-d array of
     exactly ``vhi - vlo`` elements, bit-identical to decoding the full
-    shards and slicing.
+    shards and slicing.  With ``return_state=True`` returns ``(values,
+    SliceState | None)`` so an overlap-window cutover can later advance the
+    decode with tail delta frames (:func:`replay_slice_frames`); raw slices
+    have no q8 state and yield None.
     """
     if not frames:
         raise RestoreError("empty slice chain")
@@ -356,51 +490,17 @@ def decode_slice_frames(frames: Sequence[bytes], dtype: str,
         if arr.size != vhi - vlo:
             raise RestoreError(
                 f"raw slice carries {arr.size} values, wanted {vhi - vlo}")
-        return arr
-    blo, bhi = vlo // _Q8_BLOCK, -(-vhi // _Q8_BLOCK)
-    nb = bhi - blo
+        return (arr, None) if return_state else arr
     codes: Optional[np.ndarray] = None
     scales: Optional[np.ndarray] = None
     for blob in frames:
-        mode = blob[:1]
-        flo = int.from_bytes(blob[1:9], "little")
-        fhi = int.from_bytes(blob[9:17], "little")
-        if (flo, fhi) != (vlo, vhi):
-            raise RestoreError(
-                f"slice range mismatch: frame [{flo},{fhi}) vs [{vlo},{vhi})")
-        if mode == _SL_FULL:
-            if len(blob) != 17 + nb * (4 + _Q8_BLOCK):
-                raise RestoreError(f"truncated q8 slice: {len(blob)} bytes")
-            scales = np.frombuffer(blob[17:17 + 4 * nb],
-                                   np.float32).reshape(nb, 1).copy()
-            codes = np.frombuffer(blob[17 + 4 * nb:],
-                                  np.int8).reshape(nb, _Q8_BLOCK).copy()
-        elif mode == _SL_DELTA:
-            if codes is None or scales is None:
-                raise RestoreError("delta slice without a keyframe slice")
-            nnz = int.from_bytes(blob[17:21], "little")
-            if len(blob) != 21 + nnz * (4 + 4 + _Q8_BLOCK):
-                raise RestoreError(
-                    f"truncated q8-delta slice: {len(blob)} bytes")
-            off = 21
-            idx = np.frombuffer(blob[off:off + 4 * nnz], np.uint32)
-            off += 4 * nnz
-            dsc = np.frombuffer(blob[off:off + 4 * nnz],
-                                np.float32).reshape(-1, 1)
-            off += 4 * nnz
-            dl = np.frombuffer(blob[off:], np.int8).reshape(-1, _Q8_BLOCK)
-            rel = idx.astype(np.int64) - blo
-            if len(rel) and (rel.min() < 0 or rel.max() >= nb):
-                raise RestoreError("delta slice block index out of range")
-            codes[rel] = np.bitwise_xor(codes[rel], dl)
-            scales[rel] = dsc
-        else:
-            raise RestoreError(f"bad slice mode {mode!r}")
+        codes, scales, _ = _apply_slice_frame(blob, codes, scales, vlo, vhi)
     if codes is None or scales is None:
         raise RestoreError("q8 slice chain has no keyframe slice")
-    vals = (codes.astype(np.float32) * scales).reshape(-1)
-    return vals[vlo - blo * _Q8_BLOCK:vhi - blo * _Q8_BLOCK] \
-        .astype(np.dtype(dtype))
+    vals = _dequantize_slice(codes, scales, dtype, vlo, vhi)
+    if return_state:
+        return vals, SliceState(vlo=vlo, vhi=vhi, codes=codes, scales=scales)
+    return vals
 
 
 @dataclasses.dataclass

@@ -63,7 +63,7 @@ class ElasticTrainer:
                  make_mesh: Callable[[int], Mesh] = default_make_mesh,
                  codec: str = "raw", replication: int = 1,
                  total_steps: int = 1000, adaptive_interval: bool = False,
-                 step_sim_s: float = 0.0):
+                 step_sim_s: float = 0.0, overlap_resize: bool = False):
         self.cfg = cfg
         self.shape = shape
         self.app = MalleableApp(app_id, cluster.rm, ranks)
@@ -83,6 +83,13 @@ class ElasticTrainer:
         self.metrics_log: list = []
         self.resizes = 0
         self._pending_commits: list = []
+        # zero-stall resize: on a forewarned/probed resize, open overlap
+        # windows per region and keep training while the base checkpoint
+        # streams; the adapt window proper shrinks to the cutover
+        self.overlap_resize = overlap_resize
+        self._adapt_handles: Optional[Dict[str, object]] = None
+        self._adapt_ctx: Optional[dict] = None
+        self.steps_during_resize = 0
         # adaptive checkpoint pacing: when enabled, commits follow the
         # IntervalController's solved cadence (sim-time based, re-announced
         # via INTERVAL_CHANGED events) instead of the static commit_every
@@ -230,10 +237,74 @@ class ElasticTrainer:
         self.mesh = new_mesh
         self.state = jax.tree_util.tree_unflatten(treedef, new_leaves)
 
+    def _begin_overlap_adapt(self, new_ranks: int) -> None:
+        """Phase 1: commit a base checkpoint, then open one overlap window
+        per TrainState leaf targeting the new mesh's boxes.  The RM's resize
+        event stays pending (``adapt_begin`` re-probes it at cutover), so
+        training continues on the old ranks while the streams run."""
+        self.commit(blocking=True)
+        new_mesh = self.make_mesh(new_ranks)
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        names = leaf_names(self.state)
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        rep = NamedSharding(new_mesh, PartitionSpec())
+        handles: Dict[str, object] = {}
+        boxes_by_name: Dict[str, tuple] = {}
+        for name, leaf in zip(names, flat):
+            boxes = planlib.mesh_part_bounds(leaf.shape, rep)
+            boxes_by_name[name] = boxes
+            handles[name] = self.client.redistribute_mesh(name, boxes,
+                                                          overlap=True)
+        self._adapt_handles = handles
+        self._adapt_ctx = {"new_ranks": new_ranks, "new_mesh": new_mesh,
+                           "boxes": boxes_by_name, "treedef": treedef,
+                           "names": names, "flat": flat}
+
+    def _finish_overlap_adapt(self) -> None:
+        """Phase 2: quiesce (one last delta commit — the only frames the
+        cutover still has to replay), switch partitions, rebuild the
+        TrainState on the new mesh from the caught-up parts."""
+        ctx = self._adapt_ctx
+        window = self.app.adapt_begin()
+        self.commit(blocking=True)
+        new_mesh = ctx["new_mesh"]
+        rep = NamedSharding(new_mesh, PartitionSpec())
+        new_leaves = []
+        for name, leaf in zip(ctx["names"], ctx["flat"]):
+            boxes = ctx["boxes"][name]
+            parts = self._adapt_handles[name].cutover()
+            full = np.zeros(leaf.shape, leaf.dtype)
+            for idx, arr in parts.items():
+                sl = tuple(slice(lo, hi) for lo, hi in boxes[idx])
+                full[sl] = arr
+            new_leaves.append(jax.device_put(full, rep))
+        self.mesh = new_mesh
+        self.state = jax.tree_util.tree_unflatten(ctx["treedef"], new_leaves)
+        self.app.adapt_commit()
+        self.client.ranks = window.new_ranks
+        self._jit_step()
+        self.resizes += 1
+        self._adapt_handles = None
+        self._adapt_ctx = None
+
     def maybe_adapt(self) -> bool:
-        """MPI_Probe_adapt + adapt window (paper lines 17-23)."""
+        """MPI_Probe_adapt + adapt window (paper lines 17-23).
+
+        With ``overlap_resize`` the window is two-phase: the first probe
+        that sees a resize opens background streams and returns False (no
+        adaptation yet — training continues); once every stream is ready
+        the next call performs the bounded-stall cutover."""
+        if self._adapt_handles is not None:
+            if all(h.ready() for h in self._adapt_handles.values()):
+                self._finish_overlap_adapt()
+                return True
+            return False
         ev = self.app.probe_adapt()
         if ev is None:
+            return False
+        if self.overlap_resize:
+            self._begin_overlap_adapt(ev.new_ranks)
             return False
         window = self.app.adapt_begin()
         self._redistribute(window.new_ranks)
@@ -253,6 +324,10 @@ class ElasticTrainer:
                      for k, v in batch.items()}
             self.state, metrics = self._step(self.state, batch)
             step = int(self.state.step)
+            if self._adapt_handles is not None:
+                # work retained inside the adapt window — the whole point of
+                # overlapping: a stop-the-world resize gets zero of these
+                self.steps_during_resize += 1
             self.metrics_log.append(
                 {"step": step, "loss": float(metrics["loss"])})
             if self.step_sim_s > 0:
@@ -264,10 +339,17 @@ class ElasticTrainer:
         return {"steps": steps, "wall_s": time.monotonic() - t0,
                 "final_loss": self.metrics_log[-1]["loss"],
                 "resizes": self.resizes,
+                "steps_during_resize": self.steps_during_resize,
                 "interval_changes": self.interval_changes,
                 "ckpt_interval_s": self.client.ckpt_interval_s}
 
     def finalize(self):
+        if self._adapt_handles is not None:
+            # run ended mid-window: release the scratch without switching
+            for h in self._adapt_handles.values():
+                h.cancel()
+            self._adapt_handles = None
+            self._adapt_ctx = None
         for h in self._pending_commits:
             if not h.done():
                 h.wait(timeout=60)

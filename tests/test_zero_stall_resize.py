@@ -1,0 +1,339 @@
+"""Zero-stall resize: the overlap window, delta-chain catch-up replay and
+the two-phase cutover.
+
+The contract under test: ``redistribute(..., overlap=True)`` streams the
+base checkpoint in the background while the app keeps committing; at
+``cutover()`` the result must be **bit-identical** to a stop-the-world
+redistribution performed at the then-current catalog head — whether the
+tail was caught up by delta replay, by re-hydration (chain reset raced the
+window, or a non-delta codec kept committing), or by falling back to the
+client funnel after a mid-window failure.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import ICheckClient, ICheckCluster, PartitionScheme
+from repro.core import events as E
+from repro.core import plan as planlib
+from repro.core.agent import Agent, AgentDead
+from repro.core.types import PartitionDesc
+
+
+@pytest.fixture()
+def cluster():
+    c = ICheckCluster(n_icheck_nodes=4, n_spare_nodes=1,
+                      adaptive_interval=False)
+    yield c
+    c.close()
+
+
+def _parts(arr, desc):
+    return {i: p for i, p in enumerate(planlib.split_array(arr, desc))}
+
+
+def _mk_client(cluster, data, codec, scheme, old_p, n_commits=1):
+    client = ICheckClient("app", cluster.controller, ranks=old_p,
+                          codec=codec).init()
+    client.add_adapt("x", data.shape, "float32", scheme=scheme,
+                     num_parts=old_p, block=512)
+    desc = PartitionDesc(scheme=scheme, num_parts=old_p, block=512)
+    for step in range(n_commits):
+        if step:
+            data[:700] += np.float32(step)
+        client.commit(step, {"x": _parts(data, desc)}, blocking=True,
+                      drain=False)
+    return client, desc
+
+
+def _last(cluster, event):
+    evs = [e for e in cluster.controller.events if e["event"] == event]
+    return evs[-1] if evs else None
+
+
+# ------------------------------------------------- overlap ≡ stop-the-world
+@pytest.mark.parametrize("codec", ["raw", "q8", "q8-delta"])
+@pytest.mark.parametrize("scheme", [PartitionScheme.BLOCK,
+                                    PartitionScheme.CYCLIC])
+@pytest.mark.parametrize("old_p,new_p", [(6, 9), (6, 3)])
+def test_overlap_matches_stop_the_world(cluster, codec, scheme, old_p,
+                                        new_p):
+    """Grow and shrink, every codec, with commits *inside* the window: the
+    cutover result equals a stop-the-world redistribution at the head.
+    q8-delta catches up by tail replay; raw/q8 (no chain) re-hydrate."""
+    rng = np.random.default_rng(11)
+    data = rng.standard_normal(1 << 14).astype(np.float32)
+    client, desc = _mk_client(cluster, data, codec, scheme, old_p,
+                              n_commits=2)
+    handle = client.redistribute("x", new_p, overlap=True)
+    assert handle.wait(60)
+    # the app keeps stepping: two more commits land inside the window
+    for step in (2, 3):
+        data[1000:1600] += np.float32(0.5 * step)
+        client.commit(step, {"x": _parts(data, desc)}, blocking=True,
+                      drain=False)
+    out = handle.cutover()
+    oracle = client.redistribute("x", new_p, via="client")
+    assert set(out) == set(oracle) == set(range(new_p))
+    for p in sorted(out):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    done = _last(cluster, E.REDISTRIBUTION_DONE)
+    assert done["via"] == "client"          # the oracle run was last
+    over = [e for e in cluster.controller.events
+            if e["event"] == E.REDISTRIBUTION_DONE and e.get("overlap_sim_s")
+            is not None][-1]
+    assert over["via"] == "peer"
+    assert over["overlap_commits"] == 2
+    if codec == "q8-delta":
+        assert not over["rehydrated"] and over["tail_frames"] == 2
+    else:
+        assert over["rehydrated"] and over["tail_frames"] == 0
+    assert not [e for e in cluster.controller.events
+                if e["event"] == E.REDISTRIBUTION_FALLBACK]
+    client.finalize()
+
+
+def test_overlap_quiet_window_is_plain_switch(cluster):
+    """No commits during the window: head == base, the cutover neither
+    replays nor re-hydrates — it just fetches the streamed scratch."""
+    rng = np.random.default_rng(12)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    client, desc = _mk_client(cluster, data, "q8-delta",
+                              PartitionScheme.BLOCK, 6, n_commits=2)
+    handle = client.redistribute("x", 9, overlap=True)
+    assert handle.wait(60)
+    out = handle.cutover()
+    oracle = client.redistribute("x", 9, via="client")
+    for p in range(9):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    cut = _last(cluster, E.CUTOVER_DONE)
+    assert cut["tail_frames"] == 0 and not cut["rehydrated"]
+    assert cut["stall_sim_s"] >= 0.0
+    client.finalize()
+
+
+def test_overlap_mesh_matches_stop_the_world(cluster):
+    data = np.arange(64 * 48, dtype=np.float32).reshape(64, 48)
+    old_boxes = (((0, 32), (0, 48)), ((32, 64), (0, 48)))
+    new_boxes = (((0, 32), (0, 24)), ((0, 32), (24, 48)),
+                 ((32, 64), (0, 24)), ((32, 64), (24, 48)))
+    client = ICheckClient("app", cluster.controller, ranks=2,
+                          codec="q8").init()
+    client.add_adapt("w", data.shape, "float32",
+                     scheme=PartitionScheme.MESH, num_parts=2,
+                     bounds=old_boxes)
+    parts = {i: data[tuple(slice(lo, hi) for lo, hi in b)].copy()
+             for i, b in enumerate(old_boxes)}
+    client.commit(0, {"w": parts}, blocking=True, drain=False)
+    handle = client.redistribute_mesh("w", new_boxes, overlap=True)
+    assert handle.wait(60)
+    out = handle.cutover()
+    oracle = client.redistribute_mesh("w", new_boxes, via="client")
+    for p in range(len(new_boxes)):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    client.finalize()
+
+
+# ----------------------------------------------------- mid-window failures
+def test_source_death_during_tail_replay_falls_back(cluster, monkeypatch):
+    """Source agents die after the base streamed but before the tail
+    replay: the cutover must degrade to the client funnel at the head —
+    same bits, REDISTRIBUTION_FALLBACK on the audit trail."""
+    rng = np.random.default_rng(13)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    client, desc = _mk_client(cluster, data, "q8-delta",
+                              PartitionScheme.BLOCK, 6, n_commits=2)
+    handle = client.redistribute("x", 9, overlap=True)
+    assert handle.wait(60)
+    data[200:900] += 1.25
+    client.commit(2, {"x": _parts(data, desc)}, blocking=True, drain=False)
+
+    def dead_read(self, *a, **kw):
+        raise AgentDead(f"agent {self.agent_id} died mid-replay")
+
+    monkeypatch.setattr(Agent, "peer_read", dead_read)
+    out = handle.cutover()
+    fb = _last(cluster, E.REDISTRIBUTION_FALLBACK)
+    assert fb is not None and "AgentDead" in fb["reason"]
+    done = _last(cluster, E.REDISTRIBUTION_DONE)
+    assert done["via"] == "client"
+    # the funnel reads shards via the catalog/tiers, not peer_read: a
+    # second explicit funnel run is the bit-exactness oracle (the payload
+    # is q8-quantized, so the raw array is not)
+    oracle = client.redistribute("x", 9, via="client")
+    for p in range(9):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    # aborted scratch must not linger on any agent
+    for mgr in cluster.controller.managers():
+        assert not [k for k in mgr.store.keys() if ".redist" in k.region]
+    client.finalize()
+
+
+def test_chain_reset_racing_window_rehydrates(cluster):
+    """A delta-chain reset lands mid-window (keyframe rollover, eviction,
+    whatever): the retained slice states no longer extend the head chain,
+    so the cutover must re-hydrate from the head keyframe instead of
+    replaying — and still match the funnel bit-for-bit."""
+    rng = np.random.default_rng(14)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    client, desc = _mk_client(cluster, data, "q8-delta",
+                              PartitionScheme.BLOCK, 6, n_commits=2)
+    handle = client.redistribute("x", 9, overlap=True)
+    assert handle.wait(60)
+    data[:512] -= 0.75
+    client.commit(2, {"x": _parts(data, desc)}, blocking=True, drain=False)
+    cluster.controller.catalog.reset_delta_chains(app_id="app", region="x",
+                                                  reason="test-race")
+    data[4096:5000] += 2.0
+    client.commit(3, {"x": _parts(data, desc)}, blocking=True, drain=False)
+    out = handle.cutover()
+    cut = _last(cluster, E.CUTOVER_DONE)
+    assert cut["rehydrated"] and cut["tail_frames"] == 0
+    oracle = client.redistribute("x", 9, via="client")
+    for p in range(9):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    assert not [e for e in cluster.controller.events
+                if e["event"] == E.REDISTRIBUTION_FALLBACK]
+    client.finalize()
+
+
+def test_cancel_releases_window(cluster):
+    rng = np.random.default_rng(15)
+    data = rng.standard_normal(1 << 12).astype(np.float32)
+    client, _ = _mk_client(cluster, data, "q8-delta",
+                           PartitionScheme.BLOCK, 4)
+    handle = client.redistribute("x", 6, overlap=True)
+    assert handle.wait(60)
+    handle.cancel()
+    for mgr in cluster.controller.managers():
+        assert not [k for k in mgr.store.keys() if ".redist" in k.region]
+    # the app never switched: a later stop-the-world resize still works
+    out = client.redistribute("x", 6, via="peer")
+    assert set(out) == set(range(6))
+    client.finalize()
+
+
+# ------------------------------------------------ chain hold over horizon
+def test_window_holds_chain_past_keyframe_horizon(cluster):
+    """An open window stretches the keyframe horizon (HOLD_HORIZON_FACTOR)
+    so mid-window commits stay replayable tail deltas instead of rolling a
+    keyframe that would force re-hydration."""
+    ctl = cluster.controller
+    ctl.catalog.set_keyframe_every("app", 2)
+    rng = np.random.default_rng(16)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    client, desc = _mk_client(cluster, data, "q8-delta",
+                              PartitionScheme.BLOCK, 6, n_commits=2)
+    handle = client.redistribute("x", 9, overlap=True)
+    assert handle.wait(60)
+    # 4 commits: without the hold, keyframe_every=2 would reset the chain
+    # on the first of these and the cutover would re-hydrate
+    for step in range(2, 6):
+        data[100 * step:100 * step + 300] += np.float32(step)
+        client.commit(step, {"x": _parts(data, desc)}, blocking=True,
+                      drain=False)
+    out = handle.cutover()
+    cut = _last(cluster, E.CUTOVER_DONE)
+    assert not cut["rehydrated"] and cut["tail_frames"] == 4
+    oracle = client.redistribute("x", 9, via="client")
+    for p in range(9):
+        np.testing.assert_array_equal(out[p], oracle[p])
+    ctl.catalog.set_keyframe_every("app", None)
+    client.finalize()
+
+
+# ------------------------------------------------------ events / telemetry
+def test_overlap_events_stats_and_telemetry(cluster):
+    rng = np.random.default_rng(17)
+    data = rng.standard_normal(1 << 13).astype(np.float32)
+    client, desc = _mk_client(cluster, data, "q8-delta",
+                              PartitionScheme.BLOCK, 6, n_commits=2)
+    handle = client.redistribute("x", 9, overlap=True)
+    assert handle.wait(60)
+    data[300:600] += 1.0
+    client.commit(2, {"x": _parts(data, desc)}, blocking=True, drain=False)
+    handle.cutover()
+
+    started = _last(cluster, E.RESIZE_OVERLAP_STARTED)
+    assert started and started["new_parts"] == 9 and started["chain_len"] >= 1
+    cut = _last(cluster, E.CUTOVER_DONE)
+    assert cut["overlap_commits"] == 1 and cut["tail_frames"] == 1
+    assert cut["overlap_sim_s"] > 0 and cut["stall_sim_s"] > 0
+    assert cut["stall_sim_s"] < cut["overlap_sim_s"] + cut["stall_sim_s"]
+    done = [e for e in cluster.controller.events
+            if e["event"] == E.REDISTRIBUTION_DONE][-1]
+    assert done["via"] == "peer"
+    assert done["stall_s"] > 0 and done["overlap_sim_s"] > 0
+    assert done["wall_sim_s"] > 0 and done["window_skew"] > 0
+    # the bounded stall is the headline: far below the whole window
+    assert done["stall_s"] < done["sim_s"]
+
+    snap = cluster.telemetry.snapshot()["per_app"]["app"]
+    assert snap["overlap_windows"] == 1
+    assert snap["overlap_cutovers"] == 1
+    assert snap["overlap_commits"] == 1
+    assert snap["overlap_rehydrations"] == 0
+    assert snap["cutover_stall_s"] > 0
+    assert snap["redist_window_skew"] > 0
+    prom = cluster.telemetry.prometheus()
+    assert 'icheck_overlap_windows_total{app="app"} 1' in prom
+    assert 'icheck_cutover_stall_seconds{app="app"}' in prom
+    assert 'icheck_redist_window_skew_ratio{app="app"}' in prom
+    client.finalize()
+
+
+def test_forewarning_memoized_per_target(cluster):
+    """A heartbeat RM re-announcing the same impending resize must not
+    re-publish RESIZE_FOREWARNED (each publish would reset telemetry's
+    adaptive loop); a *different* target or an invalidation re-stages."""
+    data = np.arange(256, dtype=np.float32)
+    client = ICheckClient("app", cluster.controller, ranks=4).init()
+    client.add_adapt("x", data.shape, "float32", num_parts=4)
+    cluster.rm.schedule_resize("app", 6)
+    cluster.rm.schedule_resize("app", 6)          # duplicate heartbeat
+    fw = [e for e in cluster.controller.events
+          if e["event"] == E.RESIZE_FOREWARNED]
+    assert len(fw) == 1
+    cluster.rm.schedule_resize("app", 8)          # new target: re-stage
+    fw = [e for e in cluster.controller.events
+          if e["event"] == E.RESIZE_FOREWARNED]
+    assert len(fw) == 2 and fw[-1]["new_ranks"] == 8
+    cluster.controller.resize.invalidate("app", "x")
+    cluster.rm.schedule_resize("app", 8)          # memo dropped: stages
+    fw = [e for e in cluster.controller.events
+          if e["event"] == E.RESIZE_FOREWARNED]
+    assert len(fw) == 3
+    client.finalize()
+
+
+# ------------------------------------------------------------ trainer e2e
+@pytest.mark.slow
+def test_trainer_overlap_resize_keeps_stepping():
+    """End-to-end: ElasticTrainer(overlap_resize=True) grows 1 -> 2 ranks
+    without a stop-the-world window — training steps land *during* the
+    resize and the final state is healthy."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.optim import AdamWConfig
+    from repro.train import ElasticTrainer
+
+    cfg = get_config("yi-6b", tiny=True)
+    shape = ShapeConfig("t", "train", 32, 4)
+    with ICheckCluster(n_icheck_nodes=2) as cluster:
+        t = ElasticTrainer(cfg, shape, cluster, app_id="app", seed=5,
+                           opt_cfg=AdamWConfig(lr=1e-3), commit_every=100,
+                           probe_every=0, total_steps=16,
+                           overlap_resize=True)
+        t.run(4)
+        cluster.rm.schedule_resize("app", 2)
+        out = t.run(12)
+        assert t.resizes == 1
+        assert t.app.ranks == 2
+        assert t.steps_during_resize > 0
+        assert out["steps_during_resize"] == t.steps_during_resize
+        assert np.isfinite(t.metrics_log[-1]["loss"])
+        cut = [e for e in cluster.controller.events
+               if e["event"] == E.CUTOVER_DONE]
+        assert cut, "trainer resize never cut over"
+        t.finalize()
