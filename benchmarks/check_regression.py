@@ -53,11 +53,13 @@ def main(argv=None) -> None:
 
     base = load(args.baseline)
     cur = load(args.current)
-    if not cur.get("ok", True) or cur.get("failures"):
-        print(f"FAIL: current run reports failures: {cur.get('failures')}")
-        sys.exit(1)
-
+    # a crashed/failed run still gets the full metric comparison below —
+    # the report must show *everything* that regressed, not bail at the
+    # first bad signal and hide the rest from the CI log
     regressions = []
+    if not cur.get("ok", True) or cur.get("failures"):
+        for failure in cur.get("failures") or ("run reports ok=false",):
+            regressions.append(f"current run failure: {failure}")
     print(f"{'metric':35s} {'baseline':>14s} {'current':>14s} {'delta':>8s}")
     for name, base_val in sorted(base["metrics"].items()):
         cur_val = cur["metrics"].get(name)
@@ -88,8 +90,8 @@ def main(argv=None) -> None:
         print(f"{name:35s} {'(new)':>14s} {cur['metrics'][name]:14.4g}")
 
     if regressions:
-        print("\nPERF REGRESSION (threshold "
-              f"{100 * args.threshold:.0f}%):")
+        print("\nPERF GATE FAILED (threshold "
+              f"{100 * args.threshold:.0f}%) — all findings:")
         for r in regressions:
             print(f"  - {r}")
         sys.exit(1)

@@ -76,7 +76,9 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
                       total_work_s: float, failure_times: Sequence[float],
                       interval_fn: Callable[[], float],
                       work_slice_s: float = 0.05, keep_l1: int = 2,
-                      resize_probe: Callable[[], bool] = None) -> dict:
+                      resize_probe: Callable[[], bool] = None,
+                      on_tick: Callable[[float], None] = None,
+                      on_restart: Callable[[object], None] = None) -> dict:
     """Drive a simulated compute loop with checkpoints on the cluster clock.
 
     The application "computes" by advancing the sim clock in slices; every
@@ -94,6 +96,14 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
     through* (a zero-stall overlap resize), and the slice is counted into
     ``steps_during_resize`` / ``work_during_resize_s`` — the work a
     stop-the-world resize would have forfeited.
+
+    ``on_tick`` (optional) is called with the current sim time once per
+    loop iteration — the chaos campaign runner drives its injector (and
+    data churn) through this hook so scheduled faults land at deterministic
+    sim-time offsets relative to the workload.  ``on_restart`` (optional)
+    receives the full ``client.restart()`` result — ``(meta, parts, level)``
+    or None — after every injected rank failure, so an oracle can check the
+    restored bytes (the workload itself only accounts the restart cost).
     """
     clock, bus = cluster.clock, cluster.controller.bus
     app_id = client.app_id
@@ -118,6 +128,8 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
 
     while work_done < total_work_s:
         now = clock.now()
+        if on_tick is not None:
+            on_tick(now)
         if now >= next_fail:
             # the rank dies: lose all work since the last checkpoint
             bus.publish(icheck_events.APP_RANK_FAILED, app=app_id, rank=0)
@@ -125,8 +137,10 @@ def run_ckpt_workload(cluster, client, parts: Dict[str, dict],
             wasted_s += work_done - work_at_ckpt
             work_done = work_at_ckpt
             t0 = clock.now()
-            client.restart()
+            restored = client.restart()
             restart_s += clock.now() - t0
+            if on_restart is not None:
+                on_restart(restored)
             next_fail = next(fail_iter, float("inf"))
             last_ckpt_t = clock.now()
             continue

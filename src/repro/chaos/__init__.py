@@ -1,0 +1,33 @@
+"""Deterministic chaos campaigns for the iCheck service core.
+
+A campaign is: one seeded :class:`~repro.chaos.schedule.ChaosSchedule`
+(agent death, node loss, NIC degradation/down, stragglers, partial
+partitions, mid-overlap-window failures, L3 outage) injected at sim-time
+offsets into a fixed multi-app workload, then judged by the invariant
+registry (``repro.chaos.invariants``) — checks-as-code, each returning
+OK/WARN/CRIT.
+
+Run the matrix::
+
+    python -m repro.chaos.run --seeds 0..99
+
+Reproduce a red seed exactly::
+
+    python -m repro.chaos.run --seed 17 --schedule-json <dumped schedule>
+"""
+from __future__ import annotations
+
+from .campaign import run_campaign
+from .invariants import CheckResult, Status, invariant, run_checks
+from .schedule import ChaosAction, ChaosSchedule, generate_schedule
+
+__all__ = [
+    "ChaosAction",
+    "ChaosSchedule",
+    "CheckResult",
+    "Status",
+    "generate_schedule",
+    "invariant",
+    "run_campaign",
+    "run_checks",
+]

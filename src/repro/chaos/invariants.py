@@ -1,0 +1,314 @@
+"""Invariants-as-code: the judged properties of a chaos campaign.
+
+Checks are plain decorated functions (``@invariant("name")``) returning a
+Checkmk-style :class:`Status` — OK(0)/WARN(1)/CRIT(2) — plus a detail
+string.  They run *after* the campaign workload finishes, against the
+evidence the campaign collected (:class:`~repro.chaos.campaign
+.CampaignEvidence`): the cluster's audit log, the per-app numpy oracles,
+the harness's own ground-truth counters, and the live cluster objects for
+end-state scans.
+
+A CRIT means the campaign *observed a correctness violation* — not that a
+fault happened (faults are the input).  WARN flags suspicious-but-legal
+outcomes (e.g. nothing to compare) so a silently vacuous campaign can't
+read as green coverage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, List, Tuple
+
+from repro.core import events as E
+
+# the catalog's mandatory-reset vocabulary, plus the control-plane reasons
+# emitted outside the bus subscriber (resize commit, app teardown, a commit
+# whose encode failed mid-flight)
+ALLOWED_RESET_REASONS = frozenset({
+    E.APP_RANK_FAILED,
+    E.NODE_FAILED,
+    E.AGENT_FAILED,
+    E.NODE_RETAKEN,
+    E.MIGRATION_LOST_SHARD,
+    E.CKPT_FAILED,
+    E.CKPT_EXPIRED,
+    E.SHARD_DEMOTED,
+    "resize",
+    "app_finished",
+    "commit_encode_failed",
+})
+
+# events after which ``latest_restartable`` may legitimately move backwards
+# (something that could destroy, orphan or hide the newest checkpoint)
+_DESTRUCTIVE_EVENTS = frozenset({
+    E.CKPT_FAILED,
+    E.CKPT_EXPIRED,
+    E.NODE_FAILED,
+    E.AGENT_FAILED,
+    E.NODE_RETAKEN,
+    E.MIGRATION_LOST_SHARD,
+    E.SHARD_DEMOTED,
+    E.CHAOS_INJECTED,
+    E.CHAOS_CLEARED,
+})
+
+# triggers whose firing *requires* a reset of any live chain of the
+# affected app(s): app-scoped (payload names the app) vs cluster-wide
+_APP_TRIGGERS = (E.APP_RANK_FAILED, E.CKPT_FAILED)
+_CLUSTER_TRIGGERS = (E.NODE_FAILED, E.AGENT_FAILED)
+# how far (in audit records) a reset may sit from its trigger: the catalog
+# resets inside the trigger's publish fan-out, so the reset usually lands
+# *before* the trigger in the log
+_TRIGGER_SLACK = 50
+
+
+class Status(enum.IntEnum):
+    OK = 0
+    WARN = 1
+    CRIT = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckResult:
+    name: str
+    status: Status
+    detail: str
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "status": self.status.name,
+            "detail": self.detail,
+        }
+
+
+Check = Callable[[object], Tuple[Status, str]]
+REGISTRY: Dict[str, Check] = {}
+
+
+def invariant(name: str) -> Callable[[Check], Check]:
+    """Register a check function under ``name`` (watchpost style: the
+    decorated function *is* the invariant's definition and its doc)."""
+
+    def deco(fn: Check) -> Check:
+        REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def run_checks(ev) -> List[CheckResult]:
+    """Run every registered invariant against campaign evidence; a check
+    that itself crashes is a CRIT (a broken check must not read as green)."""
+    results: List[CheckResult] = []
+    for name in sorted(REGISTRY):
+        try:
+            status, detail = REGISTRY[name](ev)
+        except Exception as exc:  # noqa: BLE001 - surface, never mask
+            status, detail = Status.CRIT, f"check raised: {exc!r}"
+        results.append(CheckResult(name=name, status=status, detail=detail))
+    return results
+
+
+# ==========================================================================
+# the checks
+# ==========================================================================
+@invariant("restore_bit_identity")
+def check_restore_bit_identity(ev) -> Tuple[Status, str]:
+    """Every restore (mid-campaign rank failures + the final sweep) must be
+    bit-identical to the numpy oracle of the restored checkpoint: raw bytes
+    for lossless codecs, the blockwise-q8 roundtrip for q8/q8-delta (delta
+    replay reconstructs the head's exact codes, so chain shape is
+    irrelevant to the oracle)."""
+    bad = [c for c in ev.restore_checks if not c["ok"]]
+    if bad:
+        worst = bad[0]
+        return Status.CRIT, (
+            f"{len(bad)}/{len(ev.restore_checks)} restores corrupt; first: "
+            f"app={worst['app']} ckpt={worst['ckpt']} {worst['detail']}")
+    if not ev.restore_checks:
+        return Status.WARN, "no restore was ever compared (vacuous campaign)"
+    return Status.OK, "all compared restores bit-identical to the oracle"
+
+
+@invariant("latest_restartable_monotonic")
+def check_latest_restartable_monotonic(ev) -> Tuple[Status, str]:
+    """``latest_restartable`` never regresses past an intact checkpoint:
+    between two observations it may only move backwards if something
+    destructive (failure, expiry, demotion, chaos action) happened in
+    between — never spontaneously."""
+    names = [r["event"] for r in ev.records]
+    for app, obs in ev.restartable_obs.items():
+        prev_idx, prev_ckpt = 0, None
+        for idx, ckpt in obs:
+            if (prev_ckpt is not None and (ckpt is None or ckpt < prev_ckpt)):
+                lo = max(0, prev_idx - _TRIGGER_SLACK)
+                hi = min(len(names), idx + _TRIGGER_SLACK)
+                window = names[lo:hi]
+                if not any(n in _DESTRUCTIVE_EVENTS for n in window):
+                    return Status.CRIT, (
+                        f"app={app}: latest_restartable regressed "
+                        f"{prev_ckpt} -> {ckpt} with no destructive event "
+                        f"in between")
+            prev_idx, prev_ckpt = idx, ckpt
+    return Status.OK, "latest_restartable only regressed under destruction"
+
+
+@invariant("delta_chain_reset_policy")
+def check_delta_chain_reset_policy(ev) -> Tuple[Status, str]:
+    """Delta chains reset exactly when they must, and only then: every
+    mandatory trigger that fires while a chain is live is followed by a
+    matching ``DELTA_CHAIN_RESET`` (the catalog resets inside the trigger's
+    fan-out, so the reset may precede the trigger in the log), and every
+    reset names an allowed reason with a corroborating trigger nearby."""
+    records = ev.records
+    # -- "only then": every reset justified -------------------------------
+    for i, rec in enumerate(records):
+        if rec["event"] != E.DELTA_CHAIN_RESET:
+            continue
+        reason = rec.get("reason", "")
+        if reason not in ALLOWED_RESET_REASONS:
+            return Status.CRIT, (
+                f"reset of {rec.get('app')}/{rec.get('region')} with "
+                f"unknown reason {reason!r}")
+        lo = max(0, i - _TRIGGER_SLACK)
+        hi = min(len(records), i + _TRIGGER_SLACK)
+        if reason == "resize":
+            corroborated = ev.resizes > 0 or any(
+                r["event"] in (E.REDISTRIBUTION_STARTED, E.RESIZE_FOREWARNED)
+                for r in records[lo:hi])
+        elif reason in ("app_finished", "commit_encode_failed"):
+            corroborated = True  # harness-side teardown/commit paths
+        else:
+            corroborated = any(r["event"] == reason
+                               for r in records[lo:hi])
+        if not corroborated:
+            return Status.CRIT, (
+                f"reset of {rec.get('app')}/{rec.get('region')} claims "
+                f"reason {reason!r} but no such trigger fired nearby")
+    # -- "exactly when they must": no suppressed mandatory reset ----------
+    alive: Dict[str, bool] = {}
+    for i, rec in enumerate(records):
+        name = rec["event"]
+        if name == E.CKPT_DELTA_COMMITTED:
+            if int(rec.get("key_frames", 0)) + \
+                    int(rec.get("delta_frames", 0)) > 0:
+                alive[rec["app"]] = True
+        elif name == E.DELTA_CHAIN_RESET:
+            alive[rec["app"]] = False
+        elif name in _APP_TRIGGERS or name in _CLUSTER_TRIGGERS:
+            affected = [rec["app"]] if name in _APP_TRIGGERS \
+                else [a for a, live in alive.items() if live]
+            for app in affected:
+                if not alive.get(app):
+                    continue
+                hi = min(len(records), i + _TRIGGER_SLACK)
+                if not any(r["event"] == E.DELTA_CHAIN_RESET
+                           and r.get("app") == app
+                           and r.get("reason") == name
+                           for r in records[i:hi]):
+                    return Status.CRIT, (
+                        f"app={app}: {name} fired with a live delta chain "
+                        f"but no matching reset followed")
+                alive[app] = False
+    return Status.OK, "every mandatory trigger reset, every reset justified"
+
+
+@invariant("no_event_bus_stall")
+def check_no_event_bus_stall(ev) -> Tuple[Status, str]:
+    """No deadlock or unbounded stall: every bounded wait in the campaign
+    resolved, every driver thread finished inside its wall budget, and sim
+    time stayed under the campaign's bound."""
+    if ev.stalls:
+        return Status.CRIT, f"stalled: {'; '.join(ev.stalls[:3])}"
+    if ev.driver_errors:
+        return Status.CRIT, (
+            f"driver raised: {'; '.join(ev.driver_errors[:3])}")
+    if ev.final_sim_t > ev.sim_bound_s:
+        return Status.WARN, (
+            f"sim time {ev.final_sim_t:.2f}s exceeded bound "
+            f"{ev.sim_bound_s:.2f}s")
+    return Status.OK, "all waits bounded, drivers joined, sim time in bound"
+
+
+@invariant("telemetry_matches_ground_truth")
+def check_telemetry_matches_ground_truth(ev) -> Tuple[Status, str]:
+    """The bus-fed telemetry gauges must agree with counters derived
+    independently from the audit log and from the harness's own commit
+    accounting — a dropped or double-counted event is an observability
+    corruption even when the data plane is intact."""
+    snap = ev.telemetry_snapshot.get("per_app", {})
+    names_payloads = [(r["event"], r) for r in ev.records]
+
+    def count(event: str, app: str = None, **match) -> int:
+        n = 0
+        for name, rec in names_payloads:
+            if name != event:
+                continue
+            if app is not None and rec.get("app") != app:
+                continue
+            if any(rec.get(k) != v for k, v in match.items()):
+                continue
+            n += 1
+        return n
+
+    cluster_failures = sum(count(e) for e in _CLUSTER_TRIGGERS)
+    mismatches: List[str] = []
+    for app in ev.apps:
+        tel = snap.get(app)
+        if tel is None:
+            mismatches.append(f"{app}: missing from telemetry")
+            continue
+        expected = {
+            "commits": count(E.COMMIT_DONE, app),
+            "failures": count(E.APP_RANK_FAILED, app) + cluster_failures,
+            "delta_chain_resets": count(E.DELTA_CHAIN_RESET, app),
+            "redistributions_peer": count(E.REDISTRIBUTION_DONE, app,
+                                          via="peer"),
+            "redistributions_client": count(E.REDISTRIBUTION_DONE, app,
+                                            via="client"),
+            "overlap_windows": count(E.RESIZE_OVERLAP_STARTED, app),
+            "overlap_cutovers": count(E.CUTOVER_DONE, app),
+            "redist_fallbacks": count(E.REDISTRIBUTION_FALLBACK, app),
+            "ckpt_failures": count(E.CKPT_FAILED, app),
+        }
+        for key, want in expected.items():
+            got = tel.get(key)
+            if got != want:
+                mismatches.append(f"{app}.{key}: telemetry={got} "
+                                  f"audit-log={want}")
+        harness_commits = ev.commit_counts.get(app, 0)
+        if tel.get("commits", 0) < harness_commits:
+            mismatches.append(
+                f"{app}.commits: telemetry={tel.get('commits')} < "
+                f"{harness_commits} acked blocking commits")
+    if mismatches:
+        return Status.CRIT, "; ".join(mismatches[:4])
+    return Status.OK, "telemetry agrees with audit log and harness counts"
+
+
+@invariant("no_leaked_window_state")
+def check_no_leaked_window_state(ev) -> Tuple[Status, str]:
+    """After every overlap window has closed: no ``.redist`` scratch
+    generation survives in any tier, no chain hold remains open, and no
+    agent retains assembly state or decoded-payload memo."""
+    leaks: List[str] = []
+    ctl = ev.cluster.controller
+    for mgr in ctl.managers():
+        scratch = [k for k in mgr.store.keys() if ".redist" in k.region]
+        if scratch:
+            leaks.append(f"{mgr.node_id}: {len(scratch)} scratch shards")
+        for agent in mgr.agents():
+            st = agent.stats()
+            if st["assembly_states"]:
+                leaks.append(f"{agent.agent_id}: "
+                             f"{st['assembly_states']} assembly states")
+            if st["decoded_memo"]:
+                leaks.append(f"{agent.agent_id}: "
+                             f"{st['decoded_memo']} decoded memo entries")
+    holds = ctl.catalog.chain_holds()
+    if holds:
+        leaks.append(f"open chain holds: {sorted(holds)}")
+    if leaks:
+        return Status.CRIT, "; ".join(leaks[:4])
+    return Status.OK, "no scratch, no holds, no retained window state"

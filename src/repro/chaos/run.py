@@ -1,0 +1,166 @@
+"""Chaos campaign CLI.
+
+Matrix over a seed range (the CI gate)::
+
+    python -m repro.chaos.run --seeds 0..99 --report artifacts/chaos.json
+
+Reproduce one red seed bit-exactly (the line the runner prints on CRIT)::
+
+    python -m repro.chaos.run --seed 17 --schedule-json \
+        artifacts/chaos/schedule_17.json
+
+Self-test (deliberate violation: the mandatory delta-chain reset is
+suppressed mid-campaign; the matching invariant must go CRIT)::
+
+    python -m repro.chaos.run --self-test --seed 0
+
+Exit status: 0 when no campaign has a CRIT check (WARNs print but pass),
+1 otherwise.  When ``$GITHUB_STEP_SUMMARY`` is set, red seeds append their
+reproduction command there too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Tuple
+
+from .campaign import run_campaign
+from .schedule import ChaosSchedule
+
+ART_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", "..", "..", "artifacts", "chaos")
+
+
+def _parse_seeds(spec: str) -> List[int]:
+    if ".." in spec:
+        lo, hi = spec.split("..", 1)
+        return list(range(int(lo), int(hi) + 1))
+    return [int(spec)]
+
+
+def _dump_schedule(report: dict) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.abspath(
+        os.path.join(ART_DIR, f"schedule_{report['seed']}.json"))
+    with open(path, "w") as f:
+        f.write(ChaosSchedule.from_dict(report["schedule"]).to_json())
+    return path
+
+
+def _repro_line(seed: int, schedule_path: str) -> str:
+    return (f"REPRODUCE: PYTHONPATH=src python -m repro.chaos.run "
+            f"--seed {seed} --schedule-json {schedule_path}")
+
+
+def _run_one(seed: int, schedule: Optional[ChaosSchedule],
+             self_test: bool) -> Tuple[dict, List[str]]:
+    """One campaign -> (report, printed lines)."""
+    lines: List[str] = []
+    try:
+        report = run_campaign(seed, schedule=schedule, self_test=self_test)
+    except Exception as exc:  # noqa: BLE001 - a crash is a red campaign
+        report = {
+            "seed": int(seed),
+            "self_test": bool(self_test),
+            "ok": False,
+            "worst": "CRIT",
+            "schedule": None,
+            "checks": [{
+                "name": "campaign_completed",
+                "status": "CRIT",
+                "detail": f"campaign raised: {exc!r}",
+            }],
+        }
+    status = report["worst"]
+    lines.append(f"seed {report['seed']:>4}  {status}")
+    for check in report["checks"]:
+        if check["status"] != "OK":
+            lines.append(f"    {check['status']:<4} {check['name']}: "
+                         f"{check['detail']}")
+    if status == "CRIT" and report.get("schedule") is not None:
+        path = _dump_schedule(report)
+        lines.append("    " + _repro_line(report["seed"], path))
+    return report, lines
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.chaos.run",
+        description="deterministic chaos campaigns over the iCheck core")
+    ap.add_argument("--seeds", help="inclusive range A..B (or one seed)")
+    ap.add_argument("--seed", type=int, help="single seed")
+    ap.add_argument("--schedule-json",
+                    help="replay this exact schedule (ignores the "
+                         "generator; requires --seed)")
+    ap.add_argument("--report", help="write the JSON report here")
+    ap.add_argument("--self-test", action="store_true",
+                    help="deliberately violate the chain-reset invariant "
+                         "and assert the matching check goes CRIT")
+    args = ap.parse_args(argv)
+
+    if args.seed is not None:
+        seeds = [args.seed]
+    elif args.seeds:
+        seeds = _parse_seeds(args.seeds)
+    else:
+        seeds = [0]
+    schedule = None
+    if args.schedule_json:
+        with open(args.schedule_json) as f:
+            schedule = ChaosSchedule.from_json(f.read())
+
+    reports: List[dict] = []
+    red: List[dict] = []
+    for seed in seeds:
+        report, lines = _run_one(seed, schedule, args.self_test)
+        reports.append(report)
+        print("\n".join(lines), flush=True)
+        if report["worst"] == "CRIT":
+            red.append(report)
+
+    summary = {
+        "campaigns": len(reports),
+        "crit": len(red),
+        "warn": sum(1 for r in reports if r["worst"] == "WARN"),
+        "ok": sum(1 for r in reports if r["worst"] == "OK"),
+        "reports": reports,
+    }
+    if args.report:
+        os.makedirs(os.path.dirname(os.path.abspath(args.report)),
+                    exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+
+    if args.self_test:
+        # the deliberate violation must be *caught*: green here is a failure
+        caught = any(
+            c["name"] == "delta_chain_reset_policy" and c["status"] == "CRIT"
+            for r in reports for c in r["checks"])
+        if caught:
+            print("self-test: OK (suppressed chain reset detected as CRIT)")
+            return 0
+        print("self-test: FAILED — the chain-reset invariant stayed green "
+              "through a suppressed mandatory reset")
+        return 1
+
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if red and step_summary:
+        with open(step_summary, "a") as f:
+            f.write("## Chaos campaign failures\n\n")
+            for r in red:
+                f.write(f"- seed **{r['seed']}**: "
+                        + ", ".join(c["name"] for c in r["checks"]
+                                    if c["status"] == "CRIT") + "\n")
+                if r.get("schedule") is not None:
+                    rel = os.path.join("artifacts", "chaos",
+                                       f"schedule_{r['seed']}.json")
+                    f.write(f"  - `{_repro_line(r['seed'], rel)}`\n")
+    print(f"chaos: {summary['ok']} ok / {summary['warn']} warn / "
+          f"{summary['crit']} crit over {summary['campaigns']} campaigns")
+    return 1 if red else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

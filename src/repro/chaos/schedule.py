@@ -1,0 +1,209 @@
+"""Seeded chaos schedules.
+
+A :class:`ChaosSchedule` is a fully materialized list of
+:class:`ChaosAction`s — *what* breaks, *when* (sim-time offset from
+campaign start) and for *how long* — generated from a single integer seed
+via ``np.random.default_rng`` so the same seed always produces the same
+schedule, bit for bit.  Targets are symbolic (node/agent *indices*, not
+ids) and resolved against the live cluster at fire time, which keeps a
+schedule replayable against any campaign topology of the same shape.
+
+Schedules serialize to JSON (``--schedule-json``) so a red CI seed can be
+replayed locally byte-identically even across generator changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# every fault kind the injector knows how to fire.  "mid_window_fault" is a
+# second-order kind: its at_s is pinned inside the overlap-resize window
+# and its params carry the concrete fault to fire there.
+KINDS = (
+    "agent_death",
+    "node_loss",
+    "nic_degrade",
+    "nic_down",
+    "straggler",
+    "partition",
+    "l3_outage",
+    "mid_window_fault",
+)
+
+# what a mid-window fault can concretely be
+MID_WINDOW_FAULTS = ("agent_death", "node_loss", "nic_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosAction:
+    """One scheduled fault: fire ``kind`` at sim offset ``at_s``.
+
+    ``target`` holds symbolic indices (``node``, ``app``, ``agent_slot``,
+    ``peer``) resolved at fire time; ``params`` carries knobs (slowdown
+    factor, recovery duration ``duration_s`` for transient kinds).
+    """
+
+    at_s: float
+    kind: str
+    target: Dict[str, int] = dataclasses.field(default_factory=dict)
+    params: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "at_s": round(float(self.at_s), 6),
+            "kind": self.kind,
+            "target": {k: int(v) for k, v in sorted(self.target.items())},
+            "params": {k: round(float(v), 6)
+                       for k, v in sorted(self.params.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChaosAction":
+        return cls(at_s=float(d["at_s"]), kind=str(d["kind"]),
+                   target=dict(d.get("target", {})),
+                   params=dict(d.get("params", {})))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """A seed's full campaign script: faults plus the resize directive."""
+
+    seed: int
+    horizon_s: float
+    actions: Tuple[ChaosAction, ...]
+    # overlap-resize directive for the resizing app (None = no resize this
+    # campaign): open the window at resize_at_s, cut over window_s later
+    resize_at_s: Optional[float] = None
+    resize_window_s: float = 0.0
+    resize_new_parts: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "seed": int(self.seed),
+            "horizon_s": round(float(self.horizon_s), 6),
+            "resize_at_s": None if self.resize_at_s is None
+            else round(float(self.resize_at_s), 6),
+            "resize_window_s": round(float(self.resize_window_s), 6),
+            "resize_new_parts": int(self.resize_new_parts),
+            "actions": [a.as_dict() for a in self.actions],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.as_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChaosSchedule":
+        return cls(
+            seed=int(d["seed"]),
+            horizon_s=float(d["horizon_s"]),
+            actions=tuple(ChaosAction.from_dict(a)
+                          for a in d.get("actions", ())),
+            resize_at_s=(None if d.get("resize_at_s") is None
+                         else float(d["resize_at_s"])),
+            resize_window_s=float(d.get("resize_window_s", 0.0)),
+            resize_new_parts=int(d.get("resize_new_parts", 0)),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ChaosSchedule":
+        return cls.from_dict(json.loads(text))
+
+
+def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
+                      n_apps: int = 2) -> ChaosSchedule:
+    """Materialize the seed's schedule.
+
+    Composition rules (so a campaign stays *survivable* — the invariants
+    assert correctness under faults, not behavior with every node dead):
+
+      * 1–4 primary actions at offsets inside [0.15, 0.75] x horizon;
+      * at most one ``node_loss`` and one ``l3_outage`` per campaign
+        (counting the mid-window fault's concrete kind);
+      * transient kinds (NIC degrade/down, straggler, partition, outage)
+        carry a bounded ``duration_s`` and are cleared by the injector;
+      * roughly half of the seeds get an overlap resize; when one is
+        scheduled, one extra fault may be pinned *inside* the window
+        (the mid-overlap-window failure shape).
+    """
+    rng = np.random.default_rng(seed)
+    actions: List[ChaosAction] = []
+    used_node_loss = False
+    used_l3 = False
+
+    # resize directive first so a mid-window fault can anchor to it
+    resize_at: Optional[float] = None
+    window_s = 0.0
+    new_parts = 0
+    if rng.random() < 0.55:
+        resize_at = float(rng.uniform(0.30, 0.50)) * horizon_s
+        window_s = float(rng.uniform(0.25, 0.45)) * horizon_s
+        new_parts = int(rng.choice((4, 8, 9)))
+
+    n_actions = int(rng.integers(1, 5))
+    for _ in range(n_actions):
+        kind = str(rng.choice(KINDS[:-1]))  # mid_window drawn separately
+        at = float(rng.uniform(0.15, 0.75)) * horizon_s
+        if kind == "node_loss":
+            if used_node_loss:
+                kind = "nic_degrade"
+            else:
+                used_node_loss = True
+        if kind == "l3_outage":
+            if used_l3:
+                kind = "straggler"
+            else:
+                used_l3 = True
+        target: Dict[str, int] = {}
+        params: Dict[str, float] = {}
+        node = int(rng.integers(0, n_nodes))
+        if kind == "agent_death":
+            target = {"app": int(rng.integers(0, n_apps)),
+                      "agent_slot": int(rng.integers(0, 4))}
+        elif kind == "node_loss":
+            target = {"node": node}
+        elif kind == "nic_degrade":
+            target = {"node": node}
+            params = {"slowdown": float(rng.uniform(4.0, 16.0)),
+                      "duration_s": float(rng.uniform(0.2, 0.5))}
+        elif kind == "nic_down":
+            target = {"node": node}
+            params = {"duration_s": float(rng.uniform(0.1, 0.35))}
+        elif kind == "straggler":
+            target = {"app": int(rng.integers(0, n_apps)),
+                      "agent_slot": int(rng.integers(0, 4))}
+            params = {"slowdown": float(rng.uniform(3.0, 10.0)),
+                      "duration_s": float(rng.uniform(0.2, 0.6))}
+        elif kind == "partition":
+            peer = int(rng.integers(0, n_nodes))
+            if peer == node:
+                peer = (node + 1) % n_nodes
+            target = {"node": node, "peer": peer}
+            params = {"duration_s": float(rng.uniform(0.15, 0.45))}
+        elif kind == "l3_outage":
+            params = {"duration_s": float(rng.uniform(0.3, 0.8))}
+        actions.append(ChaosAction(at_s=at, kind=kind, target=target,
+                                   params=params))
+
+    if resize_at is not None and rng.random() < 0.6:
+        sub = str(rng.choice(MID_WINDOW_FAULTS))
+        if sub == "node_loss" and used_node_loss:
+            sub = "nic_down"
+        at = resize_at + float(rng.uniform(0.15, 0.85)) * window_s
+        target = {"node": int(rng.integers(0, n_nodes))}
+        params: Dict[str, float] = {}
+        if sub == "agent_death":
+            target = {"app": 1, "agent_slot": int(rng.integers(0, 4))}
+        elif sub == "nic_down":
+            params = {"duration_s": float(rng.uniform(0.1, 0.3))}
+        actions.append(ChaosAction(
+            at_s=at, kind="mid_window_fault", target=target,
+            params={"sub": float(MID_WINDOW_FAULTS.index(sub)), **params}))
+
+    actions.sort(key=lambda a: (a.at_s, a.kind))
+    return ChaosSchedule(seed=seed, horizon_s=horizon_s,
+                         actions=tuple(actions), resize_at_s=resize_at,
+                         resize_window_s=window_s,
+                         resize_new_parts=new_parts)

@@ -160,6 +160,9 @@ class Agent:
         — the client is never in the path.
         """
         self._check_alive()
+        if self.fault.partitioned(self.node_id, requester_node):
+            raise ConnectionError(
+                f"partition between {self.node_id} and {requester_node}")
         if codec == "zstd":
             with self._lock:
                 raw = self._decoded_memo.get(key)
@@ -246,6 +249,10 @@ class Agent:
                 "rate_ewma": self.rate_ewma.predict(),
                 "peer_reads": self.peer_reads,
                 "peer_bytes_out": self.peer_bytes_out,
+                # scratch retained for open adapt windows — both must be 0
+                # once every window has closed (the chaos leak invariant)
+                "assembly_states": len(self._assembly_state),
+                "decoded_memo": len(self._decoded_memo),
             }
 
     # ------------------------------------------------------------------ guts

@@ -116,6 +116,15 @@ APP_RANK_FAILED = "app_rank_failed"
 # (Young/Daly over telemetry estimates); clients/trainers re-pace on this
 INTERVAL_CHANGED = "interval_changed"
 
+# -- chaos campaigns (repro.chaos) ------------------------------------------
+# the chaos injector fired one scheduled action (payload: kind, target,
+# params, scheduled at_s) — the audit trail every invariant check can line
+# failures up against
+CHAOS_INJECTED = "chaos_injected"
+# a transient chaos action (NIC degradation/down, straggler, partition,
+# L3 outage) recovered at its scheduled end
+CHAOS_CLEARED = "chaos_cleared"
+
 
 @dataclasses.dataclass(frozen=True)
 class Event:

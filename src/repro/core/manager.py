@@ -44,6 +44,9 @@ class Manager:
         # intra-node peer-redistribution copies bypass the NIC on this bus
         self.membus = MemBus(f"mem-{spec.node_id}", spec.mem_bandwidth,
                              clock=self.clock)
+        # node death must sever transport, not just liveness: the injector
+        # downs both links when kill_node() fires
+        self.fault.register_transport(self.node_id, self.nic, self.membus)
         self._agents: Dict[AgentId, Agent] = {}
         self._agent_apps: Dict[AgentId, AppId] = {}
         self._lock = threading.Lock()

@@ -222,6 +222,12 @@ class CheckpointCatalog:
                      "head": rc.chain[-1]}
                     for (app, region), rc in self._chains.items()]
 
+    def chain_holds(self) -> Dict[Tuple[AppId, str], int]:
+        """Open hold refcounts per (app, region) — empty once every overlap
+        window has closed (the chaos no-leak invariant reads this)."""
+        with self._chain_lock:
+            return dict(self._holds)
+
     # ------------------------------------------------------------- failure
     def mark_failed(self, app_id: AppId, ckpt_id: CkptId) -> None:
         """Mark a checkpoint failed, cascading to its q8-delta dependents:

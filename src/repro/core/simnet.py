@@ -147,6 +147,20 @@ class FaultInjector:
         self._dead_agents: set = set()
         self._dead_nodes: set = set()
         self._straggler_agents: dict = {}   # agent_id -> slowdown factor
+        # node_id -> transports (NIC + MemBus) severed when the node dies
+        self._transports: dict = {}
+        # unordered node pairs with a partial partition between them
+        self._partitions: set = set()
+
+    def register_transport(self, node_id: str, *links: "SimNIC") -> None:
+        """Attach a node's links so :meth:`kill_node` can sever them.
+
+        Managers register their NIC and MemBus at construction: a dead node
+        must drop transport, not just fail liveness checks — otherwise an
+        in-flight ``peer_read`` against one of its agents completes instead
+        of raising."""
+        with self._lock:
+            self._transports.setdefault(node_id, []).extend(links)
 
     def kill_agent(self, agent_id: str) -> None:
         with self._lock:
@@ -159,6 +173,26 @@ class FaultInjector:
     def kill_node(self, node_id: str) -> None:
         with self._lock:
             self._dead_nodes.add(node_id)
+            links = list(self._transports.get(node_id, ()))
+        # sever outside the lock: set_down takes each link's own lock
+        for link in links:
+            link.set_down(True)
+
+    # -- partial partitions ----------------------------------------------
+    def partition_nodes(self, node_a: str, node_b: str) -> None:
+        """Block peer traffic between two (live) nodes in both directions."""
+        with self._lock:
+            self._partitions.add(frozenset((node_a, node_b)))
+
+    def heal_partition(self, node_a: str, node_b: str) -> None:
+        with self._lock:
+            self._partitions.discard(frozenset((node_a, node_b)))
+
+    def partitioned(self, node_a: str, node_b: str) -> bool:
+        if node_a == node_b:
+            return False
+        with self._lock:
+            return frozenset((node_a, node_b)) in self._partitions
 
     def make_straggler(self, agent_id: str, slowdown: float) -> None:
         with self._lock:

@@ -1116,6 +1116,11 @@ class RemoteObjectTier:
         self._bytes_out = 0
         self._put_requests = 0
         self._get_requests = 0
+        # fault injection: an unreachable object store (region outage).
+        # Transfers raise ConnectionError; existence/listing probes answer
+        # as an unreachable endpoint would (nothing visible) so restart
+        # ladders fall back to L2/L1 instead of wedging on a read
+        self._outage = False
         # payload bytes resident, kept incrementally: used_bytes is read on
         # every telemetry scrape and must not walk the whole object store.
         # One walk at attach time picks up objects from a previous
@@ -1145,9 +1150,26 @@ class RemoteObjectTier:
         c = self.cost_breakdown()
         return c["ingress_usd"] + c["egress_usd"] + c["request_usd"]
 
+    # -- fault injection ----------------------------------------------------
+    def set_outage(self, down: bool) -> None:
+        """Make the object store unreachable (or reachable again)."""
+        with self._lock:
+            self._outage = bool(down)
+        self.link.set_down(bool(down))
+
+    @property
+    def in_outage(self) -> bool:
+        with self._lock:
+            return self._outage
+
+    def _check_reachable(self) -> None:
+        if self.in_outage:
+            raise ConnectionError(f"object store {self.root} unreachable")
+
     # -- transfer model -----------------------------------------------------
     def _xfer(self, nbytes: int, outbound: bool) -> float:
         """One object transfer: multipart waves of latency + shared bw."""
+        self._check_reachable()
         parts = max(1, -(-nbytes // self.part_bytes))
         waves = -(-parts // self.max_parallel_parts)
         lat = self.request_latency * waves
@@ -1277,20 +1299,27 @@ class RemoteObjectTier:
         return payload
 
     def has_shard(self, key: ShardKey) -> bool:
+        if self.in_outage:
+            return False
         return os.path.exists(_shard_path(self.root, key))
 
     # -- manifests (same container contract as the PFS tier) ---------------
     def write_manifest(self, meta: CheckpointMeta) -> None:
+        self._check_reachable()
         with self._lock:
             self._put_requests += 1
         _write_manifest_file(self.root, meta)
 
     def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
+        if self.in_outage:
+            return None
         with self._lock:
             self._get_requests += 1
         return _read_manifest_file(self.root, app_id, ckpt_id)
 
     def list_checkpoints(self, app_id: str) -> List[int]:
+        if self.in_outage:
+            return []
         return _list_manifest_ckpts(self.root, app_id)
 
     def checkpoint_complete(self, meta: CheckpointMeta) -> bool:

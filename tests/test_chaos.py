@@ -1,0 +1,262 @@
+"""Chaos runner tests: schedule determinism, the invariant registry, the
+new fault hooks (node-death transport severing, partial partitions, L3
+outage), full campaigns, and the single-fault-during-overlap property."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    ChaosSchedule,
+    Status,
+    generate_schedule,
+    run_campaign,
+    run_checks,
+)
+from repro.chaos.campaign import TOLERATED_ERRORS
+from repro.chaos.invariants import REGISTRY, invariant
+from repro.chaos.schedule import MID_WINDOW_FAULTS, ChaosAction
+from repro.core import ICheckClient, ICheckCluster, PartitionScheme
+from repro.core import events as E
+from repro.core import plan as planlib
+from repro.core.types import PartitionDesc
+
+
+# ------------------------------------------------------------- schedules
+def test_schedule_deterministic_and_roundtrips():
+    for seed in (0, 7, 99, 12345):
+        a = generate_schedule(seed)
+        b = generate_schedule(seed)
+        assert a.as_dict() == b.as_dict()
+        back = ChaosSchedule.from_json(a.to_json())
+        assert back.as_dict() == a.as_dict()
+        assert json.loads(a.to_json()) == json.loads(back.to_json())
+
+
+def test_schedule_composition_stays_survivable():
+    for seed in range(50):
+        sc = generate_schedule(seed)
+        kinds = []
+        for act in sc.actions:
+            kind = act.kind
+            if kind == "mid_window_fault":
+                kind = MID_WINDOW_FAULTS[int(act.params["sub"])]
+                assert sc.resize_at_s is not None
+                assert (
+                    sc.resize_at_s
+                    <= act.at_s
+                    <= sc.resize_at_s + sc.resize_window_s
+                )
+            else:
+                assert 0.0 < act.at_s < 0.8 * sc.horizon_s
+            kinds.append(kind)
+            if "duration_s" in act.params:
+                assert 0.0 < act.params["duration_s"] <= 1.0
+        assert kinds.count("node_loss") <= 1
+        assert kinds.count("l3_outage") <= 1
+        assert 1 <= len(sc.actions) <= 5
+
+
+# ------------------------------------------------------------ invariants
+def test_registry_has_the_six_checks():
+    assert set(REGISTRY) >= {
+        "restore_bit_identity",
+        "latest_restartable_monotonic",
+        "delta_chain_reset_policy",
+        "no_event_bus_stall",
+        "telemetry_matches_ground_truth",
+        "no_leaked_window_state",
+    }
+
+
+def test_crashing_check_reads_as_crit():
+    @invariant("_test_boom")
+    def boom(ev):
+        raise RuntimeError("broken check")
+
+    try:
+        results = {r.name: r for r in run_checks(object())}
+        assert results["_test_boom"].status is Status.CRIT
+        assert "broken check" in results["_test_boom"].detail
+    finally:
+        del REGISTRY["_test_boom"]
+
+
+# ------------------------------------------------------------ fault hooks
+def test_kill_node_severs_transport():
+    """Regression: a dead node must drop its NIC *and* MemBus, not just
+    fail liveness checks — an in-flight transfer against it must raise."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       adaptive_interval=False) as c:
+        mgr = c.controller.managers()[0]
+        assert mgr.nic.transfer(1024) >= 0.0
+        assert mgr.membus.transfer(1024) >= 0.0
+        c.fault.kill_node(mgr.node_id)
+        with pytest.raises(ConnectionError):
+            mgr.nic.transfer(1024)
+        with pytest.raises(ConnectionError):
+            mgr.membus.transfer(1024)
+
+
+def test_partial_partition_blocks_peer_reads_both_ways():
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       adaptive_interval=False) as c:
+        a, b = [m.node_id for m in c.controller.managers()]
+        assert not c.fault.partitioned(a, b)
+        c.fault.partition_nodes(a, b)
+        assert c.fault.partitioned(a, b) and c.fault.partitioned(b, a)
+        assert not c.fault.partitioned(a, a)
+        c.fault.heal_partition(b, a)
+        assert not c.fault.partitioned(a, b)
+
+
+def test_l3_outage_blocks_object_store_until_healed():
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0, l3=True,
+                       adaptive_interval=False) as c:
+        l3 = c.l3
+        l3.set_outage(True)
+        assert l3.in_outage
+        with pytest.raises(ConnectionError):
+            l3.write_manifest(object())
+        assert l3.read_manifest("app", 0) is None
+        assert l3.list_checkpoints("app") == []
+        l3.set_outage(False)
+        assert not l3.in_outage
+        assert l3.list_checkpoints("app") == []  # reachable again, empty
+
+
+# -------------------------------------------------------------- campaigns
+def test_campaign_green_seed():
+    report = run_campaign(1)
+    assert report["worst"] in ("OK", "WARN"), report["checks"]
+    names = {c["name"] for c in report["checks"]}
+    assert "restore_bit_identity" in names
+    assert report["schedule"] == generate_schedule(1).as_dict()
+
+
+def test_campaign_self_test_flips_chain_check_crit():
+    report = run_campaign(0, self_test=True)
+    by_name = {c["name"]: c for c in report["checks"]}
+    assert by_name["delta_chain_reset_policy"]["status"] == "CRIT"
+    assert not report["ok"]
+
+
+def test_campaign_mid_window_node_loss_recovers():
+    """Satellite regression, end to end: a node dies *inside* an overlap
+    window; its transport is severed (so peer streams fail over instead of
+    completing against a ghost) and the campaign still ends green."""
+    actions = (
+        ChaosAction(
+            at_s=1.1,
+            kind="mid_window_fault",
+            target={"node": 0},
+            params={"sub": float(MID_WINDOW_FAULTS.index("node_loss"))},
+        ),
+    )
+    schedule = ChaosSchedule(
+        seed=123,
+        horizon_s=2.4,
+        actions=actions,
+        resize_at_s=0.8,
+        resize_window_s=0.9,
+        resize_new_parts=9,
+    )
+    report = run_campaign(123, schedule=schedule)
+    assert report["worst"] != "CRIT", report["checks"]
+
+
+# ------------------------------------- single fault during overlap window
+_FAULTS = ("agent_death", "nic_down", "node_loss", "straggler")
+
+
+def _split(arr, desc):
+    return {i: p for i, p in enumerate(planlib.split_array(arr, desc))}
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_single_fault_never_wedges_overlap_cutover(seed):
+    """Property: one fault at a seeded point inside a zero-stall overlap
+    window ends in a clean cutover or the funnel fallback — never a wedged
+    ``ResizeCutoverHandle`` (every wait bounded, no exception escapes)."""
+    rng = np.random.default_rng(seed)
+    fault_kind = _FAULTS[int(rng.integers(0, len(_FAULTS)))]
+    inject_at = int(rng.integers(0, 3))  # 0: pre-wait, 1/2: after commit N
+    with ICheckCluster(n_icheck_nodes=4, n_spare_nodes=1,
+                       adaptive_interval=False) as c:
+        data = rng.standard_normal(1 << 13).astype(np.float32)
+        client = ICheckClient("app", c.controller, ranks=6,
+                              codec="q8-delta", replication=2).init()
+        client.add_adapt("x", data.shape, "float32",
+                         scheme=PartitionScheme.BLOCK, num_parts=6)
+        desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=6)
+        for step in range(2):
+            client.commit(step, {"x": _split(data, desc)}, blocking=True,
+                          drain=False)
+
+        def fire():
+            mgrs = c.controller.managers()
+            if fault_kind == "agent_death":
+                agents = c.controller.agents_for("app")
+                if agents:
+                    c.fault.kill_agent(
+                        agents[int(rng.integers(0, len(agents)))].agent_id)
+            elif fault_kind == "nic_down":
+                mgrs[int(rng.integers(0, len(mgrs)))].nic.set_down(True)
+            elif fault_kind == "node_loss":
+                c.fault.kill_node(
+                    mgrs[int(rng.integers(0, len(mgrs)))].node_id)
+            elif fault_kind == "straggler":
+                agents = c.controller.agents_for("app")
+                if agents:
+                    c.fault.make_straggler(
+                        agents[int(rng.integers(0, len(agents)))].agent_id,
+                        6.0)
+
+        handle = client.redistribute("x", 9, overlap=True)
+        if inject_at == 0:
+            fire()
+        for step in (2, 3):
+            data[200:900] += np.float32(step)
+            try:
+                client.commit(step, {"x": _split(data, desc)},
+                              blocking=True, drain=False)
+            except TOLERATED_ERRORS:
+                pass
+            if inject_at == step:
+                fire()
+
+        ready = handle.wait(60)          # the bounded-wait contract
+        assert ready in (True, False)
+        out = None
+        if ready:
+            try:
+                out = handle.cutover()   # clean cutover or internal funnel
+            except TOLERATED_ERRORS:
+                out = None
+        if out is None:
+            handle.cancel()              # never wedged: cancel completes
+        else:
+            assert set(out) == set(range(9))
+            total = np.concatenate(
+                [np.asarray(out[p]).reshape(-1) for p in sorted(out)])
+            assert total.size == data.size
+        # a second cancel/cutover on a closed handle must not hang either
+        handle.cancel()
+        try:
+            client.finalize()
+        except TOLERATED_ERRORS:
+            pass
+
+
+def test_run_module_single_seed(tmp_path, capsys):
+    from repro.chaos.run import main
+
+    report = tmp_path / "r.json"
+    rc = main(["--seed", "1", "--report", str(report)])
+    assert rc == 0
+    payload = json.loads(report.read_text())
+    assert payload["campaigns"] == 1 and payload["crit"] == 0
+    assert "seed    1" in capsys.readouterr().out
