@@ -11,6 +11,7 @@ TelemetryService estimates, comparing wasted work + checkpoint overhead.
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -18,6 +19,8 @@ from repro.core import ICheckClient, ICheckCluster
 
 from .common import (block_parts, failure_schedule, fmt_bytes,
                      run_ckpt_workload, save)
+
+OBS_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "obs")
 
 PAYLOAD = 128 << 20
 PARTS = 16
@@ -156,13 +159,82 @@ def run_adaptive(verbose: bool = True, total_work_s: float = ADAPTIVE_WORK_S,
     return out
 
 
+# ------------------------------------------------------------ trace smoke
+TRACE_PAYLOAD = 16 << 20
+TRACE_PARTS = 8
+TRACE_WORK_S = 60.0
+TRACE_INTERVAL_S = 6.0
+TRACE_OVERHEAD_TOL = 0.03
+
+
+def _trace_leg(data, trace: bool, trace_path=None) -> dict:
+    """One tracing leg: identical cluster + checkpoint workload, only the
+    tracer differs.  Spans read the sim clock but never advance it, so the
+    traced leg's sim-time throughput must match the untraced one."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=2 << 30, nic_bandwidth=1e9,
+                       trace=trace, trace_path=trace_path) as c:
+        client = ICheckClient("app", c.controller, ranks=TRACE_PARTS).init(
+            ckpt_bytes_estimate=data.nbytes)
+        client.add_adapt("x", data.shape, "float32", num_parts=TRACE_PARTS)
+        parts = {"x": block_parts(data, TRACE_PARTS)}
+        res = run_ckpt_workload(c, client, parts, TRACE_WORK_S, [],
+                                interval_fn=lambda: TRACE_INTERVAL_S)
+        res["spans"] = len(c.tracer.spans())
+        client.finalize()
+    return res
+
+
+def run_trace_smoke(verbose: bool = True) -> dict:
+    """B5T -- tracing overhead: sim-time throughput of a checkpointing
+    workload with end-to-end tracing enabled must stay within
+    ``TRACE_OVERHEAD_TOL`` of the untraced run, and the traced leg exports
+    a Chrome ``trace_event`` artifact for Perfetto."""
+    data = np.random.default_rng(2).standard_normal(
+        TRACE_PAYLOAD // 4).astype(np.float32)
+    os.makedirs(OBS_DIR, exist_ok=True)
+    trace_path = os.path.abspath(os.path.join(OBS_DIR, "trace_smoke.json"))
+    base = _trace_leg(data, trace=False)
+    traced = _trace_leg(data, trace=True, trace_path=trace_path)
+    # sim throughput = work_s / elapsed_sim_s over the same work, so the
+    # traced/untraced throughput ratio is the inverse elapsed ratio
+    ratio = base["elapsed_sim_s"] / max(traced["elapsed_sim_s"], 1e-12)
+    out = {
+        "payload": TRACE_PAYLOAD,
+        "base": base,
+        "traced": traced,
+        "throughput_ratio": ratio,
+        "trace_path": trace_path,
+    }
+    save("b5t_trace_overhead", out)
+    if verbose:
+        print(f"\nB5T tracing overhead ({fmt_bytes(TRACE_PAYLOAD)} ckpt, "
+              f"{TRACE_WORK_S:.0f}s of work):")
+        print(f"  untraced: {base['elapsed_sim_s']:.3f}s sim, "
+              f"{base['commits']} commits")
+        print(f"  traced:   {traced['elapsed_sim_s']:.3f}s sim, "
+              f"{traced['commits']} commits, {traced['spans']} spans")
+        print(f"  throughput ratio (traced/untraced): {ratio:.4f}")
+        print(f"  chrome trace: {trace_path}")
+    assert traced["spans"] > 0, "tracing was enabled but produced no spans"
+    assert abs(1.0 - ratio) <= TRACE_OVERHEAD_TOL, \
+        (f"tracing changed sim-time throughput by "
+         f"{100 * abs(1.0 - ratio):.2f}% "
+         f"(> {100 * TRACE_OVERHEAD_TOL:.0f}% tolerance)")
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--adaptive", action="store_true",
                     help="run the adaptive-interval wasted-work comparison")
+    ap.add_argument("--trace-smoke", action="store_true",
+                    help="run the tracing-overhead comparison")
     args = ap.parse_args(argv)
     if args.adaptive:
         run_adaptive()
+    elif args.trace_smoke:
+        run_trace_smoke()
     else:
         run()
 

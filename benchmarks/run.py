@@ -44,6 +44,7 @@ SMOKE = {
     "b3": ("peer redistribution (smoke)", bench_redistribution.run_smoke),
     "b10": ("incremental delta checkpointing (smoke)",
             bench_delta.run_smoke),
+    "b5t": ("tracing overhead (smoke)", bench_restart.run_trace_smoke),
 }
 
 SMOKE_JSON = "BENCH_smoke.json"
@@ -98,6 +99,11 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b10_delta_highchurn_vs_q8"] = (
             high["q8"]["steady_wire_bytes"]
             / max(high["q8-delta"]["steady_wire_bytes"], 1))
+    b5t = results.get("b5t")
+    if b5t:
+        # ~1.0 by construction (spans observe the sim clock, never load
+        # it); a drop means tracing started costing sim time
+        metrics["b5t_trace_throughput_ratio"] = b5t["throughput_ratio"]
     return metrics
 
 

@@ -430,10 +430,13 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
             schedule = generate_schedule(seed)
     horizon = schedule.horizon_s
     apps = ("alpha", "beta")
+    # trace=True: spans only read the sim clock, so tracing is free of
+    # side effects on determinism — and a red seed's flight dump then
+    # carries the span tree of the failure window, not just raw events
     cluster = ICheckCluster(n_icheck_nodes=3, n_spare_nodes=2,
                             adaptive_interval=False, l3=True,
                             keep_l1=3, keep_l2=2, keep_l3=4,
-                            delta_keyframe_every=4)
+                            delta_keyframe_every=4, trace=True)
     sink = {
         "commit_counts": {"alpha": 0, "beta": 0},
         "notes": [],
@@ -564,6 +567,16 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
             final_sim_t=cluster.clock.now() - t0,
             sim_bound_s=SIM_BOUND_FACTOR * horizon + 10.0)
         results = run_checks(evidence)
+        # any non-OK verdict dumps the flight recorder while the cluster is
+        # still alive: the last N events + spans around the failure, keyed
+        # by seed so one red seed produces exactly one dump
+        flight_dump = None
+        failing = [r.as_dict() for r in results if int(r.status) >= 1]
+        if failing:
+            suffix = "_selftest" if self_test else ""
+            flight_dump = ctl.flight.dump(
+                f"chaos_seed_{seed}{suffix}",
+                extra={"seed": int(seed), "failing_checks": failing})
         for client in (alpha, beta):
             try:
                 client.finalize()
@@ -580,4 +593,5 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
         "worst": ["OK", "WARN", "CRIT"][int(worst)],
         "schedule": schedule.as_dict(),
         "checks": [r.as_dict() for r in results],
+        "flight_dump": flight_dump,
     }

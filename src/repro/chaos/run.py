@@ -82,6 +82,8 @@ def _run_one(seed: int, schedule: Optional[ChaosSchedule],
     if status == "CRIT" and report.get("schedule") is not None:
         path = _dump_schedule(report)
         lines.append("    " + _repro_line(report["seed"], path))
+    if report.get("flight_dump"):
+        lines.append(f"    FLIGHT-RECORDER: {report['flight_dump']}")
     return report, lines
 
 
@@ -157,6 +159,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                     rel = os.path.join("artifacts", "chaos",
                                        f"schedule_{r['seed']}.json")
                     f.write(f"  - `{_repro_line(r['seed'], rel)}`\n")
+                if r.get("flight_dump"):
+                    f.write(f"  - flight recorder: `{r['flight_dump']}`\n")
     print(f"chaos: {summary['ok']} ok / {summary['warn']} warn / "
           f"{summary['crit']} crit over {summary['campaigns']} campaigns")
     return 1 if red else 0

@@ -24,6 +24,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace_id_for
 from .simnet import EWMA, FaultInjector, MemBus, SimNIC
 from .tiers import (PFSTier, SliceState, TierPipeline, decode_payload,
                     decode_slice_frames, replay_slice_frames, slice_payload)
@@ -84,10 +85,11 @@ class ReplaySpec:
 
 
 class _Op:
-    __slots__ = ("kind", "key", "payload", "crc", "future", "pfs", "on_done")
+    __slots__ = ("kind", "key", "payload", "crc", "future", "pfs", "on_done",
+                 "trace")
 
     def __init__(self, kind, key=None, payload=None, crc=None, future=None,
-                 pfs=None, on_done=None):
+                 pfs=None, on_done=None, trace=None):
         self.kind = kind
         self.key = key
         self.payload = payload
@@ -95,6 +97,9 @@ class _Op:
         self.future = future
         self.pfs = pfs
         self.on_done = on_done
+        # TraceContext of the submitting thread: the inbox hand-off crosses
+        # threads, so causality must ride the op itself
+        self.trace = trace
 
 
 class Agent:
@@ -102,12 +107,13 @@ class Agent:
 
     def __init__(self, agent_id: AgentId, node_id: NodeId, store: TierPipeline,
                  nic: SimNIC, fault: Optional[FaultInjector] = None,
-                 membus: Optional[MemBus] = None):
+                 membus: Optional[MemBus] = None, tracer=None):
         self.agent_id = agent_id
         self.node_id = node_id
         self.store = store
         self.nic = nic
         self.membus = membus
+        self.tracer = tracer
         self.fault = fault or FaultInjector()
         self.peer_reads = 0
         self.peer_bytes_out = 0
@@ -136,7 +142,8 @@ class Agent:
         """Non-blocking RDMA-put analogue.  Returns a Future that resolves to
         a TransferRecord once the shard has landed in L1."""
         fut: Future = Future()
-        self._inbox.put(_Op("put", key=key, payload=payload, crc=crc, future=fut))
+        self._inbox.put(_Op("put", key=key, payload=payload, crc=crc,
+                            future=fut, trace=self._cur_trace()))
         return fut
 
     def get(self, key: ShardKey) -> bytes:
@@ -197,7 +204,8 @@ class Agent:
         the assembled payload lands in this agent's L1 under
         ``spec.out_key``).  Resolves to ``{nbytes, reads}`` accounting."""
         fut: Future = Future()
-        self._inbox.put(_Op("assemble", payload=spec, future=fut))
+        self._inbox.put(_Op("assemble", payload=spec, future=fut,
+                            trace=self._cur_trace()))
         return fut
 
     def replay(self, spec: ReplaySpec) -> Future:
@@ -208,7 +216,8 @@ class Agent:
         ``(dst_offset_vals, value_bytes)`` spans that changed — what the
         client splices into parts it already prefetched."""
         fut: Future = Future()
-        self._inbox.put(_Op("replay", payload=spec, future=fut))
+        self._inbox.put(_Op("replay", payload=spec, future=fut,
+                            trace=self._cur_trace()))
         return fut
 
     def drop_assembly_state(self, key: ShardKey) -> None:
@@ -220,7 +229,8 @@ class Agent:
               on_done: Optional[Callable] = None) -> Future:
         """Write the given L1 shards to the PFS (asynchronously)."""
         fut: Future = Future()
-        self._inbox.put(_Op("drain", key=keys, pfs=pfs, future=fut, on_done=on_done))
+        self._inbox.put(_Op("drain", key=keys, pfs=pfs, future=fut,
+                            on_done=on_done, trace=self._cur_trace()))
         return fut
 
     # ------------------------------------------------------------------ admin
@@ -260,27 +270,61 @@ class Agent:
         if not self.alive():
             raise AgentDead(f"agent {self.agent_id} on node {self.node_id} is dead")
 
+    def _cur_trace(self):
+        """The submitting thread's TraceContext, to ride the op across the
+        inbox (None when tracing is off)."""
+        return self.tracer.current() if self.tracer is not None else None
+
+    def _op_trace_id(self, op: _Op) -> Optional[str]:
+        """Trace identity of one op: the carried context's, else derived
+        from the shard key — a drain retry resubmitted without context
+        still re-joins its checkpoint's tree by id."""
+        if op.trace is not None:
+            return op.trace.trace_id
+        key = op.key
+        if op.kind in ("assemble", "replay"):
+            key = op.payload.out_key
+        elif isinstance(key, list):
+            key = key[0] if key else None
+        if key is None:
+            return None
+        return trace_id_for(key.app_id, key.ckpt_id)
+
     def _run(self) -> None:
         while not self._stop.is_set():
             op = self._inbox.get()
             if op.kind == "stop":
                 break
             try:
-                if op.kind == "put":
-                    rec = self._do_put(op)
-                    op.future.set_result(rec)
-                elif op.kind == "drain":
-                    res = self._do_drain(op)
-                    op.future.set_result(res)
-                    if op.on_done:
-                        op.on_done(res)
-                elif op.kind == "assemble":
-                    op.future.set_result(self._do_assemble(op.payload))
-                elif op.kind == "replay":
-                    op.future.set_result(self._do_replay(op.payload))
+                tracer = self.tracer
+                if tracer is not None and tracer.enabled:
+                    trace_id = self._op_trace_id(op)
+                    with tracer.use(op.trace):
+                        if trace_id is not None:
+                            with tracer.span(f"agent_{op.kind}", trace_id,
+                                             self.agent_id):
+                                self._dispatch(op)
+                        else:
+                            self._dispatch(op)
+                else:
+                    self._dispatch(op)
             except BaseException as e:  # noqa: BLE001 - surface through future
                 if op.future is not None and not op.future.done():
                     op.future.set_exception(e)
+
+    def _dispatch(self, op: _Op) -> None:
+        if op.kind == "put":
+            rec = self._do_put(op)
+            op.future.set_result(rec)
+        elif op.kind == "drain":
+            res = self._do_drain(op)
+            op.future.set_result(res)
+            if op.on_done:
+                op.on_done(res)
+        elif op.kind == "assemble":
+            op.future.set_result(self._do_assemble(op.payload))
+        elif op.kind == "replay":
+            op.future.set_result(self._do_replay(op.payload))
 
     def _do_put(self, op: _Op) -> TransferRecord:
         self._check_alive()

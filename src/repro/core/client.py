@@ -30,6 +30,7 @@ import numpy as np
 
 from . import events as E
 from . import plan as planlib
+from ..obs import trace_id_for
 from .agent import Agent, AgentDead
 from .controller import Controller
 from .tiers import (EncodedRegion, crc32, decode_payload, encode_delta_region,
@@ -44,11 +45,16 @@ class CommitHandle:
     """In-flight checkpoint: resolves once every shard is acked in L1."""
 
     def __init__(self, client: "ICheckClient", meta: CheckpointMeta,
-                 puts: List[Tuple[ShardKey, bytes, Agent]], drain: bool):
+                 puts: List[Tuple[ShardKey, bytes, Agent]], drain: bool,
+                 trace=None):
         self.client = client
         self.meta = meta
         self._puts = puts
         self._drain = drain
+        # root TraceContext of this checkpoint's trace tree, captured on the
+        # application thread and reinstated on the completer thread so the
+        # agent puts / finalize / COMMIT_DONE all attach to the commit root
+        self.trace = trace
         self._done = threading.Event()
         self._error: Optional[BaseException] = None
         self.sim_duration = 0.0
@@ -72,6 +78,11 @@ class CommitHandle:
     # -- executed on the client's completer thread --------------------------
     def _complete(self) -> None:
         ctl = self.client.controller
+        with ctl.tracer.use(self.trace):
+            self._complete_traced(ctl)
+
+    def _complete_traced(self, ctl) -> None:
+        t0 = ctl.clock.now()
         per_node_sim: Dict[str, float] = {}
         try:
             inflight = [(key, payload, agent, agent.put(key, payload))
@@ -89,6 +100,10 @@ class CommitHandle:
                         agent_id=rec.agent_id))
             # commit duration ≈ busiest NIC's total transfer time
             self.sim_duration = max(per_node_sim.values(), default=0.0)
+            ctl.tracer.record(
+                "l1_store", trace_id_for(self.meta.app_id, self.meta.ckpt_id),
+                f"client/{self.meta.app_id}", t0=t0,
+                dur_s=self.sim_duration, retries=self.retries)
             ctl.finalize_checkpoint(self.meta, drain=self._drain)
             self.client._last_commit_sim_s = self.sim_duration
             ctl.bus.publish(E.COMMIT_DONE, app=self.meta.app_id,
@@ -167,10 +182,12 @@ class ResizeCutoverHandle:
     _FALLBACK_ERRORS = (ICheckError, ConnectionError, TimeoutError, KeyError)
 
     def __init__(self, client: "ICheckClient", name: str, window,
-                 wanted: set, new_parts: int, part_shape, fallback):
+                 wanted: set, new_parts: int, part_shape, fallback,
+                 trace_id: Optional[str] = None):
         self.client = client
         self.name = name
         self.window = window              # None = funnel-only degenerate
+        self.trace_id = trace_id          # base checkpoint's trace tree
         self.wanted = set(wanted)
         self.new_parts = new_parts
         self._part_shape = part_shape
@@ -254,6 +271,12 @@ class ResizeCutoverHandle:
         ctl.release_redistribution(results)
         overlap_s = stats["overlap_sim_s"] + self._prefetch_s
         stall_s = stats["stall_sim_s"] + stall_fetch_s
+        if self.trace_id is not None:
+            ctl.tracer.record("cutover", self.trace_id,
+                              f"client/{client.app_id}", dur_s=stall_s,
+                              region=self.name, overlap_s=overlap_s,
+                              tail_frames=stats["tail_frames"],
+                              rehydrated=stats["rehydrated"])
         client._publish_redistribution_done(
             self.name, self.new_parts, "peer", overlap_s + stall_s,
             bytes_client + self._prefetch_bytes, stats,
@@ -453,6 +476,13 @@ class ICheckClient:
         if not agents:
             raise ICheckError("no agents assigned")
 
+        # root of this checkpoint's trace tree: every later phase (agent
+        # puts, L2 drain, L3 trickle, a restore hours later) attaches here
+        trace_id = trace_id_for(self.app_id, ckpt.ckpt_id)
+        root_ctx = ctl.tracer.record("commit", trace_id,
+                                     f"client/{self.app_id}", root=True,
+                                     step=step, drain=drain)
+
         t_enc = time.monotonic()
         stats = {"raw": 0, "enc": 0, "key": 0, "delta": 0,
                  "encode_s": 0.0, "publish": False}
@@ -485,6 +515,10 @@ class ICheckClient:
             ctl.reset_delta_chains(self.app_id, reason="commit_encode_failed")
             raise
         stats["encode_s"] += time.monotonic() - t_enc
+        ctl.tracer.record("encode", trace_id, f"client/{self.app_id}",
+                          dur_s=stats["encode_s"], parent=root_ctx,
+                          raw_bytes=stats["raw"],
+                          encoded_bytes=stats["enc"])
 
         puts: List[Tuple[ShardKey, bytes, Agent]] = []
         for name, blobs in payloads.items():
@@ -501,7 +535,7 @@ class ICheckClient:
                             key_frames=stats["key"],
                             delta_frames=stats["delta"],
                             encode_s=stats["encode_s"])
-        handle = CommitHandle(self, ckpt, puts, drain=drain)
+        handle = CommitHandle(self, ckpt, puts, drain=drain, trace=root_ctx)
         self._commit_q.put(handle)
         if blocking:
             handle.wait(timeout=120)
@@ -654,20 +688,30 @@ class ICheckClient:
         if found is None:
             return None
         meta, level = found
+        ctl = self.controller
+        t0 = ctl.clock.now()
         out: Dict[str, Dict[int, np.ndarray]] = {}
-        for name, region in meta.regions.items():
-            parts: Dict[int, np.ndarray] = {}
-            for part in range(region.partition.num_parts):
-                payload = self._fetch_decoded(region, meta.ckpt_id, part)
-                arr = np.frombuffer(bytearray(payload),
-                                    dtype=np.dtype(region.dtype))
-                parts[part] = arr.reshape(self._part_shape(region, part))
-            out[name] = parts
-            # refresh the client-side region registry from the manifest
-            # (scrubbed of this checkpoint's frame/chain bookkeeping)
-            registry = dataclasses.replace(region, frame=None, chain=None)
-            self.regions[name] = registry
-            self.controller.register_region(self.app_id, registry)
+        # the restore span re-joins the checkpoint's trace tree by id alone
+        # (the commit may be hours old; no context survived to here)
+        with ctl.tracer.span("restore",
+                             trace_id_for(self.app_id, meta.ckpt_id),
+                             f"client/{self.app_id}", tier=level):
+            for name, region in meta.regions.items():
+                parts: Dict[int, np.ndarray] = {}
+                for part in range(region.partition.num_parts):
+                    payload = self._fetch_decoded(region, meta.ckpt_id, part)
+                    arr = np.frombuffer(bytearray(payload),
+                                        dtype=np.dtype(region.dtype))
+                    parts[part] = arr.reshape(self._part_shape(region, part))
+                out[name] = parts
+                # refresh the client-side region registry from the manifest
+                # (scrubbed of this checkpoint's frame/chain bookkeeping)
+                registry = dataclasses.replace(region, frame=None, chain=None)
+                self.regions[name] = registry
+                self.controller.register_region(self.app_id, registry)
+            ctl.bus.publish(E.RESTORE_DONE, app=self.app_id,
+                            ckpt=meta.ckpt_id, tier=level,
+                            sim_s=max(ctl.clock.now() - t0, 0.0))
         return meta, out, level
 
     def _part_shape(self, region: RegionMeta, part: int) -> Tuple[int, ...]:
@@ -759,6 +803,7 @@ class ICheckClient:
         fetch of the wanted parts."""
         ctl = self.controller
         region = self._ckpt_region(ckpt_id, name)
+        t0 = ctl.clock.now()
         results, stats = ctl.execute_redistribution(self.app_id, region,
                                                     ckpt_id, programs)
         try:
@@ -777,6 +822,10 @@ class ICheckClient:
         finally:
             ctl.release_redistribution(results)
         sim_s = stats["sim_s"] + max(fetch_lane.values(), default=0.0)
+        ctl.tracer.record("redistribute_peer",
+                          trace_id_for(self.app_id, ckpt_id),
+                          f"client/{self.app_id}", t0=t0, dur_s=sim_s,
+                          region=name, new_parts=new_parts)
         self._publish_redistribution_done(
             name, new_parts, "peer", sim_s, bytes_client, stats,
             wall_sim_s=stats.get("wall_sim_s", 0.0),
@@ -804,6 +853,11 @@ class ICheckClient:
         dst = planlib.apply_moves(src_parts, sub_moves, old, new,
                                   region.shape)
         result = {p: dst[p] for p in wanted}
+        ctl.tracer.record("redistribute_funnel",
+                          trace_id_for(self.app_id, ckpt_id),
+                          f"client/{self.app_id}", t0=t0,
+                          dur_s=ctl.clock.now() - t0, region=name,
+                          new_parts=new_num_parts)
         self._publish_redistribution_done(name, new_num_parts, "client",
                                           ctl.clock.now() - t0,
                                           stats["wire_bytes"])
@@ -818,6 +872,7 @@ class ICheckClient:
         round trip hides inside the window instead of stretching it."""
         ctl = self.controller
         region = self._ckpt_region(ckpt_id, name)
+        trace_id = trace_id_for(self.app_id, ckpt_id)
         window = None
         try:
             programs = programs_fn()
@@ -827,11 +882,14 @@ class ICheckClient:
             else:
                 window = ctl.begin_overlap_redistribution(
                     self.app_id, region, ckpt_id, programs)
+                ctl.tracer.record("overlap_open", trace_id,
+                                  f"client/{self.app_id}", region=name,
+                                  new_parts=new_parts)
         except ResizeCutoverHandle._FALLBACK_ERRORS as e:
             ctl.bus.publish(E.REDISTRIBUTION_FALLBACK, app=self.app_id,
                             region=name, reason=repr(e))
         return ResizeCutoverHandle(self, name, window, wanted, new_parts,
-                                   part_shape, fallback)
+                                   part_shape, fallback, trace_id=trace_id)
 
     def redistribute(self, name: str, new_num_parts: int,
                      ckpt_id: Optional[int] = None,
@@ -918,6 +976,11 @@ class ICheckClient:
         dst = planlib.apply_mesh_moves(src_parts, sub_moves, new_boxes,
                                        np.dtype(region.dtype))
         result = {p: dst[p] for p in wanted}
+        ctl.tracer.record("redistribute_funnel",
+                          trace_id_for(self.app_id, ckpt_id),
+                          f"client/{self.app_id}", t0=t0,
+                          dur_s=ctl.clock.now() - t0, region=name,
+                          new_parts=len(new_boxes))
         self._publish_redistribution_done(name, len(new_boxes), "client",
                                           ctl.clock.now() - t0,
                                           stats["wire_bytes"])

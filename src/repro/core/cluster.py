@@ -14,7 +14,13 @@ analogue) behind the PFS: sealed checkpoints trickle L2→L3 in the
 background, retention trims the faster tiers (``keep_l2``/``keep_l3``), and
 cold restarts fall back to the object store when L1 and L2 are gone.
 ``watermark_high``/``watermark_low`` drive the proactive L1 demotion policy
-on nodes that have a spill tier (``spill_bytes > 0``)."""
+on nodes that have a spill tier (``spill_bytes > 0``).
+
+``trace=True`` (or any ``trace_path=``) turns on sim-time checkpoint
+tracing: one causal span tree per checkpoint, exported as Chrome/Perfetto
+``trace_event`` JSON to ``trace_path`` when the cluster closes.  ``obs_dir``
+overrides where flight-recorder crash dumps land (default
+``artifacts/obs/``)."""
 from __future__ import annotations
 
 import tempfile
@@ -38,7 +44,9 @@ class ICheckCluster:
                  l3_bandwidth: float = 5e9, l3_request_latency: float = 0.03,
                  watermark_high: float = 0.85, watermark_low: float = 0.60,
                  keep_l2: int = 0, keep_l3: int = 0,
-                 delta_keyframe_every: int = 8):
+                 delta_keyframe_every: int = 8,
+                 trace: bool = False, trace_path: Optional[str] = None,
+                 obs_dir: Optional[str] = None):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -71,7 +79,8 @@ class ICheckCluster:
             default_mtbf_s=default_mtbf_s, l3=self.l3,
             watermark_high=watermark_high, watermark_low=watermark_low,
             keep_l2=keep_l2, keep_l3=keep_l3,
-            delta_keyframe_every=delta_keyframe_every)
+            delta_keyframe_every=delta_keyframe_every,
+            trace=trace, trace_path=trace_path, obs_dir=obs_dir)
 
     @property
     def telemetry(self):
@@ -87,6 +96,16 @@ class ICheckCluster:
     def lifecycle(self):
         """The controller's StorageLifecycleService (watermarks/trickle/GC)."""
         return self.controller.lifecycle
+
+    @property
+    def tracer(self):
+        """The controller's TraceCollector (sim-time checkpoint tracing)."""
+        return self.controller.tracer
+
+    @property
+    def flight(self):
+        """The controller's FlightRecorder (crash-dump ring buffer)."""
+        return self.controller.flight
 
     def close(self) -> None:
         self.controller.close()

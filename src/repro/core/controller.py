@@ -35,7 +35,7 @@ from typing import Dict, List, Optional, Tuple
 from . import plan as planlib
 from .agent import Agent
 from .events import AuditLog, EventBus, NODE_ADDED, NODE_REQUEST_DENIED, \
-    APP_REGISTERED
+    APP_REGISTERED, REDISTRIBUTION_FALLBACK as E_REDISTRIBUTION_FALLBACK
 from .manager import Manager
 from .policies import NodeView, SchedulingPolicy
 from .rm import ResourceManager
@@ -44,6 +44,7 @@ from .services import (CheckpointCatalog, DrainOrchestrator, HealthMonitor,
                        StorageLifecycleService, TelemetryService)
 from .simnet import FaultInjector, SimClock
 from .tiers import PFSTier, RemoteObjectTier
+from ..obs import FlightRecorder, TraceCollector
 from .types import (AppId, AppRecord, AppStatus, CheckpointMeta, CkptId,
                     ICheckError, NodeSpec, RegionMeta, ShardInfo)
 
@@ -60,7 +61,9 @@ class Controller:
                  l3: Optional[RemoteObjectTier] = None,
                  watermark_high: float = 0.85, watermark_low: float = 0.60,
                  keep_l2: int = 0, keep_l3: int = 0,
-                 delta_keyframe_every: int = 8):
+                 delta_keyframe_every: int = 8,
+                 trace: bool = False, trace_path: Optional[str] = None,
+                 obs_dir: Optional[str] = None):
         self.rm = rm
         self.pfs = pfs
         self.l3 = l3
@@ -78,6 +81,20 @@ class Controller:
         self.audit = AuditLog()
         self.bus.subscribe(self.audit)
 
+        # observability: tracer (no-op unless trace/trace_path asked for
+        # it) + always-on bounded flight recorder; publish stamps the
+        # current trace context on every event
+        self.trace_path = trace_path
+        self.tracer = TraceCollector(clock=self.clock,
+                                     enabled=bool(trace) or
+                                     trace_path is not None)
+        self.bus.tracer = self.tracer
+        self.flight = FlightRecorder(clock=self.clock, out_dir=obs_dir)
+        self.bus.subscribe(self.flight.on_event)
+        self.tracer.add_listener(self.flight.on_span)
+        self.bus.subscribe(self._on_fallback,
+                           events=(E_REDISTRIBUTION_FALLBACK,))
+
         # service core
         self.placement = PlacementService(self, policy)
         self.catalog = CheckpointCatalog(
@@ -90,6 +107,11 @@ class Controller:
         # controller so a COMMIT_DONE updates the estimates first and the
         # solver then reads the fresh values (bus fans out in order)
         self.telemetry = TelemetryService(self, default_mtbf_s=default_mtbf_s)
+        # shared-tier links feed the same per-hop histograms as node NICs:
+        # a drain's PFS ingest or a cold L3 read is a hop like any other
+        self.pfs.ingest.on_transfer = self.telemetry.observe_transfer
+        if l3 is not None:
+            l3.link.on_transfer = self.telemetry.observe_transfer
         self.intervals = IntervalController(self, self.telemetry) \
             if adaptive_interval else None
         # storage lifecycle: watermark demotion acts whenever a node has a
@@ -113,6 +135,14 @@ class Controller:
         self.drains.start()
         self.health.start()
 
+    def _on_fallback(self, ev) -> None:
+        """A redistribution fell back to the client funnel: something broke
+        mid-window — ship the timeline."""
+        p = ev.payload
+        self.flight.dump(
+            f"fallback_{p.get('app', '?')}_{p.get('region', '?')}",
+            extra={"event": ev.as_record()})
+
     # ------------------------------------------------- legacy-compat surface
     @property
     def events(self) -> List[dict]:
@@ -135,6 +165,10 @@ class Controller:
     def _add_node(self, spec: NodeSpec) -> Manager:
         mgr = Manager(spec, clock=self.clock, fault=self.fault, bus=self.bus,
                       spill_bytes=self.spill_bytes)
+        # per-hop transfer observations feed the cluster-level NIC/MemBus
+        # latency histograms (peer-hop p99s in snapshot()/prometheus())
+        mgr.nic.on_transfer = self.telemetry.observe_transfer
+        mgr.membus.on_transfer = self.telemetry.observe_transfer
         with self._lock:
             self._managers[spec.node_id] = mgr
         self.bus.publish(NODE_ADDED, node=spec.node_id)
@@ -341,6 +375,11 @@ class Controller:
 
     # ================================================================== misc
     def close(self) -> None:
+        if self.trace_path is not None and self.tracer.enabled:
+            try:
+                self.tracer.write_chrome_trace(self.trace_path)
+            except OSError:
+                pass
         self.lifecycle.close()
         self.catalog.close()
         self.drains.close()

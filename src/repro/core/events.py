@@ -44,6 +44,10 @@ DRAIN_FAILED = "drain_failed"
 # (bytes moved, busiest-NIC sim seconds, straggler retries) — the
 # TelemetryService's commit-latency/-cost signal
 COMMIT_DONE = "commit_done"
+# a restart finished reassembling application state from a checkpoint;
+# payload carries the source tier and sim seconds — the TelemetryService's
+# restore-latency histogram signal, and the span that closes a trace tree
+RESTORE_DONE = "restore_done"
 
 RESIZE_FOREWARNED = "resize_forewarned"
 
@@ -128,11 +132,20 @@ CHAOS_CLEARED = "chaos_cleared"
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One control-plane occurrence: a name, a sim timestamp, a payload."""
+    """One control-plane occurrence: a name, a sim timestamp, a payload.
+
+    ``trace`` carries the :class:`~repro.obs.trace.TraceContext` the event
+    was published under (None when tracing is off).  It deliberately stays
+    *out* of :meth:`as_record` — the audit-dict format is byte-compatible
+    with the pre-refactor log; trace identity travels beside it, read by
+    the flight recorder, never by the audit consumers.
+    """
 
     name: str
     sim_t: float
     payload: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    trace: Optional[Any] = dataclasses.field(default=None, compare=False,
+                                             repr=False)
 
     def as_record(self) -> dict:
         """Render to the legacy audit-dict format (payload keys first)."""
@@ -154,6 +167,9 @@ class EventBus:
 
     def __init__(self, clock=None):
         self.clock = clock
+        # optional TraceCollector: when set, every publish stamps the
+        # publisher thread's current trace context onto the event
+        self.tracer = None
         self._lock = threading.Lock()
         self._subs: List[Tuple[Optional[frozenset], Subscriber]] = []
 
@@ -179,7 +195,8 @@ class EventBus:
 
     def publish(self, name: str, **payload) -> Event:
         sim_t = self.clock.now() if self.clock is not None else 0.0
-        ev = Event(name=name, sim_t=sim_t, payload=payload)
+        ctx = self.tracer.current() if self.tracer is not None else None
+        ev = Event(name=name, sim_t=sim_t, payload=payload, trace=ctx)
         with self._lock:
             subs = list(self._subs)
         for filt, handler in subs:
@@ -196,16 +213,28 @@ class AuditLog:
 
     ``records`` is byte-compatible with what ``Controller._log`` used to
     append: ``{**payload, "event": name, "sim_t": t}`` in that key order.
+
+    Growth is bounded: beyond ``maxlen`` records the oldest are trimmed
+    from the front and counted in ``dropped``, so long chaos campaigns
+    and multi-app runs stop accumulating O(events) memory.  The default
+    is far above what any test or campaign produces, keeping the list
+    contiguous (index == publish order) on every short run.
     """
 
-    def __init__(self):
+    def __init__(self, maxlen: int = 100_000):
         self._lock = threading.Lock()
+        self.maxlen = max(1, int(maxlen))
+        self.dropped = 0
         self.records: List[dict] = []
 
     def __call__(self, ev: Event) -> None:
         rec = ev.as_record()
         with self._lock:
             self.records.append(rec)
+            if len(self.records) > self.maxlen:
+                excess = len(self.records) - self.maxlen
+                del self.records[:excess]
+                self.dropped += excess
 
     def names(self) -> List[str]:
         with self._lock:

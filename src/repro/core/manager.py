@@ -33,6 +33,7 @@ class Manager:
         self.node_id = spec.node_id
         self.clock = clock or SimClock()
         self.fault = fault or FaultInjector()
+        self.bus = bus
         tiers = [MemoryTier(spec.memory_bytes)]
         if spill_bytes > 0:
             root = spill_dir or tempfile.mkdtemp(
@@ -70,8 +71,11 @@ class Manager:
             if len(self._agents) >= self.spec.max_agents:
                 raise RuntimeError(f"node {self.node_id} at max_agents")
             agent_id = f"{self.node_id}/a{next(self._agent_seq)}"
+            # the bus's TraceCollector (when wired) rides into every agent
+            # so inbox ops carry and reinstate the submitter's context
             agent = Agent(agent_id, self.node_id, self.store, self.nic,
-                          self.fault, membus=self.membus)
+                          self.fault, membus=self.membus,
+                          tracer=getattr(self.bus, "tracer", None))
             self._agents[agent_id] = agent
             self._agent_apps[agent_id] = app_id
         return agent

@@ -24,6 +24,7 @@ import itertools
 import threading
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from ...obs import trace_id_for
 from .. import events as E
 from ..tiers import DeltaState
 from ..types import (AppId, CheckpointMeta, CkptId, CkptStatus, ICheckError,
@@ -367,12 +368,16 @@ class CheckpointCatalog:
             return self.ctl.pfs.read_shard(key)
         l3 = getattr(self.ctl, "l3", None)
         if l3 is not None and l3.has_shard(key):
-            payload = l3.read_shard(key)
             # promote-on-read back through the pipeline: repopulate the PFS
             # copy so the remaining shards of this restart (and the next
             # restart) are served at PFS latency instead of object-store
             # request-latency
-            self.ctl.pfs.write_shard(key, payload)
+            with self.ctl.tracer.span("shard_promote",
+                                      trace_id_for(app_id, ckpt_id),
+                                      "catalog/fetch", region=region,
+                                      part=part):
+                payload = l3.read_shard(key)
+                self.ctl.pfs.write_shard(key, payload)
             self.ctl.bus.publish(E.SHARD_PROMOTED, node="cluster",
                                  key=str(key), src=l3.name,
                                  dst=self.ctl.pfs.name, nbytes=len(payload))

@@ -24,6 +24,7 @@ import threading
 import time
 from typing import Callable, List, Tuple
 
+from ...obs import trace_id_for
 from .. import events as E
 from ..types import AppId, CheckpointMeta, CkptStatus
 
@@ -35,7 +36,10 @@ class DrainOrchestrator:
         self.max_concurrent = max(1, int(max_concurrent))
         self.keep_l1 = keep_l1
         self.max_attempts = max(1, int(max_attempts))
-        self._q: "queue.Queue[Tuple[CheckpointMeta, int]]" = queue.Queue()
+        # queue entries carry the submitter's TraceContext: the drain
+        # crosses into a worker thread, so causality rides the tuple
+        self._q: "queue.Queue[Tuple[CheckpointMeta, int, object]]" = \
+            queue.Queue()
         self._bg: "queue.Queue[Callable[[], None]]" = queue.Queue()
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -77,10 +81,14 @@ class DrainOrchestrator:
             }
 
     # ------------------------------------------------------------- interface
-    def submit(self, meta: CheckpointMeta, attempt: int = 0) -> None:
+    def submit(self, meta: CheckpointMeta, attempt: int = 0,
+               trace=None) -> None:
+        tracer = getattr(self.ctl, "tracer", None)
+        if trace is None and tracer is not None:
+            trace = tracer.current()
         with self._lock:
             self._inflight += 1
-        self._q.put((meta, attempt))
+        self._q.put((meta, attempt, trace))
 
     def submit_background(self, fn: Callable[[], None]) -> None:
         """Queue low-priority work (L2→L3 trickle) behind all live drains."""
@@ -114,7 +122,7 @@ class DrainOrchestrator:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
-                meta, attempt = self._q.get(timeout=0.05)
+                meta, attempt, trace = self._q.get(timeout=0.05)
             except queue.Empty:
                 self._run_background_one()
                 continue
@@ -122,7 +130,7 @@ class DrainOrchestrator:
                 self._active += 1
                 self._max_active = max(self._max_active, self._active)
             try:
-                self._drain_one(meta, attempt)
+                self._drain_one(meta, attempt, trace)
             finally:
                 with self._lock:
                     self._active -= 1
@@ -154,7 +162,20 @@ class DrainOrchestrator:
                 else:
                     self._bg_failed += 1
 
-    def _drain_one(self, meta: CheckpointMeta, attempt: int) -> None:
+    def _drain_one(self, meta: CheckpointMeta, attempt: int,
+                   trace=None) -> None:
+        tracer = getattr(self.ctl, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            with tracer.use(trace), tracer.span(
+                    "l2_drain", trace_id_for(meta.app_id, meta.ckpt_id),
+                    f"drain/{threading.current_thread().name}",
+                    attempt=attempt):
+                self._drain_one_inner(meta, attempt, trace)
+        else:
+            self._drain_one_inner(meta, attempt, trace)
+
+    def _drain_one_inner(self, meta: CheckpointMeta, attempt: int,
+                         trace=None) -> None:
         ctl = self.ctl
         t0 = ctl.clock.now()
         with ctl._lock:
@@ -196,7 +217,9 @@ class DrainOrchestrator:
                 meta.status = CkptStatus.IN_L1
             recovery = 4 * getattr(ctl.health, "interval", 0.05)
             self._stop.wait(recovery)
-            self.submit(meta, attempt + 1)
+            # re-carry the original context: the retried drain is still part
+            # of the same checkpoint's trace, not an orphan
+            self.submit(meta, attempt + 1, trace=trace)
         else:
             with ctl._lock:
                 meta.status = CkptStatus.IN_L1     # still restartable from L1

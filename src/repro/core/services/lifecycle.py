@@ -32,6 +32,7 @@ from __future__ import annotations
 import threading
 from typing import List, Set, Tuple
 
+from ...obs import trace_id_for
 from .. import events as E
 from ..types import AppId, CkptId, CkptStatus, ICheckError, ShardKey
 
@@ -162,20 +163,37 @@ class StorageLifecycleService:
     MAX_UPLOAD_ATTEMPTS = 3
 
     def schedule_upload(self, app_id: AppId, ckpt_id: CkptId,
-                        attempt: int = 0) -> None:
+                        attempt: int = 0, trace=None) -> None:
         with self._lock:
             if (app_id, ckpt_id) in self._uploading:
                 return
             self._uploading.add((app_id, ckpt_id))
+        # the CKPT_IN_L2 handler runs on the drain worker, whose current
+        # context is the l2_drain span: capture it into the background-lane
+        # closure so the trickle re-joins the checkpoint's trace tree
+        tracer = getattr(self.ctl, "tracer", None)
+        if trace is None and tracer is not None:
+            trace = tracer.current()
         self.ctl.drains.submit_background(
-            lambda: self._upload_to_l3(app_id, ckpt_id, attempt))
+            lambda: self._upload_to_l3(app_id, ckpt_id, attempt, trace))
 
     def wait_uploads(self, timeout: float = 30.0) -> None:
         """Testing/benchmark helper: block until the trickle lane settles."""
         self.ctl.drains.wait_background(timeout)
 
     def _upload_to_l3(self, app_id: AppId, ckpt_id: CkptId,
-                      attempt: int = 0) -> None:
+                      attempt: int = 0, trace=None) -> None:
+        tracer = getattr(self.ctl, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            with tracer.use(trace), tracer.span(
+                    "l3_trickle", trace_id_for(app_id, ckpt_id),
+                    "lifecycle/trickle", attempt=attempt):
+                self._upload_attempt(app_id, ckpt_id, attempt, trace)
+        else:
+            self._upload_attempt(app_id, ckpt_id, attempt, trace)
+
+    def _upload_attempt(self, app_id: AppId, ckpt_id: CkptId,
+                        attempt: int = 0, trace=None) -> None:
         try:
             self._upload_to_l3_once(app_id, ckpt_id)
         except Exception as e:  # noqa: BLE001 - must not kill the worker
@@ -184,7 +202,8 @@ class StorageLifecycleService:
             if attempt + 1 < self.MAX_UPLOAD_ATTEMPTS:
                 # transient (an I/O hiccup, a shard raced a drop): requeue
                 # behind whatever live drains arrived meanwhile
-                self.schedule_upload(app_id, ckpt_id, attempt + 1)
+                self.schedule_upload(app_id, ckpt_id, attempt + 1,
+                                     trace=trace)
             else:
                 # terminal: the checkpoint stays IN_L2 (still PFS-durable,
                 # and keep_l2 retention never trims a non-L3 checkpoint) —

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ...obs import trace_id_for
 from .. import events as E
 from .. import plan as planlib
 from ..agent import Agent, AssembleSpec, ReplaySpec, SliceFetch
@@ -277,6 +278,11 @@ class PeerRedistributionEngine:
         wall = ctl.clock.now() - t0
         stats["wall_sim_s"] = wall
         stats["window_skew"] = stats["sim_s"] / wall if wall > 0 else 1.0
+        ctl.tracer.record("redistribute_window",
+                          trace_id_for(app_id, ckpt_id), "resize/engine",
+                          t0=t0, dur_s=stats["sim_s"], region=region.name,
+                          new_parts=len(programs),
+                          peer_hops=stats.get("peer_hops", 0))
         return results, stats
 
     # ------------------------------------------------- zero-stall (two-phase)

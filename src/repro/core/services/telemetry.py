@@ -23,12 +23,28 @@ after a reconfiguration.
 """
 from __future__ import annotations
 
+import re
 import threading
 from typing import Dict, List, Optional
 
 from .. import events as E
+from ...obs import LogHistogram
 from ..simnet import EWMA
 from ..types import AppId
+
+# Prometheus exposition-format naming rules
+# (https://prometheus.io/docs/concepts/data_model/): every exported metric
+# and label name is validated against these at export time, so a typo'd
+# gauge fails tests instead of silently producing an unscrapable line.
+_METRIC_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _escape_label_value(value) -> str:
+    """Escape a label value per the text exposition format: backslash,
+    double-quote and newline must be escaped inside the quotes."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
 
 # events that mean "the node set / agent set serving an app changed, so the
 # commit cost C it observes is about to change too"
@@ -88,6 +104,16 @@ class AppTelemetry:
         self.overlap_commits = 0
         self.overlap_rehydrations = 0
         self.cutover_stall_s = EWMA(alpha=alpha)
+        # restore path (restore_done)
+        self.restores = 0
+        self.restore_s = EWMA(alpha=alpha)
+        # distributions beside the EWMAs: fixed log2 buckets, so p50/p95/
+        # p99 and Prometheus _bucket exports are stable across runs
+        self.commit_latency_hist = LogHistogram()
+        self.commit_bytes_hist = LogHistogram.for_bytes()
+        self.drain_hist = LogHistogram()
+        self.restore_hist = LogHistogram()
+        self.stall_hist = LogHistogram()
 
     def as_dict(self) -> dict:
         return {
@@ -125,6 +151,13 @@ class AppTelemetry:
             "overlap_commits": self.overlap_commits,
             "overlap_rehydrations": self.overlap_rehydrations,
             "cutover_stall_s": self.cutover_stall_s.predict(),
+            "restores": self.restores,
+            "restore_s": self.restore_s.predict(),
+            "commit_latency_quantiles": self.commit_latency_hist.as_dict(),
+            "commit_bytes_quantiles": self.commit_bytes_hist.as_dict(),
+            "drain_quantiles": self.drain_hist.as_dict(),
+            "restore_quantiles": self.restore_hist.as_dict(),
+            "cutover_stall_quantiles": self.stall_hist.as_dict(),
         }
 
 
@@ -140,6 +173,10 @@ class TelemetryService:
         self._apps: Dict[AppId, AppTelemetry] = {}
         self._cluster_failures = 0
         self._events_seen = 0
+        # cluster-level per-hop transfer distributions, fed by the SimNIC/
+        # MemBus ``on_transfer`` observers the controller wires per node
+        self._hop_latency_hist = LogHistogram()
+        self._hop_bytes_hist = LogHistogram.for_bytes()
         self._lifecycle = {
             "shard_demotions": 0,
             "demote_failures": 0,
@@ -155,7 +192,8 @@ class TelemetryService:
                     E.CKPT_FAILED, E.APP_RANK_FAILED, E.APP_REGISTERED,
                     E.CKPT_DELTA_COMMITTED, E.DELTA_CHAIN_RESET,
                     E.REDISTRIBUTION_DONE, E.REDISTRIBUTION_FALLBACK,
-                    E.RESIZE_OVERLAP_STARTED, E.CUTOVER_DONE)
+                    E.RESIZE_OVERLAP_STARTED, E.CUTOVER_DONE,
+                    E.RESTORE_DONE)
             + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
 
     def close(self) -> None:
@@ -187,11 +225,15 @@ class TelemetryService:
                 tel.commit_latency_sum_s += float(p.get("sim_s", 0.0))
                 tel.commit_latency_s.update(float(p.get("sim_s", 0.0)))
                 tel.commit_bytes.update(float(p.get("bytes", 0)))
+                tel.commit_latency_hist.observe(float(p.get("sim_s", 0.0)))
+                tel.commit_bytes_hist.observe(float(p.get("bytes", 0)))
                 tel.last_commit_t = ev.sim_t
             elif name == E.CKPT_IN_L2:
                 tel = self._app(p["app"])
                 tel.drains += 1
                 nbytes, sim_s = p.get("bytes"), p.get("sim_s")
+                if sim_s is not None:
+                    tel.drain_hist.observe(float(sim_s))
                 if nbytes and sim_s:
                     tel.drain_rate_Bps.update(float(nbytes) / max(
                         float(sim_s), 1e-12))
@@ -225,6 +267,12 @@ class TelemetryService:
                 tel.overlap_commits += int(p.get("overlap_commits", 0))
                 tel.overlap_rehydrations += int(bool(p.get("rehydrated")))
                 tel.cutover_stall_s.update(float(p.get("stall_sim_s", 0.0)))
+                tel.stall_hist.observe(float(p.get("stall_sim_s", 0.0)))
+            elif name == E.RESTORE_DONE:
+                tel = self._app(p["app"])
+                tel.restores += 1
+                tel.restore_s.update(float(p.get("sim_s", 0.0)))
+                tel.restore_hist.observe(float(p.get("sim_s", 0.0)))
             elif name == E.REDISTRIBUTION_FALLBACK:
                 self._app(p["app"]).redist_fallbacks += 1
             elif name == E.DRAIN_FAILED:
@@ -257,6 +305,14 @@ class TelemetryService:
                     else list(self._apps.values())
                 for tel in targets:
                     tel.commit_cost_stale = True
+
+    def observe_transfer(self, link_name: str, nbytes: int,
+                         sim_s: float) -> None:
+        """SimNIC/MemBus per-transfer observer: feeds the cluster-level
+        peer-hop latency/size histograms (no lock needed — the histograms
+        are internally synchronized and hot-path cheap)."""
+        self._hop_latency_hist.observe(float(sim_s))
+        self._hop_bytes_hist.observe(float(nbytes))
 
     def _record_failure(self, tel: AppTelemetry, t: float) -> None:
         tel.failures += 1
@@ -342,6 +398,8 @@ class TelemetryService:
                 "failures_total": cluster_failures,
                 "events_seen": events_seen,
                 "default_mtbf_s": self.default_mtbf_s,
+                "peer_hop_quantiles": self._hop_latency_hist.as_dict(),
+                "peer_hop_bytes_quantiles": self._hop_bytes_hist.as_dict(),
             },
             "tiers": self.tier_occupancy(),
             "lifecycle": lifecycle,
@@ -358,13 +416,35 @@ class TelemetryService:
         snap = self.snapshot()
         out: List[str] = []
 
+        def _labels(labels: Dict[str, object]) -> str:
+            for k in labels:
+                if not _LABEL_NAME_RE.match(k):
+                    raise ValueError(f"invalid Prometheus label name: {k!r}")
+            lbl = ",".join(f'{k}="{_escape_label_value(v)}"'
+                           for k, v in labels.items())
+            return "{" + lbl + "}" if lbl else ""
+
         def metric(name: str, mtype: str, help_: str, rows) -> None:
+            if not _METRIC_NAME_RE.match(name):
+                raise ValueError(f"invalid Prometheus metric name: {name!r}")
             out.append(f"# HELP {name} {help_}")
             out.append(f"# TYPE {name} {mtype}")
             for labels, value in rows:
-                lbl = ",".join(f'{k}="{v}"' for k, v in labels.items())
-                lbl = "{" + lbl + "}" if lbl else ""
-                out.append(f"{name}{lbl} {value:.9g}")
+                out.append(f"{name}{_labels(labels)} {value:.9g}")
+
+        def histogram(name: str, help_: str, rows) -> None:
+            """``rows`` is ``[(labels, LogHistogram), ...]``: emit the
+            conventional ``_bucket``/``_sum``/``_count`` series."""
+            if not _METRIC_NAME_RE.match(name):
+                raise ValueError(f"invalid Prometheus metric name: {name!r}")
+            out.append(f"# HELP {name} {help_}")
+            out.append(f"# TYPE {name} histogram")
+            for labels, hist in rows:
+                for le, cum in hist.prometheus_rows():
+                    out.append(f"{name}_bucket"
+                               f"{_labels({**labels, 'le': le})} {cum:.9g}")
+                out.append(f"{name}_sum{_labels(labels)} {hist.sum:.9g}")
+                out.append(f"{name}_count{_labels(labels)} {hist.count}")
 
         apps = snap["per_app"]
         metric("icheck_commits_total", "counter",
@@ -488,4 +568,35 @@ class TelemetryService:
                    "Object-store requests issued",
                    [({"op": "put"}, l3["put_requests"]),
                     ({"op": "get"}, l3["get_requests"])])
+        # latency/size distributions: fixed log2 buckets (stable ``le``
+        # labels), p50/p95/p99 derivable by any scraper
+        with self._lock:
+            app_hists = {a: t for a, t in self._apps.items()}
+            hop_lat, hop_bytes = self._hop_latency_hist, self._hop_bytes_hist
+        histogram("icheck_commit_seconds",
+                  "Commit latency distribution (sim seconds)",
+                  [({"app": a}, t.commit_latency_hist)
+                   for a, t in app_hists.items()])
+        histogram("icheck_commit_size_bytes",
+                  "Committed checkpoint size distribution",
+                  [({"app": a}, t.commit_bytes_hist)
+                   for a, t in app_hists.items()])
+        histogram("icheck_drain_seconds",
+                  "L1->L2 drain duration distribution (sim seconds)",
+                  [({"app": a}, t.drain_hist)
+                   for a, t in app_hists.items()])
+        histogram("icheck_restore_seconds",
+                  "Restore duration distribution (sim seconds)",
+                  [({"app": a}, t.restore_hist)
+                   for a, t in app_hists.items()])
+        histogram("icheck_stall_seconds",
+                  "Zero-stall cutover stall distribution (sim seconds)",
+                  [({"app": a}, t.stall_hist)
+                   for a, t in app_hists.items()])
+        histogram("icheck_peer_hop_seconds",
+                  "Per-transfer NIC/MemBus hop duration (sim seconds)",
+                  [({}, hop_lat)])
+        histogram("icheck_peer_hop_bytes",
+                  "Per-transfer NIC/MemBus hop size",
+                  [({}, hop_bytes)])
         return "\n".join(out) + "\n"

@@ -62,6 +62,9 @@ class SimNIC:
         self._active = 0
         self._bytes_total = 0
         self._busy_sim_seconds = 0.0
+        # optional per-transfer observer ``(link_name, nbytes, sim_s)`` —
+        # the telemetry service's per-hop latency/size histograms
+        self.on_transfer = None
         # fault injection
         self._slowdown = 1.0
         self._down = False
@@ -109,6 +112,12 @@ class SimNIC:
             with self._lock:
                 self._bytes_total += nbytes
                 self._busy_sim_seconds += dur
+            observer = self.on_transfer
+            if observer is not None:
+                try:
+                    observer(self.name, nbytes, dur)
+                except Exception:  # noqa: BLE001 - observers must not break us
+                    pass
             return dur
         finally:
             with self._lock:

@@ -39,6 +39,7 @@ from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
 
 import numpy as np
 
+from ..obs import trace_id_for
 from . import events as _events
 from ..kernels.ckpt_codec.blocks import (BLOCK as _Q8_BLOCK, dequantize_np,
                                          quantize_np, to_blocks_np)
@@ -1402,6 +1403,15 @@ class TierPipeline:
                 raise last_err if last_err is not None \
                     else CapacityError("no tiers")
         if spilled_into is not None:
+            # spills happen under the putting agent's span (same thread), so
+            # the span lands inside the trace tree; the id re-derivation
+            # keeps even bare-pipeline spills attached to their checkpoint
+            tracer = getattr(self.bus, "tracer", None)
+            if tracer is not None:
+                tracer.record("shard_spill",
+                              trace_id_for(key.app_id, key.ckpt_id),
+                              f"tiers/{self.node_id}", tier=spilled_into,
+                              nbytes=len(payload))
             self._publish(_events.SHARD_SPILLED, node=self.node_id,
                           tier=spilled_into, key=str(key),
                           nbytes=len(payload))

@@ -196,8 +196,12 @@ def test_prometheus_output_parses():
     for line in text.splitlines():
         if line.startswith("# TYPE"):
             _, _, name, mtype = line.split()
-            assert mtype in ("gauge", "counter")
+            assert mtype in ("gauge", "counter", "histogram")
             names_typed.add(name)
+            if mtype == "histogram":
+                # histograms expose conventional suffixed series
+                names_typed.update({f"{name}_bucket", f"{name}_sum",
+                                    f"{name}_count"})
         elif line.startswith("# HELP"):
             continue
         else:
