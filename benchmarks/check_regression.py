@@ -27,7 +27,7 @@ DEFAULT_THRESHOLD = 0.15
 
 # metrics where a *rise* is the regression (latencies/stalls): the delta
 # comparison is flipped for these
-LOWER_IS_BETTER = {"b3_stall_s"}
+LOWER_IS_BETTER = {"b3_stall_s", "b11_l1_ratio", "b11_rebuild_s"}
 
 
 def load(path: str) -> dict:

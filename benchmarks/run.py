@@ -17,9 +17,9 @@ import sys
 import time
 import traceback
 
-from . import (bench_async_overlap, bench_codec, bench_delta, bench_multiapp,
-               bench_redistribution, bench_restart, bench_serving,
-               bench_tiering, bench_transfer, roofline)
+from . import (bench_async_overlap, bench_codec, bench_delta, bench_erasure,
+               bench_multiapp, bench_redistribution, bench_restart,
+               bench_serving, bench_tiering, bench_transfer, roofline)
 
 ALL = {
     "b1": ("agent-count transfer knee", bench_transfer.run),
@@ -34,6 +34,7 @@ ALL = {
     "b8": ("serving decode", bench_serving.run),
     "b9": ("storage lifecycle tiering", bench_tiering.run),
     "b10": ("incremental delta checkpointing", bench_delta.run),
+    "b11": ("erasure-coded durability", bench_erasure.run),
 }
 
 SMOKE = {
@@ -45,6 +46,7 @@ SMOKE = {
     "b10": ("incremental delta checkpointing (smoke)",
             bench_delta.run_smoke),
     "b5t": ("tracing overhead (smoke)", bench_restart.run_trace_smoke),
+    "b11": ("erasure-coded durability (smoke)", bench_erasure.run_smoke),
 }
 
 SMOKE_JSON = "BENCH_smoke.json"
@@ -99,6 +101,11 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b10_delta_highchurn_vs_q8"] = (
             high["q8"]["steady_wire_bytes"]
             / max(high["q8-delta"]["steady_wire_bytes"], 1))
+    b11 = results.get("b11")
+    if b11:
+        metrics["b11_ec_commit_rate_Bps"] = b11["ec"]["commit_rate_Bps"]
+        metrics["b11_l1_ratio"] = b11["ec"]["l1_ratio"]
+        metrics["b11_rebuild_s"] = b11["rebuild"]["rebuild_sim_s"]
     b5t = results.get("b5t")
     if b5t:
         # ~1.0 by construction (spans observe the sim clock, never load

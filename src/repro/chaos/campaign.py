@@ -168,6 +168,26 @@ class ChaosInjector:
             if agent is not None:
                 self.fault.kill_agent(agent.agent_id)
                 detail = agent.agent_id
+        elif kind == "multi_agent_death":
+            # kill `count` agents of one app in the same tick — spanning
+            # distinct nodes first, so several failure domains lose their
+            # fragment of the same erasure stripe *simultaneously*
+            app = self.apps[int(action.target.get("app", 0)) % len(self.apps)]
+            agents = self.ctl.agents_for(app)
+            count = max(2, int(params.get("count", 2)))
+            victims, seen_nodes = [], set()
+            for a in agents:                       # one per node first
+                if a.node_id not in seen_nodes:
+                    victims.append(a)
+                    seen_nodes.add(a.node_id)
+            for a in agents:                       # then fill up
+                if a not in victims:
+                    victims.append(a)
+            victims = victims[:count]
+            for a in victims:
+                self.fault.kill_agent(a.agent_id)
+            if victims:
+                detail = ",".join(a.agent_id for a in victims)
         elif kind == "node_loss":
             node_id = self.node_ids[int(action.target.get("node", 0))
                                     % len(self.node_ids)]
@@ -450,8 +470,12 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
         ctl = cluster.controller
         rng_a = np.random.default_rng(seed + 101)
         arr_a = rng_a.normal(size=4096).astype(np.float32)
+        # alpha runs erasure-coded L1 durability (k=4, m=1): every commit
+        # scatters 4 data + 1 parity fragments across failure domains, so
+        # the multi_agent_death action class and the node losses exercise
+        # the peer-rebuild path instead of whole-shard re-replication
         alpha = ICheckClient("alpha", ctl, ranks=4, codec="raw",
-                             replication=2).init(
+                             durability="ec", ec_k=4, ec_m=1).init(
                                  ckpt_bytes_estimate=arr_a.nbytes)
         alpha.add_adapt("state", arr_a.shape, "float32")
         alpha_parts = block_parts(arr_a, 4)

@@ -287,6 +287,39 @@ def check_telemetry_matches_ground_truth(ev) -> Tuple[Status, str]:
     return Status.OK, "telemetry agrees with audit log and harness counts"
 
 
+@invariant("ec_multi_death_durability")
+def check_ec_multi_death_durability(ev) -> Tuple[Status, str]:
+    """m simultaneous agent deaths never cost the erasure-coded app a
+    restorable checkpoint: whenever a ``multi_agent_death`` action fired,
+    every compared restore of the EC app stayed bit-identical to the numpy
+    oracle, and the campaign actually committed erasure stripes (a campaign
+    that never struck the EC path must not read as green coverage)."""
+    deaths = [r for r in ev.records
+              if r["event"] == E.CHAOS_INJECTED
+              and r.get("kind") == "multi_agent_death"
+              and r.get("detail") != "skipped (target gone)"]
+    if not deaths:
+        return Status.OK, "no multi_agent_death action this seed"
+    ec = ev.telemetry_snapshot.get("ec", {})
+    if not ec.get("stripes_committed"):
+        return Status.WARN, (f"{len(deaths)} multi-death action(s) fired "
+                             f"but no erasure stripe was ever committed "
+                             f"(vacuous)")
+    alpha = [c for c in ev.restore_checks if c["app"] == "alpha"]
+    bad = [c for c in alpha if not c["ok"]]
+    if bad:
+        return Status.CRIT, (
+            f"{len(bad)} corrupt EC-app restore(s) after {len(deaths)} "
+            f"multi-death action(s); first: ckpt={bad[0]['ckpt']} "
+            f"{bad[0]['detail']}")
+    compared = [c for c in alpha if c["ok"] and not c.get("skipped")]
+    if not compared:
+        return Status.WARN, ("multi_agent_death fired but no EC-app "
+                             "restore was ever compared")
+    return Status.OK, (f"{len(deaths)} multi-death action(s) survived; "
+                       f"{len(compared)} EC-app restore(s) bit-identical")
+
+
 @invariant("no_leaked_window_state")
 def check_no_leaked_window_state(ev) -> Tuple[Status, str]:
     """After every overlap window has closed: no ``.redist`` scratch

@@ -24,6 +24,7 @@ import numpy as np
 # and its params carry the concrete fault to fire there.
 KINDS = (
     "agent_death",
+    "multi_agent_death",
     "node_loss",
     "nic_degrade",
     "nic_down",
@@ -162,6 +163,13 @@ def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
         if kind == "agent_death":
             target = {"app": int(rng.integers(0, n_apps)),
                       "agent_slot": int(rng.integers(0, 4))}
+        elif kind == "multi_agent_death":
+            # m *simultaneous* agent deaths — the erasure-coded app's
+            # survival envelope (spanning nodes, so fragments of one
+            # stripe vanish from several failure domains at once)
+            target = {"app": int(rng.integers(0, n_apps)),
+                      "agent_slot": int(rng.integers(0, 4))}
+            params = {"count": float(rng.integers(2, 4))}
         elif kind == "node_loss":
             target = {"node": node}
         elif kind == "nic_degrade":

@@ -27,8 +27,10 @@ import numpy as np
 from ..obs import trace_id_for
 from .simnet import EWMA, FaultInjector, MemBus, SimNIC
 from .tiers import (PFSTier, SliceState, TierPipeline, decode_payload,
-                    decode_slice_frames, replay_slice_frames, slice_payload)
-from .types import AgentId, ICheckError, NodeId, ShardKey, TransferRecord
+                    decode_slice_frames, ec_decode_shard, ec_encode_shard,
+                    ec_parse_fragment, replay_slice_frames, slice_payload)
+from .types import (AgentId, ICheckError, IntegrityError, NodeId, RestoreError,
+                    ShardKey, TransferRecord)
 
 
 class AgentDead(ConnectionError):
@@ -69,6 +71,28 @@ class AssembleSpec:
     nvals: int
     fetches: Tuple[SliceFetch, ...]
     keep_state: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildSpec:
+    """Peer rebuild of erasure-coded fragments lost with an agent/node.
+
+    This agent gathers any ``k`` surviving fragments of one stripe from the
+    ``sources`` (whole-fragment peer reads over MemBus/NIC — a dead or
+    partitioned source is skipped, not fatal), GF-decodes the payload,
+    re-derives the ``want`` fragments and hosts them in its own L1.  When
+    fewer than ``k`` peer fragments survive, the ``fallback`` providers
+    (PFS/L3, holding the *full* shard under ``base_key``) supply the payload
+    instead, so a rebuild racing further failures degrades to a lower tier
+    rather than wedging.
+    """
+
+    base_key: ShardKey           # replica-0 identity of the logical shard
+    k: int
+    m: int
+    want: Tuple[int, ...]        # ShardKey.replica values to regenerate here
+    sources: Tuple[Tuple["Agent", ShardKey], ...]
+    fallback: Tuple[Tuple[object, ShardKey], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +216,28 @@ class Agent:
             self.peer_bytes_out += len(blob)
         return blob
 
+    def peer_read_raw(self, key: ShardKey, requester_node: NodeId) -> bytes:
+        """Serve one stored blob whole (erasure-fragment rebuild path).
+
+        The framed-fragment twin of :meth:`peer_read`: no codec slicing —
+        fragments are opaque stripe rows — but the same fabric accounting
+        (MemBus intra-node, NIC cross-node) and the same mid-transfer death
+        semantics."""
+        self._check_alive()
+        if self.fault.partitioned(self.node_id, requester_node):
+            raise ConnectionError(
+                f"partition between {self.node_id} and {requester_node}")
+        blob = self.store.get(key, promote=False)
+        if requester_node == self.node_id and self.membus is not None:
+            self.membus.transfer(len(blob))
+        else:
+            self.nic.transfer(len(blob))
+        self._check_alive()                  # may have died mid-transfer
+        with self._lock:
+            self.peer_reads += 1
+            self.peer_bytes_out += len(blob)
+        return blob
+
     def clear_peer_cache(self) -> None:
         """Release the decoded-payload memo (end of an adapt window) — the
         decoded shards must not outlive the redistribution that needed
@@ -223,6 +269,16 @@ class Agent:
     def drop_assembly_state(self, key: ShardKey) -> None:
         with self._lock:
             self._assembly_state.pop(key, None)
+
+    def rebuild(self, spec: RebuildSpec) -> Future:
+        """Regenerate lost erasure fragments onto this agent (asynchronous).
+        Resolves to ``{restored, nbytes, reads, source, degraded}``
+        accounting; raises ``RestoreError`` when neither k peer fragments
+        nor a fallback tier can produce the payload."""
+        fut: Future = Future()
+        self._inbox.put(_Op("rebuild", payload=spec, future=fut,
+                            trace=self._cur_trace()))
+        return fut
 
     # ------------------------------------------------------------------ L2
     def drain(self, keys: List[ShardKey], pfs: PFSTier,
@@ -284,6 +340,8 @@ class Agent:
         key = op.key
         if op.kind in ("assemble", "replay"):
             key = op.payload.out_key
+        elif op.kind == "rebuild":
+            key = op.payload.base_key
         elif isinstance(key, list):
             key = key[0] if key else None
         if key is None:
@@ -325,6 +383,8 @@ class Agent:
             op.future.set_result(self._do_assemble(op.payload))
         elif op.kind == "replay":
             op.future.set_result(self._do_replay(op.payload))
+        elif op.kind == "rebuild":
+            op.future.set_result(self._do_rebuild(op.payload))
 
     def _do_put(self, op: _Op) -> TransferRecord:
         self._check_alive()
@@ -443,6 +503,68 @@ class Agent:
             self._assembly_state[spec.out_key] = states
         return {"key": spec.out_key, "nbytes": patch_bytes, "reads": reads,
                 "patches": patches}
+
+    def _do_rebuild(self, spec: RebuildSpec) -> dict:
+        """Regenerate lost erasure fragments from surviving peers (or a
+        lower tier) and host them in this agent's L1.
+
+        Runs on this agent's worker thread like :meth:`_do_assemble`; the
+        peer reads are direct calls into the source agents, so a source
+        dying mid-gather raises on *its* side and is skipped here — the
+        rebuild keeps draining the remaining sources and only falls back to
+        L2/L3 when fewer than k fragments survive."""
+        self._check_alive()
+        frags: Dict[int, bytes] = {}
+        reads: List[dict] = []
+        for provider, key in spec.sources:
+            if len(frags) >= spec.k:
+                break
+            try:
+                blob = provider.peer_read_raw(key, self.node_id)
+                _, _, idx, _, _, _ = ec_parse_fragment(blob)
+            except (ConnectionError, KeyError, IntegrityError, ICheckError):
+                continue        # source died / dropped / corrupt: next one
+            frags[idx] = blob
+            reads.append({
+                "node": provider.node_id, "bytes": len(blob),
+                "kind": "intra" if provider.node_id == self.node_id
+                else "cross"})
+        source = "peer"
+        payload = None
+        if len(frags) >= spec.k:
+            payload = ec_decode_shard(list(frags.values()))
+        else:
+            for provider, key in spec.fallback:
+                try:
+                    payload = provider.read_shard(key)
+                except (KeyError, ConnectionError, OSError, ICheckError):
+                    continue
+                source = getattr(provider, "name", "tier")
+                reads.append({"node": source, "bytes": len(payload),
+                              "kind": "tier"})
+                break
+        if payload is None:
+            raise RestoreError(
+                f"stripe {spec.base_key} unrecoverable: {len(frags)} of "
+                f"{spec.k} fragments survive and no lower tier has it")
+        # degraded = the decode had to do field math (a data row was among
+        # the casualties), as opposed to gather-k-and-concat
+        degraded = (source != "peer"
+                    or sorted(frags)[:spec.k] != list(range(spec.k)))
+        stripe = dict(ec_encode_shard(payload, spec.k, spec.m))
+        self._check_alive()
+        stored = 0
+        restored = []
+        for rep in spec.want:
+            blob = stripe[rep]
+            self.store.put(dataclasses.replace(spec.base_key, replica=rep),
+                           blob)
+            stored += len(blob)
+            restored.append(rep)
+        with self._lock:
+            self.bytes_in += stored
+        return {"key": spec.base_key, "restored": restored, "nbytes": stored,
+                "reads": reads, "source": source, "degraded": degraded}
 
     def _do_drain(self, op: _Op) -> dict:
         self._check_alive()

@@ -33,9 +33,9 @@ from . import plan as planlib
 from ..obs import trace_id_for
 from .agent import Agent, AgentDead
 from .controller import Controller
-from .tiers import (EncodedRegion, crc32, decode_payload, encode_delta_region,
-                    encode_payload, q8_chain_decode, q8_repack_key,
-                    resolve_codec)
+from .tiers import (EncodedRegion, crc32, decode_payload, ec_encode_shard,
+                    encode_delta_region, encode_payload, q8_chain_decode,
+                    q8_repack_key, resolve_codec)
 from .types import (AppId, CapacityError, CheckpointMeta, ICheckError,
                     PartitionDesc, PartitionScheme, RegionMeta, RestoreError,
                     ShardInfo, ShardKey)
@@ -46,11 +46,16 @@ class CommitHandle:
 
     def __init__(self, client: "ICheckClient", meta: CheckpointMeta,
                  puts: List[Tuple[ShardKey, bytes, Agent]], drain: bool,
-                 trace=None):
+                 trace=None, logical=None):
         self.client = client
         self.meta = meta
         self._puts = puts
         self._drain = drain
+        # erasure-coded commits: base ShardKey -> (payload nbytes, crc32) of
+        # the *logical* shard each fragment stripe encodes — recorded with
+        # the catalog once every fragment is acked (fragments themselves
+        # never appear in meta.shards; completeness stays base-key counted)
+        self._logical = logical or {}
         # root TraceContext of this checkpoint's trace tree, captured on the
         # application thread and reinstated on the completer thread so the
         # agent puts / finalize / COMMIT_DONE all attach to the commit root
@@ -85,6 +90,7 @@ class CommitHandle:
         t0 = ctl.clock.now()
         per_node_sim: Dict[str, float] = {}
         try:
+            frag_agent: Dict[ShardKey, str] = {}
             inflight = [(key, payload, agent, agent.put(key, payload))
                         for key, payload, agent in self._puts]
             for key, payload, agent, fut in inflight:
@@ -98,6 +104,14 @@ class CommitHandle:
                     ctl.record_shard(self.meta, ShardInfo(
                         key=key, nbytes=rec.nbytes, crc32=crc32(payload),
                         agent_id=rec.agent_id))
+                elif key.base() in self._logical:
+                    frag_agent.setdefault(key.base(), rec.agent_id)
+            # one base-key ShardInfo per erasure stripe, carrying the
+            # *logical* payload's size and crc (restores verify against it)
+            for base, (nbytes, crc) in self._logical.items():
+                ctl.record_shard(self.meta, ShardInfo(
+                    key=base, nbytes=nbytes, crc32=crc,
+                    agent_id=frag_agent.get(base, "")))
             # commit duration ≈ busiest NIC's total transfer time
             self.sim_duration = max(per_node_sim.values(), default=0.0)
             ctl.tracer.record(
@@ -106,10 +120,12 @@ class CommitHandle:
                 dur_s=self.sim_duration, retries=self.retries)
             ctl.finalize_checkpoint(self.meta, drain=self._drain)
             self.client._last_commit_sim_s = self.sim_duration
+            logical_bytes = (
+                sum(n for n, _ in self._logical.values())
+                + sum(len(p) for k, p, _ in self._puts if k.replica == 0))
             ctl.bus.publish(E.COMMIT_DONE, app=self.meta.app_id,
                             ckpt=self.meta.ckpt_id, step=self.meta.step,
-                            bytes=sum(len(p) for k, p, _ in self._puts
-                                      if k.replica == 0),
+                            bytes=logical_bytes,
                             sim_s=self.sim_duration, retries=self.retries)
         except BaseException as e:  # noqa: BLE001
             self._error = e
@@ -335,11 +351,26 @@ class ICheckClient:
     def __init__(self, app_id: AppId, controller: Controller, ranks: int = 1,
                  replication: int = 1, codec: str = "raw",
                  ckpt_interval_s: float = 60.0,
-                 keyframe_every: Optional[int] = None):
+                 keyframe_every: Optional[int] = None,
+                 durability: str = "replicate", ec_k: int = 4, ec_m: int = 1):
+        if durability not in ("replicate", "ec"):
+            raise ICheckError(
+                f"durability must be 'replicate' or 'ec', got {durability!r}")
         self.app_id = app_id
         self.controller = controller
         self.ranks = ranks
         self.replication = max(1, replication)
+        # erasure-coded L1 durability: each committed shard is scattered as
+        # k data + m parity fragments with node anti-affinity instead of
+        # whole-shard copies — any m losses survive at (k+m)/k memory.
+        # Replication is forced to 1: the stripe IS the redundancy.
+        self.ec: Optional[Tuple[int, int]] = None
+        if durability == "ec":
+            if ec_k < 1 or ec_m < 1:
+                raise ICheckError(f"ec needs k >= 1 and m >= 1, got "
+                                  f"k={ec_k} m={ec_m}")
+            self.ec = (int(ec_k), int(ec_m))
+            self.replication = 1
         # q8-delta keyframe cadence override (None = controller default):
         # a full q8 keyframe every K commits bounds restart replay length
         self.keyframe_every = keyframe_every
@@ -372,7 +403,8 @@ class ICheckClient:
         """icheck_init(): register with the controller, connect to agents."""
         self.agents = self.controller.register_app(
             self.app_id, self.ranks, ckpt_bytes_estimate=ckpt_bytes_estimate,
-            ckpt_interval_s=self.ckpt_interval_s, replication=self.replication)
+            ckpt_interval_s=self.ckpt_interval_s, replication=self.replication,
+            ec=self.ec)
         if self.keyframe_every is not None:
             self.controller.set_delta_keyframe_every(self.app_id,
                                                      self.keyframe_every)
@@ -521,13 +553,40 @@ class ICheckClient:
                           encoded_bytes=stats["enc"])
 
         puts: List[Tuple[ShardKey, bytes, Agent]] = []
-        for name, blobs in payloads.items():
-            for part, payload in blobs.items():
-                for rep in range(self.replication):
-                    key = ShardKey(self.app_id, ckpt.ckpt_id, name, part, rep)
-                    agent = agents[(self._rr + rep) % len(agents)]
-                    puts.append((key, payload, agent))
-                self._rr += 1
+        logical: Dict[ShardKey, Tuple[int, int]] = {}
+        if self.ec:
+            k, m = self.ec
+            ec_raw = 0
+            ec_wire = 0
+            for name, blobs in payloads.items():
+                for part, payload in blobs.items():
+                    frags = ec_encode_shard(payload, k, m)
+                    # failure-domain anti-affinity: fragments of one stripe
+                    # interleave across nodes, so any m agent/node losses
+                    # leave >= k fragments standing
+                    spread = ctl.placement.stripe_agents(
+                        self.app_id, len(frags), rotation=self._rr)
+                    for (rep, blob), agent in zip(frags, spread):
+                        key = ShardKey(self.app_id, ckpt.ckpt_id, name,
+                                       part, rep)
+                        puts.append((key, blob, agent))
+                    base = ShardKey(self.app_id, ckpt.ckpt_id, name, part)
+                    logical[base] = (len(payload), crc32(payload))
+                    ec_raw += len(payload)
+                    ec_wire += sum(len(b) for _, b in frags)
+                    self._rr += 1
+            ctl.bus.publish(E.EC_STRIPE_COMMITTED, app=self.app_id,
+                            ckpt=ckpt.ckpt_id, k=k, m=m, stripes=len(logical),
+                            logical_bytes=ec_raw, fragment_bytes=ec_wire)
+        else:
+            for name, blobs in payloads.items():
+                for part, payload in blobs.items():
+                    for rep in range(self.replication):
+                        key = ShardKey(self.app_id, ckpt.ckpt_id, name, part,
+                                       rep)
+                        agent = agents[(self._rr + rep) % len(agents)]
+                        puts.append((key, payload, agent))
+                    self._rr += 1
         if stats["publish"]:
             ctl.bus.publish(E.CKPT_DELTA_COMMITTED, app=self.app_id,
                             ckpt=ckpt.ckpt_id, raw_bytes=stats["raw"],
@@ -535,7 +594,8 @@ class ICheckClient:
                             key_frames=stats["key"],
                             delta_frames=stats["delta"],
                             encode_s=stats["encode_s"])
-        handle = CommitHandle(self, ckpt, puts, drain=drain, trace=root_ctx)
+        handle = CommitHandle(self, ckpt, puts, drain=drain, trace=root_ctx,
+                              logical=logical)
         self._commit_q.put(handle)
         if blocking:
             handle.wait(timeout=120)

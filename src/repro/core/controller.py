@@ -196,8 +196,12 @@ class Controller:
     # ================================================================== apps
     def register_app(self, app_id: AppId, ranks: int,
                      ckpt_bytes_estimate: int = 0, ckpt_interval_s: float = 60.0,
-                     replication: int = 1) -> List[Agent]:
-        """Paper §II steps 1-6: register, place agents, hand back handles."""
+                     replication: int = 1, ec=None) -> List[Agent]:
+        """Paper §II steps 1-6: register, place agents, hand back handles.
+
+        ``ec=(k, m)`` opts the app into erasure-coded L1 durability: each
+        committed shard is scattered as k data + m parity fragments instead
+        of ``replication`` whole copies."""
         with self._lock:
             if app_id in self._apps:
                 # reconnect (restart path): reuse the existing record
@@ -208,7 +212,8 @@ class Controller:
             app = AppRecord(app_id=app_id, ranks=ranks,
                             ckpt_bytes_estimate=ckpt_bytes_estimate,
                             ckpt_interval_s=ckpt_interval_s,
-                            replication=replication)
+                            replication=replication,
+                            ec=tuple(ec) if ec else None)
             self._apps[app_id] = app
             self._regions[app_id] = {}
             self.catalog.open_app(app_id)
@@ -218,6 +223,11 @@ class Controller:
         with self._lock:
             app.agents = [a.agent_id for a in agents]
             app.status = AppStatus.CONNECTED
+        if app.ec is not None:
+            # scatter targets must span failure domains, or a single node
+            # death takes more than m fragments of every stripe with it
+            agents = self.placement.ensure_failure_domains(
+                app, sum(app.ec))
         self.bus.publish(APP_REGISTERED, app=app_id,
                          agents=[a.agent_id for a in agents])
         return agents

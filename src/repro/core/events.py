@@ -35,6 +35,30 @@ AGENTS_SCALED_UP = "agents_scaled_up"
 AGENTS_SCALED_DOWN = "agents_scaled_down"
 AGENT_FAILED = "agent_failed"
 AGENT_REPLACED = "agent_replaced"
+# the HealthMonitor's poll loop raised: the monitor survives (next tick
+# retries) but a repeatedly-failing check means failures are going unseen —
+# payload carries the repr'd error, and the obs flight ring is dumped so a
+# wedged monitor is diagnosable instead of invisible
+MONITOR_ERROR = "monitor_error"
+
+# -- erasure-coded L1 durability (k data + m parity fragments) --------------
+# a commit finished scattering one logical shard as an erasure-coded stripe;
+# payload carries k/m, the logical bytes and the framed fragment bytes (the
+# TelemetryService's EC overhead signal)
+EC_STRIPE_COMMITTED = "ec_stripe_committed"
+# the HealthMonitor launched a peer rebuild for fragments lost with an
+# agent/node: a surviving agent gathers any k fragments over MemBus/NIC,
+# GF-decodes the missing ones and re-hosts them
+EC_REBUILD_STARTED = "ec_rebuild_started"
+# the rebuild landed the regenerated fragment(s); payload carries the
+# source ("peer" or the L2/L3 provider fallback), bytes moved and sim s
+EC_REBUILD_DONE = "ec_rebuild_done"
+# fewer than k fragments survive and no lower tier holds the shard: the
+# stripe is lost and the checkpoint is marked failed
+EC_REBUILD_FAILED = "ec_rebuild_failed"
+# a read had to GF-decode around missing data fragments instead of the
+# healthy gather-and-concat path (durability worked, but latency paid)
+EC_DEGRADED_READ = "ec_degraded_read"
 
 CKPT_IN_L1 = "ckpt_in_l1"
 CKPT_IN_L2 = "ckpt_in_l2"

@@ -26,9 +26,10 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 from ...obs import trace_id_for
 from .. import events as E
-from ..tiers import DeltaState
+from ..tiers import (FRAG_DATA0, FRAG_PARITY0, DeltaState, ec_decode_shard,
+                     ec_parse_fragment)
 from ..types import (AppId, CheckpointMeta, CkptId, CkptStatus, ICheckError,
-                     RegionMeta, ShardInfo, ShardKey)
+                     IntegrityError, RegionMeta, ShardInfo, ShardKey)
 
 # any of these may have destroyed (or made unreachable) an L1-only delta
 # frame, or invalidated the codes the application will diff against next:
@@ -333,8 +334,19 @@ class CheckpointCatalog:
         return True
 
     def l1_complete(self, meta: CheckpointMeta) -> bool:
+        ec = self.ec_geometry(meta.app_id)
         for name, region in meta.regions.items():
             for part in range(region.partition.num_parts):
+                if ec is not None:
+                    k = ec[0]
+                    alive = 0
+                    for _ in self.fragments_with(meta.app_id, meta.ckpt_id,
+                                                 name, part):
+                        alive += 1
+                        if alive >= k:
+                            break
+                    if alive >= k:       # any k fragments reconstruct it
+                        continue
                 if next(self.agents_with(meta.app_id, meta.ckpt_id, name,
                                          part), None) is None:
                     return False
@@ -354,15 +366,55 @@ class CheckpointCatalog:
                     if agent.has(k):
                         yield agent, k
 
+    def ec_geometry(self, app_id: AppId) -> Optional[Tuple[int, int]]:
+        """The app's (k, m) stripe geometry, or None when not erasure-coded."""
+        with self.ctl._lock:
+            app = self.ctl._apps.get(app_id)
+            return app.ec if app is not None else None
+
+    def fragments_with(self, app_id: AppId, ckpt_id: CkptId, region: str,
+                       part: int) -> Iterator:
+        """Live (agent, key) pairs holding erasure fragments of the shard.
+
+        One (agent, key) per *distinct* fragment index — a fragment hosted
+        twice (e.g. rebuilt while its original survived a partition) counts
+        once, so callers can treat the yield count as surviving-fragment
+        count."""
+        ec = self.ec_geometry(app_id)
+        if ec is None:
+            return
+        k, m = ec
+        reps = [FRAG_DATA0 + i for i in range(k)] + [
+            FRAG_PARITY0 + j for j in range(m)
+        ]
+        seen = set()
+        for mgr in self.ctl.managers():
+            if not mgr.alive():
+                continue
+            for agent in mgr.agents():
+                if not agent.alive():
+                    continue
+                for rep in reps:
+                    if rep in seen:
+                        continue
+                    fk = ShardKey(app_id, ckpt_id, region, part, rep)
+                    if agent.has(fk):
+                        seen.add(rep)
+                        yield agent, fk
+
     def fetch_shard(self, app_id: AppId, ckpt_id: CkptId, region: str,
                     part: int) -> bytes:
         """Restart/redistribution read path: L1 via any *live* holding agent
-        (replicas tried in turn), else L2 (PFS), else L3 (object store)."""
+        (replicas tried in turn, then erasure reconstruction from any k
+        fragments), else L2 (PFS), else L3 (object store)."""
         for agent, k in self.agents_with(app_id, ckpt_id, region, part):
             try:
                 return agent.get(k)
             except (ConnectionError, KeyError):
                 continue                     # race with a failure: next copy
+        payload = self._fetch_from_fragments(app_id, ckpt_id, region, part)
+        if payload is not None:
+            return payload
         key = ShardKey(app_id, ckpt_id, region, part)
         if self.ctl.pfs.has_shard(key):
             return self.ctl.pfs.read_shard(key)
@@ -383,3 +435,30 @@ class CheckpointCatalog:
                                  dst=self.ctl.pfs.name, nbytes=len(payload))
             return payload
         raise KeyError(f"shard {app_id}/{ckpt_id}/{region}/{part} lost")
+
+    def _fetch_from_fragments(self, app_id: AppId, ckpt_id: CkptId,
+                              region: str, part: int) -> Optional[bytes]:
+        """Reconstruct one logical shard from any k surviving L1 fragments
+        (None when the app isn't erasure-coded or fewer than k survive)."""
+        frags: Dict[int, bytes] = {}
+        need: Optional[int] = None
+        for agent, fk in self.fragments_with(app_id, ckpt_id, region, part):
+            try:
+                blob = agent.get(fk)
+                k_geom, _, idx, _, _, _ = ec_parse_fragment(blob)
+            except (ConnectionError, KeyError, IntegrityError):
+                continue                     # race with a failure: next one
+            need = k_geom
+            frags[idx] = blob
+            if len(frags) >= need:
+                break
+        if need is None or len(frags) < need:
+            return None
+        payload = ec_decode_shard(list(frags.values()))
+        if sorted(frags)[:need] != list(range(need)):
+            # a data fragment was among the casualties: the read GF-decoded
+            # around it (durability held, latency paid) — say so
+            self.ctl.bus.publish(E.EC_DEGRADED_READ, app=app_id,
+                                 ckpt=ckpt_id, region=region, part=part,
+                                 have=sorted(frags))
+        return payload

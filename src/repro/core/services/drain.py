@@ -26,7 +26,7 @@ from typing import Callable, List, Tuple
 
 from ...obs import trace_id_for
 from .. import events as E
-from ..types import AppId, CheckpointMeta, CkptStatus
+from ..types import AppId, CheckpointMeta, CkptStatus, ShardKey
 
 
 class DrainOrchestrator:
@@ -182,23 +182,32 @@ class DrainOrchestrator:
             meta.status = CkptStatus.DRAINING
             drained_bytes = sum(s.nbytes for k, s in meta.shards.items()
                                 if k.replica == 0)
-        # each agent drains the shards it holds → parallel PFS writers
-        futures = []
-        for mgr in ctl.managers():
-            if not mgr.alive():
-                continue
-            for agent in mgr.agents():
-                keys = [k for k in agent.store.keys()
-                        if k.app_id == meta.app_id and k.ckpt_id == meta.ckpt_id
-                        and k.replica == 0]
-                if keys:
-                    futures.append(agent.drain(keys, ctl.pfs))
-        ok = True
-        for f in futures:
-            try:
-                f.result(timeout=60)
-            except Exception:
-                ok = False
+        if ctl.catalog.ec_geometry(meta.app_id) is not None:
+            # erasure-coded app: L1 holds only fragments (no replica-0
+            # keys), but the PFS stores *whole* shards so manifests,
+            # completeness probes and cold restarts stay format-identical
+            # to replicated apps — reconstruct each logical shard from any
+            # k fragments and write it down
+            ok = self._drain_ec(meta)
+        else:
+            # each agent drains the shards it holds → parallel PFS writers
+            futures = []
+            for mgr in ctl.managers():
+                if not mgr.alive():
+                    continue
+                for agent in mgr.agents():
+                    keys = [k for k in agent.store.keys()
+                            if k.app_id == meta.app_id
+                            and k.ckpt_id == meta.ckpt_id
+                            and k.replica == 0]
+                    if keys:
+                        futures.append(agent.drain(keys, ctl.pfs))
+            ok = True
+            for f in futures:
+                try:
+                    f.result(timeout=60)
+                except Exception:
+                    ok = False
         if ok and ctl.pfs.checkpoint_complete(meta):
             ctl.pfs.write_manifest(meta)
             with ctl._lock:
@@ -226,6 +235,25 @@ class DrainOrchestrator:
             with self._lock:
                 self._failed += 1
             ctl.bus.publish(E.DRAIN_FAILED, app=meta.app_id, ckpt=meta.ckpt_id)
+
+    def _drain_ec(self, meta: CheckpointMeta) -> bool:
+        """Drain an erasure-coded checkpoint: reconstruct every logical
+        shard from its L1 fragments (any k suffice) and write the full
+        payload to the PFS under the base key."""
+        ctl = self.ctl
+        ok = True
+        for name, region in meta.regions.items():
+            for part in range(region.partition.num_parts):
+                key = ShardKey(meta.app_id, meta.ckpt_id, name, part)
+                if ctl.pfs.has_shard(key):
+                    continue          # a retry after a partial first pass
+                try:
+                    payload = ctl.fetch_shard(meta.app_id, meta.ckpt_id,
+                                              name, part)
+                    ctl.pfs.write_shard(key, payload)
+                except Exception:   # noqa: BLE001 - retried by the caller
+                    ok = False
+        return ok
 
     def gc_l1(self, app_id: AppId) -> None:
         """Keep only the newest ``keep_l1`` durable checkpoints in L1."""

@@ -9,11 +9,13 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import List
+from typing import Dict, List
 
+from ...obs import trace_id_for
 from .. import events as E
-from ..agent import Agent
+from ..agent import Agent, RebuildSpec
 from ..manager import Manager
+from ..tiers import ec_is_fragment
 from ..types import ShardKey
 
 
@@ -45,8 +47,21 @@ class HealthMonitor:
             time.sleep(self.interval)
             try:
                 self.check()
-            except Exception:   # monitor must never die
-                pass
+            except Exception as e:   # noqa: BLE001 - monitor must never die
+                # ...but a silently-wedged monitor means failures go unseen:
+                # surface every poll error and dump the flight ring so the
+                # wedge is diagnosable from the artifacts
+                self._report_error(e)
+
+    def _report_error(self, exc: BaseException) -> None:
+        ctl = self.ctl
+        try:
+            ctl.bus.publish(E.MONITOR_ERROR, error=repr(exc))
+            flight = getattr(ctl, "flight", None)
+            if flight is not None:
+                flight.dump("monitor_error", extra={"error": repr(exc)})
+        except Exception:   # noqa: BLE001 - reporting must not kill the loop
+            pass
 
     def check(self) -> None:
         ctl = self.ctl
@@ -85,20 +100,32 @@ class HealthMonitor:
                 return
         ctl.bus.publish(E.NODE_FAILED, node=node_id)
         mgr.close()
-        # re-replicate every shard that lived there from surviving replicas/L2
+        # erasure-coded stripes get a peer *rebuild* (a surviving agent
+        # regenerates just the lost fragments from any k survivors); whole
+        # shards are re-copied from surviving replicas/L2
         lost: List[ShardKey] = mgr.store.keys()
+        stripes: Dict[ShardKey, List[int]] = {}
         for key in lost:
             base = key.base()
+            if ec_is_fragment(key.replica) \
+                    and ctl.catalog.ec_geometry(base.app_id) is not None:
+                stripes.setdefault(base, []).append(key.replica)
+                continue
             try:
                 payload = ctl.catalog.fetch_shard(base.app_id, base.ckpt_id,
                                                   base.region, base.part)
             except KeyError:
                 ctl.catalog.mark_failed(base.app_id, base.ckpt_id)
                 continue
-            dst = [m for m in ctl.managers() if m.alive()]
-            if dst:
-                d = min(dst, key=lambda m: m.store.used_bytes)
+            # anti-affinity: never land the recovery copy on a node that
+            # already holds a replica of the same shard (that would leave
+            # the durability loss permanent while looking repaired)
+            d = ctl.placement.recovery_destination(base,
+                                                   exclude_nodes=(node_id,))
+            if d is not None:
                 d.store.put(base, payload)
+        for base in sorted(stripes, key=str):
+            self.rebuild_stripe(base, stripes[base])
         # replace the node's agents
         with ctl._lock:
             apps = list(ctl._apps.values())
@@ -119,6 +146,74 @@ class HealthMonitor:
                     with ctl._lock:
                         app.agents.append(na.agent_id)
         ctl.bus.publish(E.NODE_RECOVERED, node=node_id)
+
+    # --------------------------------------------------- erasure rebuilds
+    def rebuild_stripe(self, base: ShardKey, lost_replicas: List[int],
+                       timeout: float = 30.0) -> bool:
+        """Regenerate the lost fragments of one erasure stripe.
+
+        A healthy agent (hosted away from the surviving siblings' nodes)
+        gathers any k fragments over MemBus/NIC, GF-decodes the payload and
+        re-hosts the lost fragments; when fewer than k peers survive, the
+        agent falls back to the PFS/L3 copy of the full shard.  Returns
+        True when the stripe is whole again."""
+        ctl = self.ctl
+        ec = ctl.catalog.ec_geometry(base.app_id)
+        if ec is None:
+            return False
+        k, m = ec
+        want = tuple(sorted(set(lost_replicas)))
+        sources = tuple(ctl.catalog.fragments_with(
+            base.app_id, base.ckpt_id, base.region, base.part))
+        agents = [a for a in ctl.agents_for(base.app_id) if a.alive()]
+        if not agents:
+            ctl.bus.publish(E.EC_REBUILD_FAILED, app=base.app_id,
+                            ckpt=base.ckpt_id, region=base.region,
+                            part=base.part, error="no live agents")
+            self._fail_if_not_durable(base)
+            return False
+        holder_nodes = {a.node_id for a, _ in sources}
+        clean = [a for a in agents if a.node_id not in holder_nodes]
+        host = min(clean or agents, key=lambda a: a.store.used_bytes)
+        fallback = [(ctl.pfs, base)]
+        l3 = getattr(ctl, "l3", None)
+        if l3 is not None:
+            fallback.append((l3, base))
+        spec = RebuildSpec(base_key=base, k=k, m=m, want=want,
+                           sources=sources, fallback=tuple(fallback))
+        ctl.bus.publish(E.EC_REBUILD_STARTED, app=base.app_id,
+                        ckpt=base.ckpt_id, region=base.region,
+                        part=base.part, lost=list(want),
+                        survivors=len(sources), host=host.agent_id)
+        t0 = ctl.clock.now()
+        trace_id = trace_id_for(base.app_id, base.ckpt_id)
+        try:
+            with ctl.tracer.span("ec_rebuild", trace_id, "health/monitor",
+                                 region=base.region, part=base.part,
+                                 lost=len(want)):
+                res = host.rebuild(spec).result(timeout=timeout)
+        except Exception as e:  # noqa: BLE001 - a lost stripe, not a crash
+            ctl.bus.publish(E.EC_REBUILD_FAILED, app=base.app_id,
+                            ckpt=base.ckpt_id, region=base.region,
+                            part=base.part, error=repr(e))
+            self._fail_if_not_durable(base)
+            return False
+        ctl.bus.publish(E.EC_REBUILD_DONE, app=base.app_id,
+                        ckpt=base.ckpt_id, region=base.region,
+                        part=base.part, source=res["source"],
+                        degraded=res["degraded"], bytes=res["nbytes"],
+                        host=host.agent_id,
+                        sim_s=max(ctl.clock.now() - t0, 0.0))
+        return True
+
+    def _fail_if_not_durable(self, base: ShardKey) -> None:
+        """An unrecoverable L1 stripe only fails the checkpoint when no
+        lower tier holds the shard either."""
+        ctl = self.ctl
+        l3 = getattr(ctl, "l3", None)
+        if ctl.pfs.has_shard(base) or (l3 is not None and l3.has_shard(base)):
+            return
+        ctl.catalog.mark_failed(base.app_id, base.ckpt_id)
 
     # ------------------------------------------------ RM plugin interactions
     def on_rm_retake(self, node_id: str) -> None:

@@ -34,6 +34,7 @@ from typing import List, Set, Tuple
 
 from ...obs import trace_id_for
 from .. import events as E
+from ..tiers import ec_is_parity
 from ..types import AppId, CkptId, CkptStatus, ICheckError, ShardKey
 
 # statuses whose shards may be demoted out of L1 (durable copies exist, or
@@ -140,8 +141,11 @@ class StorageLifecycleService:
         return demoted_total
 
     def _cold_first(self, keys: List[ShardKey]) -> List[ShardKey]:
-        """Demotion order: durable checkpoints before merely-L1 ones, oldest
-        checkpoint first within each class; hot (in-flight) shards never."""
+        """Demotion order: erasure *parity* fragments first (pure redundancy
+        — the stripe stays reconstructable from its k data fragments, and a
+        demoted parity is still fetchable from the lower tier), then durable
+        checkpoints before merely-L1 ones, oldest checkpoint first within
+        each class; hot (in-flight) shards never."""
         statuses = {}
         with self.ctl._lock:
             for key in keys:
@@ -155,7 +159,8 @@ class StorageLifecycleService:
 
         def coldness(key: ShardKey):
             durable = statuses[(key.app_id, key.ckpt_id)] in _DURABLE
-            return (0 if durable else 1, key.ckpt_id, key.region, key.part)
+            return (0 if ec_is_parity(key.replica) else 1,
+                    0 if durable else 1, key.ckpt_id, key.region, key.part)
 
         return sorted((k for k in keys if eligible(k)), key=coldness)
 

@@ -32,12 +32,87 @@ class PlacementService:
 
     def ensure_memory(self, app: AppRecord) -> None:
         ctl = self.ctl
-        need = app.ckpt_bytes_estimate * app.replication * max(1, ctl.keep_l1)
+        # (k+m)/k under erasure coding, the replication factor otherwise
+        need = int(app.ckpt_bytes_estimate * app.l1_overhead_factor()
+                   * max(1, ctl.keep_l1))
         guard = 0
         while ctl.total_free_memory() < need and guard < 16:
             if not ctl.request_more_memory():
                 break
             guard += 1
+
+    # ---------------------------------------------- failure-domain spreading
+    def ensure_failure_domains(self, app: AppRecord,
+                               domains: int) -> List[Agent]:
+        """Erasure-coded stripes only survive node loss when the app's
+        agents span enough *nodes* — a stripe scattered over k+m agents on
+        one node dies with that node.  Launch one agent on additional live
+        nodes (freest first) until the app spans ``min(domains, #live
+        nodes)`` distinct failure domains."""
+        ctl = self.ctl
+        used = {a.node_id for a in ctl.agents_for(app.app_id)}
+        guard = 0
+        while len(used) < domains and guard < 16:
+            guard += 1
+            spare = sorted((m for m in ctl.managers()
+                            if m.alive() and m.node_id not in used
+                            and len(m.agents()) < m.spec.max_agents),
+                           key=lambda m: m.store.used_bytes)
+            if not spare:
+                if not ctl.request_more_memory():
+                    break               # RM has nothing left: best effort
+                continue
+            mgr = spare[0]
+            agent = mgr.launch_agent(app.app_id)
+            with ctl._lock:
+                app.agents.append(agent.agent_id)
+            used.add(mgr.node_id)
+        return ctl.agents_for(app.app_id)
+
+    def stripe_agents(self, app_id: AppId, n: int,
+                      rotation: int = 0) -> List[Agent]:
+        """``n`` agents for one stripe (or replica set) with failure-domain
+        anti-affinity: interleave across nodes so the first ``n`` picks land
+        on ``min(n, #nodes)`` distinct nodes — losing any one node costs at
+        most ``ceil(n / #nodes)`` fragments.  ``rotation`` rotates the node
+        order so consecutive stripes don't all start on the same node."""
+        agents = self.ctl.agents_for(app_id)
+        if not agents:
+            return []
+        by_node = {}
+        for a in agents:
+            by_node.setdefault(a.node_id, []).append(a)
+        nodes = sorted(by_node)
+        r = rotation % len(nodes)
+        nodes = nodes[r:] + nodes[:r]
+        order: List[Agent] = []
+        depth = 0
+        while len(order) < len(agents):
+            for node in nodes:
+                lane = by_node[node]
+                if depth < len(lane):
+                    order.append(lane[depth])
+            depth += 1
+        return [order[i % len(order)] for i in range(n)]
+
+    def recovery_destination(self, base_key, exclude_nodes=()):
+        """Where a recovered copy of ``base_key`` should land: the freest
+        *live* node that does not already hold any replica or fragment of
+        the same logical shard (re-copying onto a node that already has one
+        silently voids durability).  Falls back to the freest live node
+        when every survivor already holds a copy."""
+        ctl = self.ctl
+        base = base_key.base()
+        holders = set(exclude_nodes)
+        live = [m for m in ctl.managers() if m.alive()]
+        for mgr in live:
+            if any(k.base() == base for k in mgr.store.keys()):
+                holders.add(mgr.node_id)
+        clean = [m for m in live if m.node_id not in holders]
+        pool = clean or live
+        if not pool:
+            return None
+        return min(pool, key=lambda m: m.store.used_bytes)
 
     def handle_capacity_pressure(self, app_id: AppId) -> List[Agent]:
         """A commit hit a full node (paper §III-A: "when iCheck runs out of

@@ -58,6 +58,11 @@ CLUSTER_FAILURE_EVENTS = (E.NODE_FAILED, E.AGENT_FAILED)
 # expiries)
 LIFECYCLE_EVENTS = (E.SHARD_DEMOTED, E.DEMOTE_FAILED, E.WATERMARK_CROSSED,
                     E.CKPT_IN_L3, E.CKPT_EXPIRED, E.L3_UPLOAD_FAILED)
+# erasure-coded durability events, counted cluster-wide (stripe commits,
+# peer rebuilds after failures, degraded reads) plus the health monitor's
+# own error channel
+EC_EVENTS = (E.EC_STRIPE_COMMITTED, E.EC_REBUILD_STARTED, E.EC_REBUILD_DONE,
+             E.EC_REBUILD_FAILED, E.EC_DEGRADED_READ, E.MONITOR_ERROR)
 
 
 class AppTelemetry:
@@ -186,6 +191,21 @@ class TelemetryService:
             "l3_trickle_bytes": 0,
             "l3_upload_failures": 0,
         }
+        # erasure-coded durability counters (cluster-level: stripes are an
+        # L1 property of the whole store, like demotions)
+        self._ec = {
+            "stripes_committed": 0,
+            "logical_bytes": 0,          # pre-codec payload bytes
+            "fragment_bytes": 0,         # k+m fragments on the wire
+            "rebuilds_started": 0,
+            "rebuilds_done": 0,
+            "rebuilds_failed": 0,
+            "rebuilds_degraded": 0,      # decode needed parity / lower tier
+            "rebuild_bytes": 0,          # payload bytes regenerated
+            "degraded_reads": 0,         # fetches that GF-decoded via parity
+            "monitor_errors": 0,
+        }
+        self._ec_rebuild_hist = LogHistogram()
         self._unsubscribe = ctl.bus.subscribe(
             self._on_event,
             events=(E.COMMIT_DONE, E.CKPT_IN_L2, E.DRAIN_FAILED,
@@ -194,7 +214,8 @@ class TelemetryService:
                     E.REDISTRIBUTION_DONE, E.REDISTRIBUTION_FALLBACK,
                     E.RESIZE_OVERLAP_STARTED, E.CUTOVER_DONE,
                     E.RESTORE_DONE)
-            + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS)
+            + CLUSTER_FAILURE_EVENTS + RESIZE_EVENTS + LIFECYCLE_EVENTS
+            + EC_EVENTS)
 
     def close(self) -> None:
         self._unsubscribe()
@@ -299,6 +320,23 @@ class TelemetryService:
                 self._lifecycle["ckpts_expired"] += 1
             elif name == E.L3_UPLOAD_FAILED:
                 self._lifecycle["l3_upload_failures"] += 1
+            elif name == E.EC_STRIPE_COMMITTED:
+                self._ec["stripes_committed"] += int(p.get("stripes", 0))
+                self._ec["logical_bytes"] += int(p.get("logical_bytes", 0))
+                self._ec["fragment_bytes"] += int(p.get("fragment_bytes", 0))
+            elif name == E.EC_REBUILD_STARTED:
+                self._ec["rebuilds_started"] += 1
+            elif name == E.EC_REBUILD_DONE:
+                self._ec["rebuilds_done"] += 1
+                self._ec["rebuilds_degraded"] += int(bool(p.get("degraded")))
+                self._ec["rebuild_bytes"] += int(p.get("bytes", 0))
+                self._ec_rebuild_hist.observe(float(p.get("sim_s", 0.0)))
+            elif name == E.EC_REBUILD_FAILED:
+                self._ec["rebuilds_failed"] += 1
+            elif name == E.EC_DEGRADED_READ:
+                self._ec["degraded_reads"] += 1
+            elif name == E.MONITOR_ERROR:
+                self._ec["monitor_errors"] += 1
             elif name in RESIZE_EVENTS:
                 app_id = p.get("app")
                 targets = [self._app(app_id)] if app_id \
@@ -390,6 +428,8 @@ class TelemetryService:
             cluster_failures = self._cluster_failures
             events_seen = self._events_seen
             lifecycle = dict(self._lifecycle)
+            ec = dict(self._ec)
+            ec["rebuild_quantiles"] = self._ec_rebuild_hist.as_dict()
         for app_id, row in per_app.items():
             row["mtbf_s"] = self.mtbf_s(app_id)
         out = {
@@ -403,6 +443,7 @@ class TelemetryService:
             },
             "tiers": self.tier_occupancy(),
             "lifecycle": lifecycle,
+            "ec": ec,
         }
         l3 = getattr(self.ctl, "l3", None)
         if l3 is not None:
@@ -555,6 +596,29 @@ class TelemetryService:
         metric("icheck_ckpts_expired_total", "counter",
                "Checkpoint copies dropped by retention/GC",
                [({}, life["ckpts_expired"])])
+        ec = snap["ec"]
+        metric("icheck_ec_stripes_committed_total", "counter",
+               "Erasure stripes committed to L1 (k data + m parity each)",
+               [({}, ec["stripes_committed"])])
+        metric("icheck_ec_bytes_total", "counter",
+               "Erasure-coded bytes: logical payload vs k+m fragments",
+               [({"kind": "logical"}, ec["logical_bytes"]),
+                ({"kind": "fragment"}, ec["fragment_bytes"])])
+        metric("icheck_ec_rebuilds_total", "counter",
+               "Peer stripe rebuilds after failures, by outcome",
+               [({"outcome": "started"}, ec["rebuilds_started"]),
+                ({"outcome": "done"}, ec["rebuilds_done"]),
+                ({"outcome": "failed"}, ec["rebuilds_failed"]),
+                ({"outcome": "degraded"}, ec["rebuilds_degraded"])])
+        metric("icheck_ec_rebuild_bytes_total", "counter",
+               "Payload bytes regenerated by stripe rebuilds",
+               [({}, ec["rebuild_bytes"])])
+        metric("icheck_ec_degraded_reads_total", "counter",
+               "Shard fetches that GF-decoded via parity fragments",
+               [({}, ec["degraded_reads"])])
+        metric("icheck_monitor_errors_total", "counter",
+               "Health-monitor poll loops that raised (see flight dumps)",
+               [({}, ec["monitor_errors"])])
         l3 = snap.get("l3")
         if l3 is not None:
             metric("icheck_l3_cost_usd", "gauge",
@@ -573,6 +637,7 @@ class TelemetryService:
         with self._lock:
             app_hists = {a: t for a, t in self._apps.items()}
             hop_lat, hop_bytes = self._hop_latency_hist, self._hop_bytes_hist
+            ec_rebuild_hist = self._ec_rebuild_hist
         histogram("icheck_commit_seconds",
                   "Commit latency distribution (sim seconds)",
                   [({"app": a}, t.commit_latency_hist)
@@ -599,4 +664,7 @@ class TelemetryService:
         histogram("icheck_peer_hop_bytes",
                   "Per-transfer NIC/MemBus hop size",
                   [({}, hop_bytes)])
+        histogram("icheck_ec_rebuild_seconds",
+                  "Stripe rebuild duration distribution (sim seconds)",
+                  [({}, ec_rebuild_hist)])
         return "\n".join(out) + "\n"

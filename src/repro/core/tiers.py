@@ -32,6 +32,7 @@ import dataclasses
 import json
 import os
 import shutil
+import struct
 import threading
 import zlib
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
@@ -43,6 +44,8 @@ from ..obs import trace_id_for
 from . import events as _events
 from ..kernels.ckpt_codec.blocks import (BLOCK as _Q8_BLOCK, dequantize_np,
                                          quantize_np, to_blocks_np)
+from ..kernels.ckpt_codec.rs import (join_rows, rs_decode_np, rs_encode_np,
+                                     split_rows)
 from .simnet import SimNIC
 from .types import (CapacityError, CheckpointMeta, CkptStatus, ICheckError,
                     IntegrityError, PartitionDesc, PartitionScheme,
@@ -591,6 +594,99 @@ def decode_payload(blob: bytes, codec: str, dtype: str = "uint8") -> bytes:
     if codec in ("q8", "q8-delta"):
         return _q8_decode(blob, dtype)
     raise ICheckError(f"unknown codec {codec!r}")
+
+
+# ==========================================================================
+# erasure-coded fragment framing (k data + m parity per logical shard)
+# ==========================================================================
+# A fragment rides the existing ShardKey by parking its index in the
+# ``replica`` slot well above any replication count: data fragment i lives
+# at replica FRAG_DATA0 + i, parity fragment j at replica FRAG_PARITY0 + j.
+# Everything keyed on replica keeps working unchanged — LocalDiskTier paths
+# stay unique (``_r{replica}``), the catalog's replica-0..3 probe never
+# sees fragments, and the lifecycle demoter spots parity by replica alone.
+FRAG_DATA0 = 16
+FRAG_PARITY0 = 64
+
+_EC_MAGIC = b"ICE1"
+# magic, k, m, fragment index (0..k-1 data, k..k+m-1 parity), pad,
+# original payload length, crc32 of the original payload
+_EC_HEADER = struct.Struct("<4sBBBxQI")
+
+
+def ec_fragment_replica(idx: int, k: int) -> int:
+    """Fragment index (0..k+m-1) -> the ShardKey.replica it rides in."""
+    return FRAG_DATA0 + idx if idx < k else FRAG_PARITY0 + (idx - k)
+
+
+def ec_is_fragment(replica: int) -> bool:
+    return replica >= FRAG_DATA0
+
+
+def ec_is_parity(replica: int) -> bool:
+    return replica >= FRAG_PARITY0
+
+
+def ec_fragment_index(replica: int, k: int) -> int:
+    """Inverse of :func:`ec_fragment_replica`."""
+    if replica >= FRAG_PARITY0:
+        return k + (replica - FRAG_PARITY0)
+    return replica - FRAG_DATA0
+
+
+def ec_encode_shard(payload: bytes, k: int, m: int) -> List[Tuple[int, bytes]]:
+    """Payload -> [(replica, framed fragment blob)] for k data + m parity.
+
+    Every fragment is self-describing (stripe geometry, its own index, the
+    original length and crc), so any k surviving blobs reconstruct the
+    payload with end-to-end integrity checking and no side-channel state.
+    """
+    data = split_rows(payload, k)
+    parity = rs_encode_np(data, m)
+    crc = crc32(payload)
+    out: List[Tuple[int, bytes]] = []
+    for idx in range(k + m):
+        row = data[idx] if idx < k else parity[idx - k]
+        hdr = _EC_HEADER.pack(_EC_MAGIC, k, m, idx, len(payload), crc)
+        out.append((ec_fragment_replica(idx, k), hdr + row.tobytes()))
+    return out
+
+
+def ec_parse_fragment(blob: bytes) -> Tuple[int, int, int, int, int, bytes]:
+    """Framed blob -> (k, m, idx, orig_len, crc, row bytes)."""
+    if len(blob) < _EC_HEADER.size or blob[:4] != _EC_MAGIC:
+        raise IntegrityError("not an erasure-coded fragment")
+    magic, k, m, idx, orig_len, crc = _EC_HEADER.unpack_from(blob)
+    return k, m, idx, orig_len, crc, blob[_EC_HEADER.size:]
+
+
+def ec_decode_shard(fragments: Sequence[bytes]) -> bytes:
+    """Any k framed fragments -> the original payload (crc-verified).
+
+    Raises :class:`RestoreError` when fewer than k distinct fragments
+    survive and :class:`IntegrityError` when the reconstruction does not
+    match the payload crc carried in every fragment header.
+    """
+    rows: Dict[int, np.ndarray] = {}
+    geom = None
+    for blob in fragments:
+        k, m, idx, orig_len, crc, row = ec_parse_fragment(blob)
+        if geom is None:
+            geom = (k, m, orig_len, crc)
+        elif geom != (k, m, orig_len, crc):
+            raise IntegrityError("mixed-stripe fragments in one decode")
+        rows[idx] = np.frombuffer(row, dtype=np.uint8)
+    if geom is None:
+        raise RestoreError("ec decode with no fragments")
+    k, m, orig_len, crc = geom
+    if len(rows) < k:
+        raise RestoreError(
+            f"stripe lost: {len(rows)} of the {k} required fragments")
+    data = rs_decode_np(rows, k, m)
+    payload = join_rows(data, orig_len)
+    if crc32(payload) != crc:
+        raise IntegrityError("erasure reconstruction failed crc check")
+    return payload
 
 
 # ==========================================================================

@@ -181,16 +181,28 @@ class AppRecord:
     ckpt_bytes_estimate: int = 0
     ckpt_interval_s: float = 60.0
     replication: int = 1
+    # erasure-coded durability: (k, m) stripe geometry, or None for
+    # whole-shard replication; EC apps keep replication == 1 (the k data +
+    # m parity fragments ARE the redundancy)
+    ec: Optional[tuple] = None
     agents: list = dataclasses.field(default_factory=list)    # [AgentId]
     checkpoints: dict = dataclasses.field(default_factory=dict)  # CkptId -> CheckpointMeta
     next_ckpt_id: CkptId = 0
     # resize forewarning from the RM (paper §III-A: "impending resource change")
     pending_resize: Optional[int] = None
 
+    def l1_overhead_factor(self) -> float:
+        """L1 bytes per logical byte: (k+m)/k under EC, replication else."""
+        if self.ec:
+            k, m = self.ec
+            return (k + m) / k
+        return float(self.replication)
+
     def demand_bytes_per_s(self) -> float:
         if self.ckpt_interval_s <= 0:
             return 0.0
-        return self.ckpt_bytes_estimate * self.replication / self.ckpt_interval_s
+        return (self.ckpt_bytes_estimate * self.l1_overhead_factor()
+                / self.ckpt_interval_s)
 
 
 @dataclasses.dataclass

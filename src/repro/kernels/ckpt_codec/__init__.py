@@ -1,19 +1,24 @@
-"""Checkpoint codec: blockwise int8 quantization + XOR delta.
+"""Checkpoint codec: blockwise int8 quantization + XOR delta + RS erasure.
 
-``blocks`` (the layout constants + numpy reference) is imported eagerly and
-stays jax-free; the jit'd device ops resolve lazily (PEP 562) so that
-``repro.core.tiers`` can share the blockwise reference without pulling jax
-into every ``repro.core`` import.
+``blocks`` and ``rs`` (layout constants + numpy references) are imported
+eagerly and stay jax-free; the jit'd device ops resolve lazily (PEP 562)
+so that ``repro.core.tiers`` can share the blockwise and erasure
+references without pulling jax into every ``repro.core`` import.
 """
 from __future__ import annotations
 
 from importlib import import_module
 
 from .blocks import BLOCK, dequantize_np, quantize_np, to_blocks_np
+from .rs import (join_rows, rs_decode_np, rs_encode_np, rs_generator_matrix,
+                 split_rows)
 
-_OPS = ("quantize", "quantize_delta", "dequantize", "undelta_dequantize")
+_OPS = ("quantize", "quantize_delta", "dequantize", "undelta_dequantize",
+        "rs_encode")
 
-__all__ = ["BLOCK", "to_blocks_np", "quantize_np", "dequantize_np", *_OPS]
+__all__ = ["BLOCK", "to_blocks_np", "quantize_np", "dequantize_np",
+           "rs_encode_np", "rs_decode_np", "rs_generator_matrix",
+           "split_rows", "join_rows", *_OPS]
 
 
 def __getattr__(name: str):

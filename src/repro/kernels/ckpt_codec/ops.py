@@ -26,6 +26,7 @@ import numpy as np
 from ..common import resolve_impl
 from . import kernel as K
 from . import ref as R
+from . import rs_kernel as RS
 from .ref import BLOCK
 
 
@@ -79,3 +80,21 @@ def undelta_dequantize(delta, prev_q, scale, shape, dtype=jnp.float32,
     """Invert a delta commit: codes = delta ^ prev_q, then dequantize."""
     return dequantize(jnp.bitwise_xor(delta, prev_q), scale, shape, dtype,
                       impl=impl)
+
+
+@partial(jax.jit, static_argnames=("m", "impl"))
+def rs_encode(data_rows, m: int = 1, impl: str | None = None):
+    """Reed-Solomon parity: (k, stride) uint8 data -> (m, stride) parity.
+
+    The device-side twin of :func:`repro.kernels.ckpt_codec.rs.rs_encode_np`
+    (asserted bit-identical in the test suite); the erasure-coded L1
+    durability path in ``repro.core.tiers`` runs the numpy reference on the
+    host, this op exists for on-device encode ahead of the D2H copy.
+    """
+    x = data_rows.astype(jnp.int32)
+    impl = resolve_impl(impl)
+    if impl in ("xla", "ref"):
+        parity = RS.rs_encode_ref(x, m)
+    else:
+        parity = RS.rs_encode_pallas(x, m, interpret=(impl == "interpret"))
+    return parity.astype(jnp.uint8)

@@ -1,0 +1,455 @@
+"""Erasure-coded L1 durability: the GF(2^8) Reed-Solomon codec, fragment
+framing, the Pallas encode kernel, stripe placement with failure-domain
+anti-affinity, peer rebuild-on-failure (with L2/L3 provider fallback),
+parity-first demotion, and the health-monitor satellites.
+
+The load-bearing property throughout: after killing any m agents
+(including m spanning two nodes) or a whole node, a committed stripe must
+restore *bit-identical* to the numpy oracle at <= 1.35x raw L1 bytes."""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ICheckClient, ICheckCluster, PartitionScheme
+from repro.core import events as E
+from repro.core.tiers import (FRAG_DATA0, FRAG_PARITY0, ec_decode_shard,
+                              ec_encode_shard, ec_is_fragment, ec_is_parity,
+                              ec_parse_fragment)
+from repro.core.types import IntegrityError, RestoreError
+from repro.kernels.ckpt_codec import (join_rows, rs_decode_np, rs_encode_np,
+                                      split_rows)
+
+WAIT_S = 10.0
+
+
+def _parts(arr, ranks):
+    from repro.core import split_array
+    from repro.core.types import PartitionDesc
+
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=ranks)
+    return {i: p for i, p in enumerate(split_array(arr, desc))}
+
+
+def _wait(pred, wall_s: float = WAIT_S) -> bool:
+    deadline = time.monotonic() + wall_s
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.02)
+    return pred()
+
+
+def _restart_eventually(client, wall_s: float = WAIT_S):
+    """Restart once replacement agents have re-attached the node stores."""
+    out = [None]
+
+    def ready():
+        out[0] = client.restart()
+        return out[0] is not None
+
+    assert _wait(ready, wall_s), "no restartable checkpoint after failure"
+    return out[0]
+
+
+# ========================================================== numpy RS codec
+@pytest.mark.parametrize("k,m", [(4, 1), (4, 2), (2, 2), (3, 1), (6, 2)])
+def test_rs_all_erasure_patterns_decode_bit_identical(k, m):
+    rng = np.random.default_rng(7 * k + m)
+    payload = rng.integers(0, 256, size=1013, dtype=np.uint8).tobytes()
+    data = split_rows(payload, k)
+    parity = rs_encode_np(data, m)
+    rows = {i: data[i] for i in range(k)}
+    rows.update({k + j: parity[j] for j in range(m)})
+    for n_lost in range(m + 1):
+        for lost in itertools.combinations(range(k + m), n_lost):
+            survivors = {i: r for i, r in rows.items() if i not in lost}
+            got = rs_decode_np(survivors, k, m)
+            assert all(np.array_equal(a, b) for a, b in zip(got, data))
+            assert join_rows(got, len(payload)) == payload
+
+
+def test_rs_rejects_m_above_2_and_insufficient_fragments():
+    with pytest.raises(ValueError):
+        rs_encode_np(split_rows(b"x" * 64, 4), 3)
+    data = split_rows(b"y" * 64, 4)
+    parity = rs_encode_np(data, 1)
+    survivors = {0: data[0], 1: data[1], 4: parity[0]}   # 3 < k=4
+    with pytest.raises(ValueError):
+        rs_decode_np(survivors, 4, 1)
+
+
+# ========================================================= fragment framing
+def test_ec_framing_roundtrip_any_k_of_k_plus_m():
+    payload = bytes(range(256)) * 5 + b"tail"
+    frags = ec_encode_shard(payload, 4, 2)
+    assert [r for r, _ in frags] == [FRAG_DATA0 + i for i in range(4)] + \
+        [FRAG_PARITY0 + j for j in range(2)]
+    assert all(ec_is_fragment(r) for r, _ in frags)
+    assert [r for r, _ in frags if ec_is_parity(r)] == \
+        [FRAG_PARITY0, FRAG_PARITY0 + 1]
+    blobs = [b for _, b in frags]
+    assert ec_decode_shard(blobs) == payload
+    for lost in itertools.combinations(range(6), 2):      # any 4 survive
+        survivors = [b for i, b in enumerate(blobs) if i not in lost]
+        assert ec_decode_shard(survivors) == payload
+    with pytest.raises(RestoreError):                     # 3 < k
+        ec_decode_shard(blobs[:3])
+
+
+def test_ec_framing_detects_corruption_and_mixed_stripes():
+    payload = b"erasure" * 100
+    blobs = [b for _, b in ec_encode_shard(payload, 4, 1)]
+    k, m, idx, orig_len, crc, row = ec_parse_fragment(blobs[0])
+    assert (k, m, idx, orig_len) == (4, 1, 0, len(payload))
+    # flip one payload byte inside a fragment: crc must catch it
+    bad = bytearray(blobs[0])
+    bad[-1] ^= 0xFF
+    with pytest.raises(IntegrityError):
+        ec_decode_shard([bytes(bad)] + blobs[1:4])
+    # fragments of a different stripe must not silently interleave
+    other = [b for _, b in ec_encode_shard(b"other" * 100, 4, 1)]
+    with pytest.raises(IntegrityError):
+        ec_decode_shard(blobs[:3] + other[3:4])
+    with pytest.raises(IntegrityError):
+        ec_parse_fragment(b"not a fragment header at all")
+
+
+# ============================================================ encode kernel
+@pytest.mark.parametrize("k,m,n", [(4, 1, 1000), (4, 2, 513), (2, 2, 4096)])
+def test_rs_encode_kernel_matches_numpy_oracle(k, m, n):
+    from repro.kernels.ckpt_codec import rs_encode
+
+    rng = np.random.default_rng(n)
+    data = rng.integers(0, 256, size=(k, n), dtype=np.uint8)
+    want = rs_encode_np([data[i] for i in range(k)], m)
+    got = np.asarray(rs_encode(data, m=m, impl="interpret"))
+    assert got.dtype == np.uint8 and got.shape == (m, n)
+    for j in range(m):
+        np.testing.assert_array_equal(got[j], want[j])
+
+
+# ===================================================== commit/restore path
+def test_ec_commit_restart_bit_identical(tmp_path):
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=2,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        client = ICheckClient("appA", c.controller, ranks=4,
+                              durability="ec", ec_k=4, ec_m=1).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.random.default_rng(3).normal(size=(512, 8)) \
+            .astype(np.float32)
+        client.add_adapt("w", data.shape, "float32", num_parts=4)
+        for step in (1, 2):
+            client.commit(step=step,
+                          parts_by_region={"w": _parts(data + step, 4)},
+                          blocking=True, drain=False)
+        meta, parts, level = client.restart()
+        assert level == "l1" and meta.step == 2
+        got = np.concatenate([parts["w"][i] for i in range(4)], axis=0)
+        np.testing.assert_array_equal(got, data + 2)
+        # the stripe spans failure domains: no node holds more than
+        # ceil((k+m)/nodes) fragments of any one logical shard
+        per_node = {}
+        for mgr in c.controller.managers():
+            for key in mgr.store.keys():
+                if key.app_id == "appA" and ec_is_fragment(key.replica):
+                    per_node.setdefault((mgr.node_id, key.base()), 0)
+                    per_node[(mgr.node_id, key.base())] += 1
+        assert per_node and max(per_node.values()) <= 1
+        ec = c.telemetry.snapshot()["ec"]
+        assert ec["stripes_committed"] == 8          # 4 parts x 2 commits
+        assert ec["fragment_bytes"] > ec["logical_bytes"]
+        client.finalize()
+
+
+def test_ec_drain_writes_full_shards_and_cold_restart(tmp_path):
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=1,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        client = ICheckClient("appA", c.controller, ranks=2,
+                              durability="ec", ec_k=4, ec_m=1).init()
+        data = np.arange(4096, dtype=np.int64)
+        client.add_adapt("d", data.shape, "int64", num_parts=2)
+        h = client.commit(step=5, parts_by_region={"d": _parts(data, 2)},
+                          blocking=True)
+        c.controller.wait_for_drains()
+        assert c.pfs.checkpoint_complete(h.meta)
+        client.finalize()
+
+        # cold restart: a brand-new controller over the same PFS must see
+        # whole shards (fragments never leak below L1)
+        from repro.core import ResourceManager
+        from repro.core.controller import Controller
+
+        rm2 = ResourceManager()
+        rm2.make_node()
+        ctl2 = Controller(rm2, c.pfs, initial_nodes=1)
+        try:
+            client2 = ICheckClient("appA", ctl2, ranks=2).init()
+            meta, parts, level = client2.restart()
+            assert level == "l2" and meta.step == 5
+            got = np.concatenate([parts["d"][i] for i in range(2)])
+            np.testing.assert_array_equal(got, data)
+            client2.finalize()
+        finally:
+            ctl2.close()
+
+
+# ============================================================= peer rebuild
+def test_m_agent_deaths_spanning_two_nodes_restore_bit_identical():
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=0,
+                       node_memory=256 << 20) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=4, durability="ec",
+                              ec_k=4, ec_m=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.random.default_rng(11).normal(size=(256, 16)) \
+            .astype(np.float32)
+        client.add_adapt("w", data.shape, "float32", num_parts=4)
+        client.commit(step=1, parts_by_region={"w": _parts(data, 4)},
+                      blocking=True, drain=False)
+        victims, nodes = [], set()
+        for a in ctl.agents_for("appA"):
+            if a.node_id not in nodes:
+                victims.append(a)
+                nodes.add(a.node_id)
+            if len(victims) == 2:
+                break
+        assert len(nodes) == 2
+        for a in victims:
+            c.fault.kill_agent(a.agent_id)
+        meta, parts, _ = _restart_eventually(client)
+        got = np.concatenate([parts["w"][i] for i in range(4)], axis=0)
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+def test_node_loss_triggers_peer_rebuild_not_rereplication():
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=0,
+                       node_memory=256 << 20) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=4, durability="ec",
+                              ec_k=4, ec_m=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.random.default_rng(13).normal(size=(256, 16)) \
+            .astype(np.float32)
+        client.add_adapt("w", data.shape, "float32", num_parts=4)
+        client.commit(step=1, parts_by_region={"w": _parts(data, 4)},
+                      blocking=True, drain=False)
+        victim = next(m.node_id for m in ctl.managers()
+                      if any(k.app_id == "appA" for k in m.store.keys()))
+        stripes = len({k.base() for m in ctl.managers()
+                       if m.node_id == victim
+                       for k in m.store.keys() if k.app_id == "appA"})
+        c.fault.kill_node(victim)
+        assert _wait(lambda: c.telemetry.snapshot()["ec"]["rebuilds_done"]
+                     >= stripes)
+        ec = c.telemetry.snapshot()["ec"]
+        assert ec["rebuilds_failed"] == 0
+        done = [r for r in ctl.events if r["event"] == E.EC_REBUILD_DONE]
+        assert len(done) >= stripes
+        assert all(r["source"] == "peer" for r in done)   # no PFS, no L3
+        meta, parts, _ = _restart_eventually(client)
+        got = np.concatenate([parts["w"][i] for i in range(4)], axis=0)
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+def test_rebuild_falls_back_to_pfs_when_peers_insufficient(tmp_path):
+    """k=4, m=1 over 3 nodes puts 2 fragments of some stripe on one node;
+    losing that node takes more than m fragments, so the peer gather comes
+    up short and the rebuild must fall back to the L2 provider -- and the
+    checkpoint must NOT be marked failed (a durable copy exists)."""
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=0,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=4, durability="ec",
+                              ec_k=4, ec_m=1).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.random.default_rng(17).normal(size=(256, 16)) \
+            .astype(np.float32)
+        client.add_adapt("w", data.shape, "float32", num_parts=4)
+        h = client.commit(step=1, parts_by_region={"w": _parts(data, 4)},
+                          blocking=True)
+        ctl.wait_for_drains()
+        assert c.pfs.checkpoint_complete(h.meta)
+        # the node with the most appA fragments loses >m of some stripe
+        def frag_count(m):
+            return sum(1 for k in m.store.keys()
+                       if k.app_id == "appA" and ec_is_fragment(k.replica))
+        victim = max(ctl.managers(), key=frag_count)
+        assert frag_count(victim) > 1
+        c.fault.kill_node(victim.node_id)
+        assert _wait(lambda: c.telemetry.snapshot()["ec"]["rebuilds_done"]
+                     + c.telemetry.snapshot()["ec"]["rebuilds_failed"] >= 1)
+        done = [r for r in ctl.events if r["event"] == E.EC_REBUILD_DONE]
+        assert done and any(r["source"] != "peer" for r in done)
+        assert c.telemetry.snapshot()["ec"]["rebuilds_failed"] == 0
+        assert not any(r["event"] == E.CKPT_FAILED for r in ctl.events)
+        meta, parts, _ = _restart_eventually(client)
+        got = np.concatenate([parts["w"][i] for i in range(4)], axis=0)
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+def test_parity_demotion_concurrent_with_rebuild_never_orphans_stripe():
+    """Demote every resident parity fragment out of L1 (the watermark
+    demoter's first choice), then lose a data-holding node: the rebuild
+    must still find k fragments (demoted parity serves from the lower
+    tier) and the stripe must stay restorable, bit-identical."""
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=0,
+                       node_memory=256 << 20, spill_bytes=64 << 20) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=4, durability="ec",
+                              ec_k=4, ec_m=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.random.default_rng(19).normal(size=(256, 16)) \
+            .astype(np.float32)
+        client.add_adapt("w", data.shape, "float32", num_parts=4)
+        client.commit(step=1, parts_by_region={"w": _parts(data, 4)},
+                      blocking=True, drain=False)
+        demoted = 0
+        for mgr in ctl.managers():
+            for key in mgr.store.keys():
+                if key.app_id == "appA" and ec_is_parity(key.replica):
+                    demoted += bool(mgr.store.demote(key))
+        assert demoted > 0
+        victim = next(m.node_id for m in ctl.managers()
+                      if any(k.app_id == "appA" and
+                             not ec_is_parity(k.replica)
+                             for k in m.store.keys()))
+        c.fault.kill_node(victim)
+        assert _wait(lambda: c.telemetry.snapshot()["ec"]["rebuilds_done"]
+                     + c.telemetry.snapshot()["ec"]["rebuilds_failed"] >= 1)
+        assert c.telemetry.snapshot()["ec"]["rebuilds_failed"] == 0
+        meta, parts, _ = _restart_eventually(client)
+        got = np.concatenate([parts["w"][i] for i in range(4)], axis=0)
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+def test_parity_fragments_demote_before_data_and_before_cold_ckpts():
+    with ICheckCluster(n_icheck_nodes=3, n_spare_nodes=0,
+                       node_memory=256 << 20) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=2, durability="ec",
+                              ec_k=4, ec_m=1).init()
+        data = np.arange(1024, dtype=np.float32)
+        client.add_adapt("d", data.shape, "float32", num_parts=2)
+        for step in (1, 2):
+            client.commit(step=step,
+                          parts_by_region={"d": _parts(data, 2)},
+                          blocking=True, drain=False)
+        keys = [k for m in ctl.managers() for k in m.store.keys()
+                if k.app_id == "appA"]
+        order = ctl.lifecycle._cold_first(keys)
+        n_parity = sum(1 for k in keys if ec_is_parity(k.replica))
+        assert n_parity > 0
+        assert all(ec_is_parity(k.replica) for k in order[:n_parity])
+        assert not any(ec_is_parity(k.replica) for k in order[n_parity:])
+        client.finalize()
+
+
+# ==================================================== health satellites
+def test_recovery_destination_avoids_replica_holders():
+    from repro.core.types import ShardKey
+
+    with ICheckCluster(n_icheck_nodes=4, n_spare_nodes=0,
+                       node_memory=64 << 20) as c:
+        ctl = c.controller
+        m0, m1, m2, m3 = ctl.managers()
+        base = ShardKey("appA", 0, "d", 0, 0)
+        m0.store.put(base, b"payload" * 64)
+        m1.store.put(ShardKey("appA", 0, "d", 0, 1), b"payload" * 64)
+        dst = ctl.placement.recovery_destination(base)
+        assert dst is not None
+        assert dst.node_id in (m2.node_id, m3.node_id)
+        dst = ctl.placement.recovery_destination(
+            base, exclude_nodes=(m2.node_id,))
+        assert dst is not None and dst.node_id == m3.node_id
+        # when every survivor already holds a copy it still returns a live
+        # node rather than dropping the recovery on the floor
+        for m in (m2, m3):
+            m.store.put(ShardKey("appA", 0, "d", 0, 2), b"payload" * 64)
+        assert ctl.placement.recovery_destination(base) is not None
+
+
+def test_node_failure_recovery_never_collocates_replicas():
+    """Regression for the `min(dst, ...)` destination bug: the copy
+    recovered after a node death must not land on a node that already
+    holds another replica of the same shard."""
+    with ICheckCluster(n_icheck_nodes=4, n_spare_nodes=0,
+                       node_memory=64 << 20) as c:
+        ctl = c.controller
+        client = ICheckClient("appA", ctl, ranks=2, replication=2).init(
+            ckpt_bytes_estimate=1 << 20)
+        data = np.arange(2048, dtype=np.float32)
+        client.add_adapt("d", data.shape, "float32", num_parts=2)
+        client.commit(step=1, parts_by_region={"d": _parts(data, 2)},
+                      blocking=True, drain=False)
+        # stage the shape the bug needs: replica 0 and replica 1 of every
+        # shard on two *distinct* nodes (the catalog's read path scans
+        # manager stores, so moved shards stay fully visible)
+        src = next(m for m in ctl.managers()
+                   if any(k.app_id == "appA" for k in m.store.keys()))
+        other = next(m for m in ctl.managers() if m is not src)
+        other.launch_agent("appA")       # the replica needs a serving agent
+        for key in list(src.store.keys()):
+            if key.app_id == "appA" and key.replica == 1:
+                other.store.put(key, src.store.get(key, verify=False))
+                src.store.drop(key)
+        c.fault.kill_node(src.node_id)
+        assert _wait(lambda: any(r["event"] == E.NODE_RECOVERED
+                                 for r in ctl.events))
+
+        def holders_by_base():
+            out = {}
+            for m in ctl.managers():
+                for k in m.store.keys():
+                    if k.app_id == "appA":
+                        out.setdefault(k.base(), []).append(m.node_id)
+            return out
+
+        assert _wait(lambda: holders_by_base() and
+                     all(len(v) == len(set(v))
+                         for v in holders_by_base().values()))
+        for base, nodes in holders_by_base().items():
+            assert len(nodes) == len(set(nodes)), \
+                f"{base} recovered onto a node already holding a replica"
+        res = _restart_eventually(client)
+        got = np.concatenate([res[1]["d"][i] for i in range(2)])
+        np.testing.assert_array_equal(got, data)
+        client.finalize()
+
+
+def test_monitor_error_is_published_and_flight_ring_dumped():
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=64 << 20) as c:
+        ctl = c.controller
+        orig = ctl.health.check
+
+        def boom():
+            ctl.health.check = orig      # fail exactly one poll
+            raise RuntimeError("synthetic monitor wedge")
+
+        ctl.health.check = boom
+        assert _wait(lambda: any(r["event"] == E.MONITOR_ERROR
+                                 for r in ctl.events))
+        err = next(r for r in ctl.events if r["event"] == E.MONITOR_ERROR)
+        assert "synthetic monitor wedge" in err["error"]
+        assert "monitor_error" in ctl.flight.dumps
+        # and the loop survived the error: the monitor still detects faults
+        client = ICheckClient("appA", ctl, ranks=1, replication=2).init()
+        client.add_adapt("d", (16,), "float32", num_parts=1)
+        client.commit(step=1, parts_by_region={
+            "d": _parts(np.zeros(16, np.float32), 1)}, blocking=True,
+            drain=False)
+        c.fault.kill_agent(client.agents[0].agent_id)
+        assert _wait(lambda: any(r["event"] == E.AGENT_FAILED
+                                 for r in ctl.events))
+        client.finalize()
