@@ -27,7 +27,8 @@ DEFAULT_THRESHOLD = 0.15
 
 # metrics where a *rise* is the regression (latencies/stalls): the delta
 # comparison is flipped for these
-LOWER_IS_BETTER = {"b3_stall_s", "b11_l1_ratio", "b11_rebuild_s"}
+LOWER_IS_BETTER = {"b3_stall_s", "b11_l1_ratio", "b11_rebuild_s",
+                   "b12_warm_recover_s", "b12_journal_overhead_pct"}
 
 
 def load(path: str) -> dict:

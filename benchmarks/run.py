@@ -18,8 +18,9 @@ import time
 import traceback
 
 from . import (bench_async_overlap, bench_codec, bench_delta, bench_erasure,
-               bench_multiapp, bench_redistribution, bench_restart,
-               bench_serving, bench_tiering, bench_transfer, roofline)
+               bench_multiapp, bench_recovery, bench_redistribution,
+               bench_restart, bench_serving, bench_tiering, bench_transfer,
+               roofline)
 
 ALL = {
     "b1": ("agent-count transfer knee", bench_transfer.run),
@@ -35,6 +36,7 @@ ALL = {
     "b9": ("storage lifecycle tiering", bench_tiering.run),
     "b10": ("incremental delta checkpointing", bench_delta.run),
     "b11": ("erasure-coded durability", bench_erasure.run),
+    "b12": ("crash-consistent control plane", bench_recovery.run),
 }
 
 SMOKE = {
@@ -47,6 +49,8 @@ SMOKE = {
             bench_delta.run_smoke),
     "b5t": ("tracing overhead (smoke)", bench_restart.run_trace_smoke),
     "b11": ("erasure-coded durability (smoke)", bench_erasure.run_smoke),
+    "b12": ("crash-consistent control plane (smoke)",
+            bench_recovery.run_smoke),
 }
 
 SMOKE_JSON = "BENCH_smoke.json"
@@ -106,6 +110,15 @@ def smoke_metrics(results: dict) -> dict:
         metrics["b11_ec_commit_rate_Bps"] = b11["ec"]["commit_rate_Bps"]
         metrics["b11_l1_ratio"] = b11["ec"]["l1_ratio"]
         metrics["b11_rebuild_s"] = b11["rebuild"]["rebuild_sim_s"]
+    b12 = results.get("b12")
+    if b12:
+        # warm recovery must stay cheap in absolute sim terms and keep its
+        # margin over the cold L3 manifest scan; the journal's commit-path
+        # tax must stay ~zero (both *_s/_pct metrics are lower-is-better)
+        metrics["b12_warm_recover_s"] = b12["warm"]["warm_recover_sim_s"]
+        metrics["b12_warm_speedup"] = b12["warm_speedup"]
+        metrics["b12_journal_overhead_pct"] = \
+            b12["overhead"]["journal_overhead_pct"]
     b5t = results.get("b5t")
     if b5t:
         # ~1.0 by construction (spans observe the sim clock, never load

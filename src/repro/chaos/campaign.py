@@ -32,12 +32,14 @@ import numpy as np
 from repro.core import events as E
 from repro.core.cluster import ICheckCluster
 from repro.core.client import ICheckClient
-from repro.core.types import ICheckError
+from repro.core.services.journal import StaleEpochError
+from repro.core.types import ICheckError, ShardKey
 from repro.kernels.ckpt_codec.blocks import (dequantize_np, quantize_np,
                                              to_blocks_np)
 
 from .invariants import run_checks
-from .schedule import MID_WINDOW_FAULTS, ChaosSchedule, generate_schedule
+from .schedule import (CRASH_MODES, MID_WINDOW_FAULTS, ChaosAction,
+                       ChaosSchedule, generate_schedule)
 
 # the benchmark harness lives at the repo root, outside ``src`` — the
 # campaign reuses its workload loop rather than forking a copy
@@ -62,6 +64,8 @@ WALL_BUDGET_S = 120.0       # whole-campaign wall budget (stall backstop)
 CUTOVER_WAIT_S = 30.0       # bounded wait on the overlap cutover handle
 ALPHA_JOIN_S = 60.0         # bounded join on the workload thread
 SIM_BOUND_FACTOR = 8.0      # sim-time bound = factor * horizon + 10s
+CRASH_GRACE_S = 0.6         # sim grace for drain/window crash deferral
+STALE_PROBE_WAIT_S = 5.0    # wall bound on one stale-epoch probe op
 
 
 @dataclasses.dataclass
@@ -81,6 +85,10 @@ class CampaignEvidence:
     resizes: int
     final_sim_t: float
     sim_bound_s: float
+    # one entry per fired controller_crash action (see the crash hook in
+    # run_campaign): journaled truth / PFS high-water captured just before
+    # the crash, what recovery rebuilt, and the stale-epoch probe verdict
+    recovery_reports: List[dict] = dataclasses.field(default_factory=list)
 
 
 def _q8_roundtrip(x: np.ndarray) -> np.ndarray:
@@ -112,6 +120,11 @@ class ChaosInjector:
         self._clears: List[Tuple[float, str, object]] = []
         self._lock = threading.Lock()
         self.fired: List[str] = []
+        # wired by run_campaign after the drivers exist: crash_hook(mode)
+        # performs crash+recover+probes and returns a detail string;
+        # crash_ready(mode) gates the "drain"/"window" timing modes
+        self.crash_hook = None
+        self.crash_ready = None
 
     # ------------------------------------------------------------- polling
     def poll(self, now: float) -> None:
@@ -236,6 +249,27 @@ class ChaosInjector:
                 self._push_clear(rel + duration, kind,
                                  lambda: l3.set_outage(False))
                 detail = "l3"
+        elif kind == "controller_crash":
+            mode = CRASH_MODES[int(params.pop("mode", 0)) % len(CRASH_MODES)]
+            if self.crash_hook is None:
+                detail = "skipped (no crash hook)"
+            else:
+                ready = self.crash_ready is None or self.crash_ready(mode)
+                deadline = action.params.get("_deadline")
+                if not ready and (deadline is None or rel < deadline):
+                    # condition ("drain" inflight / "window" open) not met
+                    # yet: requeue a little later, bounded by a sim grace
+                    # after which the crash fires plain anyway
+                    new_params = dict(action.params)
+                    new_params.setdefault("_deadline", rel + CRASH_GRACE_S)
+                    with self._lock:
+                        self._pending.append(dataclasses.replace(
+                            action, at_s=rel + 0.03, params=new_params))
+                    return
+                if not ready:
+                    mode = f"{mode}->plain"   # grace expired, fire anyway
+                detail = self.crash_hook(mode.split("->")[0])
+                detail = f"{mode}:{detail}"
         self.fired.append(f"{kind}@{rel:.3f}:{detail}")
         self.ctl.bus.publish(E.CHAOS_INJECTED, kind=kind, at_s=rel,
                              detail=detail)
@@ -246,21 +280,29 @@ class ChaosInjector:
 
 
 class _Oracle:
-    """Per-app restore oracle: committed content, keyed by ckpt id."""
+    """Per-app restore oracle: committed content, keyed by commit *step*.
+
+    Step, not ckpt id: the step is chosen by the driver before the commit
+    is attempted, so it stays meaningful even when the attempt's ack is
+    severed mid-flight (a controller crash can land the agent writes and
+    journal barrier, then kill the client's blocking wait — recovery
+    legitimately serves that checkpoint, and the oracle must be able to
+    judge its content).  Ckpt ids, by contrast, drift from steps the first
+    time an attempt dies before the catalog allocates one."""
 
     def __init__(self, app: str, lossless: bool):
         self.app = app
         self.lossless = lossless
-        self._by_ckpt: Dict[int, Dict[str, Dict[int, np.ndarray]]] = {}
+        self._by_step: Dict[int, Dict[str, Dict[int, np.ndarray]]] = {}
 
-    def record(self, ckpt_id: int,
+    def record(self, step: int,
                parts_by_region: Dict[str, Dict[int, np.ndarray]]) -> None:
         snap: Dict[str, Dict[int, np.ndarray]] = {}
         for region, parts in parts_by_region.items():
             snap[region] = {
                 p: (np.copy(x) if self.lossless else _q8_roundtrip(x))
                 for p, x in parts.items()}
-        self._by_ckpt[int(ckpt_id)] = snap
+        self._by_step[int(step)] = snap
 
     def verify(self, restored, out: List[dict]) -> None:
         """Append one restore-comparison record (consumed by the
@@ -276,14 +318,14 @@ class _Oracle:
             return
         meta, parts_by_region, level = restored
         ckpt = int(meta.ckpt_id)
-        want = self._by_ckpt.get(ckpt)
+        want = self._by_step.get(int(meta.step))
         if want is None:
             out.append({
                 "app": self.app,
                 "ckpt": ckpt,
                 "ok": False,
-                "detail": f"restored ckpt {ckpt} was never acked "
-                          f"by the harness",
+                "detail": f"restored ckpt {ckpt} (step {meta.step}) was "
+                          f"never attempted by the harness",
             })
             return
         for region, parts in want.items():
@@ -313,7 +355,8 @@ class _BetaDriver:
 
     def __init__(self, cluster: ICheckCluster, client: ICheckClient,
                  schedule: ChaosSchedule, seed: int, horizon_s: float,
-                 oracle: _Oracle, ev_sink: dict, self_test: bool):
+                 oracle: _Oracle, ev_sink: dict, self_test: bool,
+                 crash_self_test: bool = False):
         self.cluster = cluster
         self.client = client
         self.schedule = schedule
@@ -321,6 +364,7 @@ class _BetaDriver:
         self.oracle = oracle
         self.sink = ev_sink
         self.self_test = self_test
+        self.crash_self_test = crash_self_test
         self._self_test_done = False
         self.rng = np.random.default_rng(seed + 7919)
         self.x = self.rng.normal(size=6144).astype(np.float32)
@@ -365,10 +409,13 @@ class _BetaDriver:
     def _commit(self) -> None:
         self._churn()
         drain = self.step % 2 == 0   # exercise L2 drains + L3 trickle
+        # record before the attempt: if a fault severs the *ack* after the
+        # agent writes land, the checkpoint is still durable and the
+        # oracle must be able to judge a restore of it by content
+        self.oracle.record(self.step, {"field": self.parts})
         try:
             self.client.commit(self.step, {"field": self.parts},
                                blocking=True, drain=drain)
-            self.oracle.record(self.step, {"field": self.parts})
             self.sink["commit_counts"]["beta"] += 1
         except TOLERATED_ERRORS as exc:
             self.sink["notes"].append(
@@ -378,6 +425,9 @@ class _BetaDriver:
         if self.self_test and not self._self_test_done and \
                 self.sink["commit_counts"]["beta"] >= 2:
             self._suppress_chain_reset()
+        if self.crash_self_test and not self._self_test_done and \
+                self.sink["commit_counts"]["beta"] >= 2:
+            self._suppress_journal()
 
     def _suppress_chain_reset(self) -> None:
         """Self-test fault: detach the catalog's mandatory chain-reset
@@ -389,6 +439,18 @@ class _BetaDriver:
         ctl.bus.publish(E.APP_RANK_FAILED, app=self.client.app_id, rank=0)
         self.sink["notes"].append("self-test: chain-reset subscriber "
                                   "suppressed + rank failure injected")
+
+    def _suppress_journal(self) -> None:
+        """Crash self-test fault: silently stop journaling, keep committing
+        and draining, then let the scheduled controller crash fire — the
+        recovery must come up knowing less than the PFS holds, and the
+        ``recovery_fidelity`` check must go CRIT."""
+        self._self_test_done = True
+        j = self.cluster.controller.journal
+        if j is not None:
+            j.enabled = False
+        self.sink["notes"].append("self-test: journal writes suppressed "
+                                  "ahead of the controller crash")
 
     # ------------------------------------------------------------- resize
     def _maybe_resize(self, rel: float) -> None:
@@ -439,15 +501,34 @@ class _BetaDriver:
 
 
 def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
-                 self_test: bool = False) -> dict:
-    """Run one campaign; returns the deterministic JSON-able report."""
+                 self_test: bool = False, controller_crash: bool = False,
+                 crash_self_test: bool = False) -> dict:
+    """Run one campaign; returns the deterministic JSON-able report.
+
+    ``controller_crash=True`` draws one controller crash into the seed's
+    schedule (crash -> journal replay -> reconciliation -> epoch fencing,
+    judged by the ``recovery_fidelity`` invariant).  ``crash_self_test``
+    suppresses journal writes mid-campaign and schedules a crash — the
+    fidelity check must then go CRIT (a green run is a runner failure).
+    """
     if schedule is None:
-        if self_test:
+        if crash_self_test:
+            # a quiet campaign plus one late plain crash: the only signal
+            # competing for the verdict is the suppressed journal itself.
+            # _deadline far past the horizon disables the plain-mode
+            # fallback — the crash defers until the violation is armed
+            # (suppression fired + one unjournaled commit landed)
+            schedule = ChaosSchedule(
+                seed=seed, horizon_s=2.4, actions=(
+                    ChaosAction(at_s=1.7, kind="controller_crash",
+                                params={"mode": 0.0, "_deadline": 1e9}),))
+        elif self_test:
             # the deliberate violation needs a quiet campaign: no scheduled
             # faults competing with the suppressed reset for the verdict
             schedule = ChaosSchedule(seed=seed, horizon_s=2.4, actions=())
         else:
-            schedule = generate_schedule(seed)
+            schedule = generate_schedule(seed,
+                                         controller_crash=controller_crash)
     horizon = schedule.horizon_s
     apps = ("alpha", "beta")
     # trace=True: spans only read the sim clock, so tracing is free of
@@ -465,6 +546,7 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
     }
     restore_checks: List[dict] = []
     driver_errors: List[str] = []
+    recovery_reports: List[dict] = []
     obs: Dict[str, List[Tuple[int, Optional[int]]]] = {a: [] for a in apps}
     try:
         ctl = cluster.controller
@@ -488,7 +570,114 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
         t0 = cluster.clock.now()
         injector = ChaosInjector(cluster, schedule, apps, t0)
         beta_drv = _BetaDriver(cluster, beta, schedule, seed, horizon,
-                               oracle_b, sink, self_test)
+                               oracle_b, sink, self_test,
+                               crash_self_test=crash_self_test)
+
+        def crash_ready(mode: str) -> bool:
+            if crash_self_test:
+                # the self-test crash defers until the violation is armed:
+                # journal suppressed *and* one unjournaled commit has been
+                # acknowledged (else a slow start could crash before the
+                # journal and catalog ever diverge, and the run reads green)
+                return (beta_drv._self_test_done
+                        and sink["commit_counts"]["beta"] >= 3)
+            if mode == "drain":
+                return ctl.drains.stats()["active"] > 0
+            if mode == "window":
+                return beta_drv.handle is not None
+            return True
+
+        def do_controller_crash(mode: str) -> str:
+            """The tentpole's end-to-end sequence, fired mid-chaos: capture
+            ground truth, hard-crash the control plane, warm-recover from
+            the journal, then prove fencing and restorability."""
+            j = ctl.journal
+            truth_before = dict(j.truth()) if j is not None else {}
+            pfs_before = {
+                app: max(cluster.pfs.list_checkpoints(app), default=-1)
+                for app in apps}
+            # the journal-before-state barrier means every checkpoint id the
+            # live catalog has issued was journaled *first* — so recovery's
+            # max_known must cover the pre-crash catalog, deterministically,
+            # no matter where the crash lands relative to drain timing
+            known_before = {}
+            with ctl._lock:
+                for app in apps:
+                    try:
+                        ids = list(ctl.app(app).checkpoints)
+                    except TOLERATED_ERRORS:
+                        ids = []
+                    known_before[app] = max(ids, default=-1)
+            old_epoch = ctl.fence.current
+            ctl.crash()
+            report = ctl.recover()
+            # stale-epoch probe: an op stamped with the pre-crash epoch
+            # must be refused by the fence, not silently applied
+            probe = "skipped"
+            for agent in ctl.agents_for("alpha") + ctl.agents_for("beta"):
+                try:
+                    fut = agent.put(
+                        ShardKey("alpha", 999_999, "_staleprobe", 0),
+                        b"\x00" * 8, epoch=old_epoch)
+                    fut.result(timeout=STALE_PROBE_WAIT_S)
+                    probe = "accepted"      # fence failed — CRIT downstream
+                    break
+                except StaleEpochError:
+                    probe = "rejected"
+                    break
+                except TOLERATED_ERRORS:
+                    continue                # dead/stopped agent: try another
+            # post-recovery restores, judged against the same numpy
+            # oracles; a tolerated fault-window exception is *skipped*
+            # here, not failed — other scheduled faults are still live at
+            # this point, and the post-quiesce final sweep is the
+            # authoritative judge of restorability
+            post: List[dict] = []
+            for client, oracle in ((alpha, oracle_a), (beta, oracle_b)):
+                try:
+                    oracle.verify(client.restart(), post)
+                except TOLERATED_ERRORS as exc:
+                    post.append({"app": client.app_id, "ckpt": -1,
+                                 "ok": True, "skipped": True,
+                                 "detail": f"post-recovery restore raised "
+                                           f"{type(exc).__name__} under "
+                                           f"live faults (skipped)"})
+            restore_checks.extend(post)
+            post_latest: Dict[str, Optional[int]] = {}
+            for app in apps:
+                try:
+                    got = ctl.latest_restartable(app)
+                except TOLERATED_ERRORS:
+                    got = None
+                post_latest[app] = None if got is None \
+                    else int(got[0].ckpt_id)
+            # the live workloads keep committing *during* the recovery
+            # sequence, so the "never newer than journaled truth" bound is
+            # the journal as of after the post_latest measurement — truth
+            # only grows, and anything restartable at measurement time was
+            # journaled (barrier write) before it committed
+            truth_after = dict(j.truth()) if j is not None else {}
+            recovery_reports.append({
+                "mode": mode,
+                "epoch": int(report["epoch"]),
+                "truth_before": truth_before,
+                "truth_after": truth_after,
+                "pfs_before": pfs_before,
+                "known_before": known_before,
+                "max_known": {
+                    a: int(report["apps"].get(a, {}).get("max_known", -1))
+                    for a in apps},
+                "post_latest": post_latest,
+                "stale_probe": probe,
+                "post_restores": post,
+                "chains_reset": int(report["chains_reset"]),
+                "downgraded": len(report["downgraded"]),
+                "drains_resubmitted": int(report["drains_resubmitted"]),
+            })
+            return f"epoch={report['epoch']} probe={probe}"
+
+        injector.crash_ready = crash_ready
+        injector.crash_hook = do_controller_crash
 
         # alpha's rank-failure times: seeded, inside the active window
         frng = np.random.default_rng(seed + 0xA1FA)
@@ -527,11 +716,11 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
                 driver_errors.append(
                     f"alpha: {exc!r}\n{traceback.format_exc()}")
 
-        # alpha's oracle can't see individual commit ids (the workload owns
-        # its commit loop) — but alpha never mutates its parts, so every
-        # checkpoint has identical content and one record per ckpt id
-        # suffices; pre-register a generous id range
-        for ck in range(1, 200):
+        # alpha's oracle can't see individual commit steps (the workload
+        # owns its commit loop) — but alpha never mutates its parts, so
+        # every checkpoint has identical content and one record per step
+        # suffices; pre-register a generous step range
+        for ck in range(200):
             oracle_a.record(ck, {"state": alpha_parts})
         alpha_thread = threading.Thread(target=alpha_main, daemon=True,
                                         name="chaos-alpha")
@@ -562,6 +751,14 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
             sink["stalls"].append(
                 f"alpha workload thread still running after "
                 f"{ALPHA_JOIN_S:.0f}s wall join")
+        if crash_self_test and not recovery_reports:
+            # the deferred self-test crash never found its arming window
+            # inside the loop (e.g. a wall-budget bailout): fire it now —
+            # by end of campaign the suppressed journal has provably
+            # diverged from the catalog, so the verdict stays meaningful
+            sink["notes"].append("self-test crash fired post-loop "
+                                 "(in-loop deferral never armed)")
+            do_controller_crash("plain")
         beta_drv.abort()
 
         # settle: clear transients, let the health loop finish processing
@@ -589,7 +786,8 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
             stalls=list(sink["stalls"]), driver_errors=driver_errors,
             notes=list(sink["notes"]), resizes=int(sink["resizes"]),
             final_sim_t=cluster.clock.now() - t0,
-            sim_bound_s=SIM_BOUND_FACTOR * horizon + 10.0)
+            sim_bound_s=SIM_BOUND_FACTOR * horizon + 10.0,
+            recovery_reports=list(recovery_reports))
         results = run_checks(evidence)
         # any non-OK verdict dumps the flight recorder while the cluster is
         # still alive: the last N events + spans around the failure, keyed
@@ -597,7 +795,7 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
         flight_dump = None
         failing = [r.as_dict() for r in results if int(r.status) >= 1]
         if failing:
-            suffix = "_selftest" if self_test else ""
+            suffix = "_selftest" if (self_test or crash_self_test) else ""
             flight_dump = ctl.flight.dump(
                 f"chaos_seed_{seed}{suffix}",
                 extra={"seed": int(seed), "failing_checks": failing})
@@ -612,10 +810,11 @@ def run_campaign(seed: int, schedule: Optional[ChaosSchedule] = None,
     worst = max((r.status for r in results), default=0)
     return {
         "seed": int(seed),
-        "self_test": bool(self_test),
+        "self_test": bool(self_test or crash_self_test),
         "ok": int(worst) < 2,
         "worst": ["OK", "WARN", "CRIT"][int(worst)],
         "schedule": schedule.as_dict(),
         "checks": [r.as_dict() for r in results],
+        "recovery_reports": recovery_reports,
         "flight_dump": flight_dump,
     }

@@ -33,6 +33,7 @@ ALLOWED_RESET_REASONS = frozenset({
     E.CKPT_FAILED,
     E.CKPT_EXPIRED,
     E.SHARD_DEMOTED,
+    E.CONTROLLER_RECOVERED,
     "resize",
     "app_finished",
     "commit_encode_failed",
@@ -50,6 +51,9 @@ _DESTRUCTIVE_EVENTS = frozenset({
     E.SHARD_DEMOTED,
     E.CHAOS_INJECTED,
     E.CHAOS_CLEARED,
+    # a warm recovery conservatively fails PENDING checkpoints and may
+    # downgrade between durable tiers, so latest_restartable may step back
+    E.CONTROLLER_RECOVERED,
 })
 
 # triggers whose firing *requires* a reset of any live chain of the
@@ -196,6 +200,12 @@ def check_delta_chain_reset_policy(ev) -> Tuple[Status, str]:
                 alive[rec["app"]] = True
         elif name == E.DELTA_CHAIN_RESET:
             alive[rec["app"]] = False
+        elif name == E.CONTROLLER_RECOVERED:
+            # no chain survives a warm recovery: journal-open chains get
+            # explicit resets, and any chain the lazy-buffered journal
+            # never saw died with the process (next commit keyframes)
+            for app in alive:
+                alive[app] = False
         elif name in _APP_TRIGGERS or name in _CLUSTER_TRIGGERS:
             affected = [rec["app"]] if name in _APP_TRIGGERS \
                 else [a for a, live in alive.items() if live]
@@ -203,10 +213,16 @@ def check_delta_chain_reset_policy(ev) -> Tuple[Status, str]:
                 if not alive.get(app):
                     continue
                 hi = min(len(records), i + _TRIGGER_SLACK)
-                if not any(r["event"] == E.DELTA_CHAIN_RESET
-                           and r.get("app") == app
-                           and r.get("reason") == name
-                           for r in records[i:hi]):
+                # a trigger that lands inside a controller-crash window
+                # can't be fan-out-handled — the recovery's conservative
+                # chain invalidation discharges it instead
+                if not any(
+                        (r["event"] == E.DELTA_CHAIN_RESET
+                         and r.get("app") == app
+                         and r.get("reason") in (name,
+                                                 E.CONTROLLER_RECOVERED))
+                        or r["event"] == E.CONTROLLER_RECOVERED
+                        for r in records[i:hi]):
                     return Status.CRIT, (
                         f"app={app}: {name} fired with a live delta chain "
                         f"but no matching reset followed")
@@ -318,6 +334,75 @@ def check_ec_multi_death_durability(ev) -> Tuple[Status, str]:
                              "restore was ever compared")
     return Status.OK, (f"{len(deaths)} multi-death action(s) survived; "
                        f"{len(compared)} EC-app restore(s) bit-identical")
+
+
+@invariant("recovery_fidelity")
+def check_recovery_fidelity(ev) -> Tuple[Status, str]:
+    """After every controller crash + warm recovery: ``latest_restartable``
+    is bit-identically restorable (judged by the numpy oracles) and never
+    *newer* than journaled truth (no phantom checkpoints invented by the
+    rebuild); recovery knows at least as much as the PFS durably holds
+    (a lost or suppressed journal write is exactly this clause going red);
+    and an op stamped with the pre-crash epoch is provably rejected."""
+    reports = getattr(ev, "recovery_reports", None) or []
+    crashes = [r for r in ev.records
+               if r["event"] == E.CHAOS_INJECTED
+               and r.get("kind") == "controller_crash"
+               and not str(r.get("detail", "")).startswith("skipped")]
+    if not reports:
+        if crashes:
+            return Status.CRIT, (
+                f"{len(crashes)} controller crash(es) fired but no "
+                f"recovery report was collected")
+        return Status.OK, "no controller crash this seed"
+    problems: List[str] = []
+    for i, rep in enumerate(reports):
+        # bound against journal truth as of *after* the post-recovery
+        # measurement: live drivers keep journaling commits throughout the
+        # recovery sequence, and truth only ever grows
+        truth = rep.get("truth_after") or rep["truth_before"]
+        for app, latest in rep["post_latest"].items():
+            bound = truth.get(app, -1)
+            if latest is not None and latest > bound:
+                problems.append(
+                    f"#{i} {app}: latest_restartable={latest} newer than "
+                    f"journaled truth {bound} (phantom checkpoint)")
+        for app, known in rep["max_known"].items():
+            pfs_hi = rep["pfs_before"].get(app, -1)
+            if known < pfs_hi:
+                problems.append(
+                    f"#{i} {app}: recovery knows up to ckpt {known} but "
+                    f"PFS durably holds up to {pfs_hi} (journal write "
+                    f"lost or suppressed)")
+            # the catalog bound is the deterministic form of the same
+            # clause: journal-before-state means every id the pre-crash
+            # catalog issued was journaled first, independent of whether
+            # its drain reached a PFS manifest before the crash landed
+            cat_hi = (rep.get("known_before") or {}).get(app, -1)
+            if known < cat_hi:
+                problems.append(
+                    f"#{i} {app}: recovery knows up to ckpt {known} but "
+                    f"the pre-crash catalog had issued up to {cat_hi} "
+                    f"(journal write lost or suppressed)")
+        if rep["stale_probe"] == "accepted":
+            problems.append(f"#{i}: op stamped with the pre-crash epoch "
+                            f"was accepted after recovery (fence broken)")
+        bad = [c for c in rep["post_restores"] if not c["ok"]]
+        if bad:
+            problems.append(
+                f"#{i}: {len(bad)} corrupt post-recovery restore(s); "
+                f"first: app={bad[0]['app']} ckpt={bad[0]['ckpt']} "
+                f"{bad[0]['detail']}")
+    if problems:
+        return Status.CRIT, "; ".join(problems[:4])
+    if all(r["stale_probe"] == "skipped" for r in reports):
+        return Status.WARN, (f"{len(reports)} recovery(ies) clean, but no "
+                             f"stale-epoch probe ever landed (vacuous "
+                             f"fencing coverage)")
+    return Status.OK, (
+        f"{len(reports)} crash(es) recovered: latest_restartable within "
+        f"journaled truth, PFS fully accounted, stale ops fenced, "
+        f"post-recovery restores bit-identical")
 
 
 @invariant("no_leaked_window_state")

@@ -9,10 +9,20 @@ Reproduce one red seed bit-exactly (the line the runner prints on CRIT)::
     python -m repro.chaos.run --seed 17 --schedule-json \
         artifacts/chaos/schedule_17.json
 
+Controller-crash shard (every seed additionally crashes and warm-recovers
+the control plane mid-chaos; ``recovery_fidelity`` judges the rebuild)::
+
+    python -m repro.chaos.run --seeds 100..124 --controller-crash
+
 Self-test (deliberate violation: the mandatory delta-chain reset is
 suppressed mid-campaign; the matching invariant must go CRIT)::
 
     python -m repro.chaos.run --self-test --seed 0
+
+Crash self-test (journal writes silently suppressed before a scheduled
+controller crash; ``recovery_fidelity`` must go CRIT)::
+
+    python -m repro.chaos.run --self-test --controller-crash --seed 0
 
 Exit status: 0 when no campaign has a CRIT check (WARNs print but pass),
 1 otherwise.  When ``$GITHUB_STEP_SUMMARY`` is set, red seeds append their
@@ -55,11 +65,16 @@ def _repro_line(seed: int, schedule_path: str) -> str:
 
 
 def _run_one(seed: int, schedule: Optional[ChaosSchedule],
-             self_test: bool) -> Tuple[dict, List[str]]:
+             self_test: bool,
+             controller_crash: bool = False) -> Tuple[dict, List[str]]:
     """One campaign -> (report, printed lines)."""
     lines: List[str] = []
+    crash_self = self_test and controller_crash
     try:
-        report = run_campaign(seed, schedule=schedule, self_test=self_test)
+        report = run_campaign(seed, schedule=schedule,
+                              self_test=self_test and not controller_crash,
+                              controller_crash=controller_crash,
+                              crash_self_test=crash_self)
     except Exception as exc:  # noqa: BLE001 - a crash is a red campaign
         report = {
             "seed": int(seed),
@@ -99,7 +114,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--report", help="write the JSON report here")
     ap.add_argument("--self-test", action="store_true",
                     help="deliberately violate the chain-reset invariant "
-                         "and assert the matching check goes CRIT")
+                         "(or, with --controller-crash, suppress journal "
+                         "writes before a crash) and assert the matching "
+                         "check goes CRIT")
+    ap.add_argument("--controller-crash", action="store_true",
+                    help="additionally crash + warm-recover the controller "
+                         "mid-campaign on every seed (recovery_fidelity "
+                         "judges the rebuild)")
     args = ap.parse_args(argv)
 
     if args.seed is not None:
@@ -116,7 +137,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     reports: List[dict] = []
     red: List[dict] = []
     for seed in seeds:
-        report, lines = _run_one(seed, schedule, args.self_test)
+        report, lines = _run_one(seed, schedule, args.self_test,
+                                 args.controller_crash)
         reports.append(report)
         print("\n".join(lines), flush=True)
         if report["worst"] == "CRIT":
@@ -137,14 +159,17 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.self_test:
         # the deliberate violation must be *caught*: green here is a failure
+        want = ("recovery_fidelity" if args.controller_crash
+                else "delta_chain_reset_policy")
         caught = any(
-            c["name"] == "delta_chain_reset_policy" and c["status"] == "CRIT"
+            c["name"] == want and c["status"] == "CRIT"
             for r in reports for c in r["checks"])
         if caught:
-            print("self-test: OK (suppressed chain reset detected as CRIT)")
+            print(f"self-test: OK (deliberate violation detected as CRIT "
+                  f"by {want})")
             return 0
-        print("self-test: FAILED — the chain-reset invariant stayed green "
-              "through a suppressed mandatory reset")
+        print(f"self-test: FAILED — {want} stayed green through a "
+              f"deliberate violation")
         return 1
 
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")

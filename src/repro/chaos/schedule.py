@@ -22,6 +22,8 @@ import numpy as np
 # every fault kind the injector knows how to fire.  "mid_window_fault" is a
 # second-order kind: its at_s is pinned inside the overlap-resize window
 # and its params carry the concrete fault to fire there.
+# "controller_crash" is never drawn in the primary loop — it only appears
+# when a campaign opts in (``generate_schedule(controller_crash=True)``).
 KINDS = (
     "agent_death",
     "multi_agent_death",
@@ -32,10 +34,21 @@ KINDS = (
     "partition",
     "l3_outage",
     "mid_window_fault",
+    "controller_crash",
 )
+
+# the primary draw pool — identical to the pre-controller_crash KINDS[:-1]
+# slice so every historical seed still materializes bit-identically
+_PRIMARY_KINDS = KINDS[:8]
 
 # what a mid-window fault can concretely be
 MID_WINDOW_FAULTS = ("agent_death", "node_loss", "nic_down")
+
+# how a controller crash is timed relative to control-plane activity:
+# "plain" fires at its offset; "drain" waits for an active L1->L2 drain;
+# "window" waits for an open overlap-resize window (both with a bounded
+# grace, falling back to plain when the condition never arrives)
+CRASH_MODES = ("plain", "drain", "window")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +127,8 @@ class ChaosSchedule:
 
 
 def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
-                      n_apps: int = 2) -> ChaosSchedule:
+                      n_apps: int = 2,
+                      controller_crash: bool = False) -> ChaosSchedule:
     """Materialize the seed's schedule.
 
     Composition rules (so a campaign stays *survivable* — the invariants
@@ -127,7 +141,11 @@ def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
         carry a bounded ``duration_s`` and are cleared by the injector;
       * roughly half of the seeds get an overlap resize; when one is
         scheduled, one extra fault may be pinned *inside* the window
-        (the mid-overlap-window failure shape).
+        (the mid-overlap-window failure shape);
+      * ``controller_crash=True`` adds exactly one controller crash in
+        [0.5, 0.75] x horizon with a seeded :data:`CRASH_MODES` timing
+        mode.  The crash draws happen *after* every other draw, so a
+        seed's fault schedule is bit-identical with the flag on or off.
     """
     rng = np.random.default_rng(seed)
     actions: List[ChaosAction] = []
@@ -145,7 +163,7 @@ def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
 
     n_actions = int(rng.integers(1, 5))
     for _ in range(n_actions):
-        kind = str(rng.choice(KINDS[:-1]))  # mid_window drawn separately
+        kind = str(rng.choice(_PRIMARY_KINDS))  # special kinds drawn below
         at = float(rng.uniform(0.15, 0.75)) * horizon_s
         if kind == "node_loss":
             if used_node_loss:
@@ -209,6 +227,13 @@ def generate_schedule(seed: int, horizon_s: float = 2.4, n_nodes: int = 3,
         actions.append(ChaosAction(
             at_s=at, kind="mid_window_fault", target=target,
             params={"sub": float(MID_WINDOW_FAULTS.index(sub)), **params}))
+
+    if controller_crash:
+        # drawn last so enabling the crash never perturbs the fault draws
+        at = float(rng.uniform(0.50, 0.75)) * horizon_s
+        mode = int(rng.integers(0, len(CRASH_MODES)))
+        actions.append(ChaosAction(at_s=at, kind="controller_crash",
+                                   params={"mode": float(mode)}))
 
     actions.sort(key=lambda a: (a.at_s, a.kind))
     return ChaosSchedule(seed=seed, horizon_s=horizon_s,

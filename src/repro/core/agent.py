@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..obs import trace_id_for
+from .retry import with_backoff
 from .simnet import EWMA, FaultInjector, MemBus, SimNIC
 from .tiers import (PFSTier, SliceState, TierPipeline, decode_payload,
                     decode_slice_frames, ec_decode_shard, ec_encode_shard,
@@ -110,10 +111,10 @@ class ReplaySpec:
 
 class _Op:
     __slots__ = ("kind", "key", "payload", "crc", "future", "pfs", "on_done",
-                 "trace")
+                 "trace", "epoch")
 
     def __init__(self, kind, key=None, payload=None, crc=None, future=None,
-                 pfs=None, on_done=None, trace=None):
+                 pfs=None, on_done=None, trace=None, epoch=None):
         self.kind = kind
         self.key = key
         self.payload = payload
@@ -124,6 +125,9 @@ class _Op:
         # TraceContext of the submitting thread: the inbox hand-off crosses
         # threads, so causality must ride the op itself
         self.trace = trace
+        # controller epoch current when the op was submitted; the dispatch
+        # loop refuses ops stamped before a controller recovery
+        self.epoch = epoch
 
 
 class Agent:
@@ -131,13 +135,16 @@ class Agent:
 
     def __init__(self, agent_id: AgentId, node_id: NodeId, store: TierPipeline,
                  nic: SimNIC, fault: Optional[FaultInjector] = None,
-                 membus: Optional[MemBus] = None, tracer=None):
+                 membus: Optional[MemBus] = None, tracer=None, fence=None,
+                 bus=None):
         self.agent_id = agent_id
         self.node_id = node_id
         self.store = store
         self.nic = nic
         self.membus = membus
         self.tracer = tracer
+        self.fence = fence          # controller EpochFence (None = unfenced)
+        self.bus = bus              # controller EventBus (telemetry only)
         self.fault = fault or FaultInjector()
         self.peer_reads = 0
         self.peer_bytes_out = 0
@@ -162,12 +169,20 @@ class Agent:
         self._thread.start()
 
     # ------------------------------------------------------------------ RDMA
-    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None) -> Future:
+    def put(self, key: ShardKey, payload: bytes, crc: Optional[int] = None,
+            *, epoch: Optional[int] = None) -> Future:
         """Non-blocking RDMA-put analogue.  Returns a Future that resolves to
-        a TransferRecord once the shard has landed in L1."""
+        a TransferRecord once the shard has landed in L1.
+
+        ``epoch`` overrides the fence stamp (tests and the chaos stale-probe
+        use it to impersonate a pre-recovery submitter); by default the op
+        carries the epoch current *now*, and the dispatch loop refuses it if
+        a recovery happens before it runs."""
         fut: Future = Future()
         self._inbox.put(_Op("put", key=key, payload=payload, crc=crc,
-                            future=fut, trace=self._cur_trace()))
+                            future=fut, trace=self._cur_trace(),
+                            epoch=self._cur_epoch() if epoch is None
+                            else epoch))
         return fut
 
     def get(self, key: ShardKey) -> bytes:
@@ -251,7 +266,8 @@ class Agent:
         ``spec.out_key``).  Resolves to ``{nbytes, reads}`` accounting."""
         fut: Future = Future()
         self._inbox.put(_Op("assemble", payload=spec, future=fut,
-                            trace=self._cur_trace()))
+                            trace=self._cur_trace(),
+                            epoch=self._cur_epoch()))
         return fut
 
     def replay(self, spec: ReplaySpec) -> Future:
@@ -263,7 +279,8 @@ class Agent:
         client splices into parts it already prefetched."""
         fut: Future = Future()
         self._inbox.put(_Op("replay", payload=spec, future=fut,
-                            trace=self._cur_trace()))
+                            trace=self._cur_trace(),
+                            epoch=self._cur_epoch()))
         return fut
 
     def drop_assembly_state(self, key: ShardKey) -> None:
@@ -277,7 +294,8 @@ class Agent:
         nor a fallback tier can produce the payload."""
         fut: Future = Future()
         self._inbox.put(_Op("rebuild", payload=spec, future=fut,
-                            trace=self._cur_trace()))
+                            trace=self._cur_trace(),
+                            epoch=self._cur_epoch()))
         return fut
 
     # ------------------------------------------------------------------ L2
@@ -286,7 +304,8 @@ class Agent:
         """Write the given L1 shards to the PFS (asynchronously)."""
         fut: Future = Future()
         self._inbox.put(_Op("drain", key=keys, pfs=pfs, future=fut,
-                            on_done=on_done, trace=self._cur_trace()))
+                            on_done=on_done, trace=self._cur_trace(),
+                            epoch=self._cur_epoch()))
         return fut
 
     # ------------------------------------------------------------------ admin
@@ -331,6 +350,27 @@ class Agent:
         inbox (None when tracing is off)."""
         return self.tracer.current() if self.tracer is not None else None
 
+    def _cur_epoch(self) -> Optional[int]:
+        """The controller epoch to stamp an op with at submit time."""
+        return self.fence.current if self.fence is not None else None
+
+    def _check_epoch(self, op: _Op) -> None:
+        """Refuse ops stamped before a controller recovery (zombie fencing):
+        the submitting controller — or work it queued — predates the
+        recovered state and must not mutate it."""
+        if self.fence is None or op.epoch is None:
+            return
+        if op.epoch != self.fence.current:
+            if self.bus is not None:
+                from . import events as E
+                self.bus.publish(E.STALE_OP_REJECTED, kind=op.kind,
+                                 agent=self.agent_id, epoch=op.epoch,
+                                 current=self.fence.current)
+            from .services.journal import StaleEpochError
+            raise StaleEpochError(
+                f"agent {self.agent_id} refused {op.kind}: stamped epoch "
+                f"{op.epoch}, fence at {self.fence.current}")
+
     def _op_trace_id(self, op: _Op) -> Optional[str]:
         """Trace identity of one op: the carried context's, else derived
         from the shard key — a drain retry resubmitted without context
@@ -354,6 +394,7 @@ class Agent:
             if op.kind == "stop":
                 break
             try:
+                self._check_epoch(op)
                 tracer = self.tracer
                 if tracer is not None and tracer.enabled:
                     trace_id = self._op_trace_id(op)
@@ -459,7 +500,12 @@ class Agent:
                 # cost one read and one decompress, not k
                 cached = tier_cache.get(key)
                 if cached is None:
-                    payload = provider.read_shard(key)
+                    # a tier mid-outage recovers within sim-milliseconds;
+                    # a short backoff keeps one blip from failing the fetch
+                    payload = with_backoff(
+                        lambda: provider.read_shard(key), 0.1,
+                        clock=self.nic.clock, bus=self.bus,
+                        what=f"peer_fallback_read:{key.base()}")
                     reads.append({"node": provider.name,
                                   "bytes": len(payload), "kind": "tier"})
                     if f.codec == "zstd":

@@ -46,7 +46,7 @@ class ICheckCluster:
                  keep_l2: int = 0, keep_l3: int = 0,
                  delta_keyframe_every: int = 8,
                  trace: bool = False, trace_path: Optional[str] = None,
-                 obs_dir: Optional[str] = None):
+                 obs_dir: Optional[str] = None, journal: bool = True):
         self.clock = SimClock(time_scale)
         self.fault = FaultInjector()
         self.rm = ResourceManager()
@@ -80,7 +80,8 @@ class ICheckCluster:
             watermark_high=watermark_high, watermark_low=watermark_low,
             keep_l2=keep_l2, keep_l3=keep_l3,
             delta_keyframe_every=delta_keyframe_every,
-            trace=trace, trace_path=trace_path, obs_dir=obs_dir)
+            trace=trace, trace_path=trace_path, obs_dir=obs_dir,
+            journal=journal)
 
     @property
     def telemetry(self):

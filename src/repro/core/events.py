@@ -144,6 +144,25 @@ APP_RANK_FAILED = "app_rank_failed"
 # (Young/Daly over telemetry estimates); clients/trainers re-pace on this
 INTERVAL_CHANGED = "interval_changed"
 
+# -- crash-consistent control plane (metadata journal + epoch fencing) ------
+# the controller finished a warm recovery: journal snapshot+tail replayed
+# into a fresh catalog, divergences reconciled against the live tiers, open
+# chains/windows conservatively reset; payload carries the new epoch, the
+# replay stats and the per-app recovered high-water marks
+CONTROLLER_RECOVERED = "controller_recovered"
+# an agent inbox op / drain queue entry / RM interaction carried a stale
+# controller epoch and was refused — the fencing that stops a zombie
+# controller (or its queued work) from corrupting post-recovery state
+STALE_OP_REJECTED = "stale_op_rejected"
+# a transient-fault retry policy (with_backoff) gave up: the per-op
+# deadline would be exceeded — payload carries what/attempts/error; the
+# underlying error is still raised to the caller
+RETRY_EXHAUSTED = "retry_exhausted"
+# Controller.wait_for_drains / wait_for_uploads timed out with work still
+# queued; the returned report says what is pending, this event makes the
+# silent-timeout hazard observable
+WAIT_TIMEOUT = "wait_timeout"
+
 # -- chaos campaigns (repro.chaos) ------------------------------------------
 # the chaos injector fired one scheduled action (payload: kind, target,
 # params, scheduled at_s) — the audit trail every invariant check can line

@@ -28,12 +28,15 @@ from .types import AgentId, AppId, NodeSpec
 class Manager:
     def __init__(self, spec: NodeSpec, clock: Optional[SimClock] = None,
                  fault: Optional[FaultInjector] = None, bus=None,
-                 spill_bytes: int = 0, spill_dir: Optional[str] = None):
+                 spill_bytes: int = 0, spill_dir: Optional[str] = None,
+                 fence=None):
         self.spec = spec
         self.node_id = spec.node_id
         self.clock = clock or SimClock()
         self.fault = fault or FaultInjector()
         self.bus = bus
+        # controller epoch fence: agents launched here stamp + validate ops
+        self.fence = fence
         tiers = [MemoryTier(spec.memory_bytes)]
         if spill_bytes > 0:
             root = spill_dir or tempfile.mkdtemp(
@@ -75,7 +78,8 @@ class Manager:
             # so inbox ops carry and reinstate the submitter's context
             agent = Agent(agent_id, self.node_id, self.store, self.nic,
                           self.fault, membus=self.membus,
-                          tracer=getattr(self.bus, "tracer", None))
+                          tracer=getattr(self.bus, "tracer", None),
+                          fence=self.fence, bus=self.bus)
             self._agents[agent_id] = agent
             self._agent_apps[agent_id] = app_id
         return agent
@@ -94,6 +98,13 @@ class Manager:
     def agent(self, agent_id: AgentId) -> Optional[Agent]:
         with self._lock:
             return self._agents.get(agent_id)
+
+    def agent_ids_for(self, app_id: AppId) -> List[AgentId]:
+        """Agents on this node currently serving ``app_id`` (recovery uses
+        this to rebuild app→agent assignments from live managers)."""
+        with self._lock:
+            return [aid for aid, app in self._agent_apps.items()
+                    if app == app_id]
 
     # ----------------------------------------------------------------- health
     def alive(self) -> bool:

@@ -45,6 +45,14 @@ class ResourceManager:
         self.on_retake: Optional[Callable[[NodeId], None]] = None
         self.on_migrate: Optional[Callable[[NodeId, NodeId], None]] = None
         self.on_app_info: Optional[Callable[[AppId, dict], None]] = None
+        # controller epoch fence (set by the controller).  Mutating calls
+        # carry the caller's epoch; a zombie controller from before a
+        # recovery must not move nodes or queue resizes.
+        self.fence = None
+
+    def _check_epoch(self, epoch, what: str) -> None:
+        if self.fence is not None and epoch is not None:
+            self.fence.check(epoch, what)
 
     # ------------------------------------------------------------- node pool
     def add_free_node(self, spec: NodeSpec) -> None:
@@ -63,8 +71,9 @@ class ResourceManager:
             return len(self._free)
 
     # ---------------------------------------------------- interaction 1: give
-    def request_icheck_node(self) -> Optional[NodeSpec]:
+    def request_icheck_node(self, *, epoch=None) -> Optional[NodeSpec]:
         """Controller asks for one more iCheck node; None if unavailable."""
+        self._check_epoch(epoch, "request_icheck_node")
         with self._lock:
             if not self._free:
                 return None
@@ -73,9 +82,10 @@ class ResourceManager:
             return spec
 
     # -------------------------------------------------- interaction 2: retake
-    def retake_icheck_node(self, node_id: NodeId) -> bool:
+    def retake_icheck_node(self, node_id: NodeId, *, epoch=None) -> bool:
         """RM pulls a node back (e.g. priority job).  The controller is told
         first so it can migrate shards off the node."""
+        self._check_epoch(epoch, "retake_icheck_node")
         with self._lock:
             spec = self._icheck_nodes.get(node_id)
         if spec is None:
@@ -87,8 +97,9 @@ class ResourceManager:
             self._free.append(spec)
         return True
 
-    def release_icheck_node(self, node_id: NodeId) -> None:
+    def release_icheck_node(self, node_id: NodeId, *, epoch=None) -> None:
         """Controller voluntarily returns a node."""
+        self._check_epoch(epoch, "release_icheck_node")
         with self._lock:
             spec = self._icheck_nodes.pop(node_id, None)
             if spec is not None:
@@ -100,15 +111,17 @@ class ResourceManager:
             self.on_migrate(src, dst)
 
     # ------------------------------------------------ interaction 4: app info
-    def register_app(self, app_id: AppId, ranks: int) -> None:
+    def register_app(self, app_id: AppId, ranks: int, *, epoch=None) -> None:
+        self._check_epoch(epoch, "register_app")
         with self._lock:
             self._app_ranks[app_id] = ranks
 
     def schedule_resize(self, app_id: AppId, new_ranks: int,
-                        reason: str = "rm") -> None:
+                        reason: str = "rm", *, epoch=None) -> None:
         """Queue a malleability event for the app AND forewarn iCheck
         (paper: "inform the controller about an impending resource change of
         an application so that agents can prepare ... ahead of time")."""
+        self._check_epoch(epoch, "schedule_resize")
         ev = ResizeEvent(app_id, new_ranks, reason)
         with self._lock:
             self._pending_resize[app_id] = ev
@@ -121,8 +134,9 @@ class ResourceManager:
         with self._lock:
             return self._pending_resize.get(app_id)
 
-    def complete_resize(self, app_id: AppId) -> None:
+    def complete_resize(self, app_id: AppId, *, epoch=None) -> None:
         """MPI_Comm_adapt_commit analogue: resize finished."""
+        self._check_epoch(epoch, "complete_resize")
         with self._lock:
             ev = self._pending_resize.pop(app_id, None)
             if ev is not None:

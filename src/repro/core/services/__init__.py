@@ -16,11 +16,14 @@ the :mod:`repro.core.events` bus:
                        ``INTERVAL_CHANGED`` events (the adaptive loop)
   * :mod:`lifecycle` — storage lifecycle: watermark demotion, background
                        L2→L3 trickle, keep-last-K retention/GC with pinning
+  * :mod:`journal`   — write-ahead metadata journal (CRC-framed WAL +
+                       compacted snapshots) and the controller epoch fence
 """
 from .catalog import CheckpointCatalog
 from .drain import DrainOrchestrator
 from .health import HealthMonitor
 from .interval import IntervalController, daly_interval, young_interval
+from .journal import EpochFence, MetadataJournal, StaleEpochError
 from .lifecycle import StorageLifecycleService
 from .placement import PlacementService
 from .resize import ResizePlanner
@@ -29,4 +32,5 @@ from .telemetry import AppTelemetry, TelemetryService
 __all__ = ["CheckpointCatalog", "DrainOrchestrator", "HealthMonitor",
            "IntervalController", "PlacementService", "ResizePlanner",
            "StorageLifecycleService", "TelemetryService", "AppTelemetry",
+           "EpochFence", "MetadataJournal", "StaleEpochError",
            "daly_interval", "young_interval"]

@@ -72,19 +72,38 @@ class CheckpointCatalog:
     def close(self) -> None:
         self._unsub_chain()
 
+    def _journal(self, kind: str, **fields) -> None:
+        """Append one WAL record *before* the mutation it describes (no-op
+        when the controller runs without a metadata journal)."""
+        j = getattr(self.ctl, "journal", None)
+        if j is not None:
+            j.append(kind, **fields)
+
     # ------------------------------------------------------------- lifecycle
     def open_app(self, app_id: AppId) -> None:
+        self._journal("open_app", app=app_id)
         self._seq[app_id] = itertools.count()
+
+    def set_seq(self, app_id: AppId, next_ckpt: int) -> None:
+        """Re-seat the id sequence past recovered history (recovery path)."""
+        self._seq[app_id] = itertools.count(int(next_ckpt))
 
     def new_checkpoint(self, app_id: AppId, step: int,
                        regions: Dict[str, RegionMeta],
                        userdata: bytes = b"") -> CheckpointMeta:
         ctl = self.ctl
         with ctl._lock:
-            app = ctl._apps[app_id]
+            app = ctl._apps.get(app_id)
+            if app is None or app_id not in self._seq:
+                raise ICheckError(f"app {app_id} is not registered")
             ckpt_id = next(self._seq[app_id])
             meta = CheckpointMeta(app_id=app_id, ckpt_id=ckpt_id, step=step,
                                   regions=dict(regions), userdata=userdata)
+            from ..tiers import region_doc
+            self._journal("new_ckpt", app=app_id, ckpt=ckpt_id, step=step,
+                          userdata_hex=userdata.hex(),
+                          regions={n: region_doc(r)
+                                   for n, r in meta.regions.items()})
             app.checkpoints[ckpt_id] = meta
             total = sum(r.nbytes for r in regions.values())
             app.ckpt_bytes_estimate = max(app.ckpt_bytes_estimate, total)
@@ -92,7 +111,23 @@ class CheckpointCatalog:
 
     def record_shard(self, meta: CheckpointMeta, info: ShardInfo) -> None:
         with self.ctl._lock:
+            k = info.key
+            self._journal("shard", app=meta.app_id, ckpt=meta.ckpt_id,
+                          key=[k.app_id, k.ckpt_id, k.region, k.part,
+                               k.replica],
+                          nbytes=info.nbytes, crc=info.crc32,
+                          agent=info.agent_id)
             meta.shards[info.key] = info
+
+    def set_status(self, meta: CheckpointMeta, status: CkptStatus) -> None:
+        """The single write path for checkpoint status transitions: WAL
+        first, then the in-memory flip (under the controller lock)."""
+        with self.ctl._lock:
+            if meta.status is status:
+                return
+            self._journal("status", app=meta.app_id, ckpt=meta.ckpt_id,
+                          status=status.value)
+            meta.status = status
 
     def finalize(self, meta: CheckpointMeta, drain: bool = True) -> None:
         """All shards acked in L1 → durable pipeline."""
@@ -102,10 +137,11 @@ class CheckpointCatalog:
                 raise ICheckError(
                     f"checkpoint {meta.ckpt_id} incomplete: "
                     f"{len(meta.shards)}/{meta.expected_shards()} shards")
-            meta.status = CkptStatus.IN_L1
+            self.set_status(meta, CkptStatus.IN_L1)
             meta.completed_at = ctl.clock.now()
         ctl.bus.publish(E.CKPT_IN_L1, app=meta.app_id, ckpt=meta.ckpt_id,
                         step=meta.step)
+        ctl.maybe_compact_journal()
         if drain:
             ctl.drains.submit(meta)
 
@@ -143,11 +179,13 @@ class CheckpointCatalog:
         (ref-counted; pair with :meth:`release_chain`)."""
         with self._chain_lock:
             k = (app_id, region)
+            self._journal("chain_hold", app=app_id, region=region)
             self._holds[k] = self._holds.get(k, 0) + 1
 
     def release_chain(self, app_id: AppId, region: str) -> None:
         with self._chain_lock:
             k = (app_id, region)
+            self._journal("chain_release", app=app_id, region=region)
             n = self._holds.get(k, 0) - 1
             if n <= 0:
                 self._holds.pop(k, None)
@@ -161,6 +199,9 @@ class CheckpointCatalog:
         chain (what the per-checkpoint RegionMeta must carry for replay)."""
         with self._chain_lock:
             if states is None:          # chainless (non-float passthrough)
+                if (app_id, region) in self._chains:
+                    self._journal("chain_reset", app=app_id, region=region,
+                                  reason="chainless")
                 self._chains.pop((app_id, region), None)
                 return (ckpt_id,)
             if frame == "key":
@@ -171,6 +212,8 @@ class CheckpointCatalog:
                     raise ICheckError(
                         f"delta frame for {app_id}/{region} without a chain")
                 chain = rc.chain + (ckpt_id,)
+            self._journal("chain_advance", app=app_id, region=region,
+                          chain=list(chain))
             self._chains[(app_id, region)] = RegionChain(chain=chain,
                                                          parts=dict(states))
             return chain
@@ -185,6 +228,9 @@ class CheckpointCatalog:
             victims = [k for k in self._chains
                        if (app_id is None or k[0] == app_id)
                        and (region is None or k[1] == region)]
+            for app, reg in victims:
+                self._journal("chain_reset", app=app, region=reg,
+                              reason=reason)
             dropped = [(k, self._chains.pop(k)) for k in victims]
         for (app, reg), rc in dropped:
             self.ctl.bus.publish(E.DELTA_CHAIN_RESET, app=app, region=reg,
@@ -243,16 +289,18 @@ class CheckpointCatalog:
             meta = app.checkpoints.get(ckpt_id) if app else None
             if meta is not None and meta.status not in (CkptStatus.IN_L2,
                                                         CkptStatus.IN_L3):
-                meta.status = CkptStatus.FAILED
-                failed.append(ckpt_id)
+                victims = [meta]
                 for dep in app.checkpoints.values():
-                    if dep.status in (CkptStatus.IN_L2, CkptStatus.IN_L3,
-                                      CkptStatus.FAILED):
+                    if dep.ckpt_id == ckpt_id or \
+                            dep.status in (CkptStatus.IN_L2, CkptStatus.IN_L3,
+                                           CkptStatus.FAILED):
                         continue
                     if any(r.chain and ckpt_id in r.chain
                            for r in dep.regions.values()):
-                        dep.status = CkptStatus.FAILED
-                        failed.append(dep.ckpt_id)
+                        victims.append(dep)
+                for v in victims:       # WAL first, then the state flips
+                    self.set_status(v, CkptStatus.FAILED)
+                    failed.append(v.ckpt_id)
         for cid in failed:
             ctl.bus.publish(E.CKPT_FAILED, app=app_id, ckpt=cid)
 

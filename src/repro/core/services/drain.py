@@ -38,9 +38,10 @@ class DrainOrchestrator:
         self.max_attempts = max(1, int(max_attempts))
         # queue entries carry the submitter's TraceContext: the drain
         # crosses into a worker thread, so causality rides the tuple
-        self._q: "queue.Queue[Tuple[CheckpointMeta, int, object]]" = \
+        self._q: "queue.Queue[Tuple[CheckpointMeta, int, object, object]]" = \
             queue.Queue()
-        self._bg: "queue.Queue[Callable[[], None]]" = queue.Queue()
+        self._bg: "queue.Queue[Tuple[Callable[[], None], object]]" = \
+            queue.Queue()
         self._stop = threading.Event()
         self._lock = threading.Lock()
         self._active = 0
@@ -51,6 +52,7 @@ class DrainOrchestrator:
         self._max_active = 0
         self._completed = 0
         self._failed = 0
+        self._stale_dropped = 0   # queue entries fenced off post-recovery
         self._workers: List[threading.Thread] = []
 
     # ----------------------------------------------------------------- admin
@@ -71,14 +73,27 @@ class DrainOrchestrator:
             return {
                 "workers": len(self._workers),
                 "active": self._active,
+                "inflight": self._inflight,
                 "max_observed_concurrency": self._max_active,
                 "completed": self._completed,
                 "failed": self._failed,
+                "stale_dropped": self._stale_dropped,
                 "queued": self._q.qsize(),
                 "background_inflight": self._bg_inflight,
                 "background_completed": self._bg_completed,
                 "background_failed": self._bg_failed,
             }
+
+    def _epoch(self):
+        fence = getattr(self.ctl, "fence", None)
+        return fence.current if fence is not None else None
+
+    def _stale(self, epoch) -> bool:
+        """True when a queue entry predates a controller recovery — it must
+        be dropped, not executed against the post-recovery state."""
+        fence = getattr(self.ctl, "fence", None)
+        return fence is not None and epoch is not None \
+            and epoch != fence.current
 
     # ------------------------------------------------------------- interface
     def submit(self, meta: CheckpointMeta, attempt: int = 0,
@@ -88,13 +103,13 @@ class DrainOrchestrator:
             trace = tracer.current()
         with self._lock:
             self._inflight += 1
-        self._q.put((meta, attempt, trace))
+        self._q.put((meta, attempt, trace, self._epoch()))
 
     def submit_background(self, fn: Callable[[], None]) -> None:
         """Queue low-priority work (L2→L3 trickle) behind all live drains."""
         with self._lock:
             self._bg_inflight += 1
-        self._bg.put(fn)
+        self._bg.put((fn, self._epoch()))
 
     def wait_idle(self, timeout: float = 30.0) -> None:
         """Block until the drain queue empties and no drain is in flight."""
@@ -122,9 +137,18 @@ class DrainOrchestrator:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
-                meta, attempt, trace = self._q.get(timeout=0.05)
+                meta, attempt, trace, epoch = self._q.get(timeout=0.05)
             except queue.Empty:
                 self._run_background_one()
+                continue
+            if self._stale(epoch):
+                # queued by a pre-recovery controller: fenced off
+                with self._lock:
+                    self._inflight -= 1
+                    self._stale_dropped += 1
+                self.ctl.bus.publish(E.STALE_OP_REJECTED, kind="drain",
+                                     app=meta.app_id, ckpt=meta.ckpt_id,
+                                     epoch=epoch, current=self._epoch())
                 continue
             with self._lock:
                 self._active += 1
@@ -146,8 +170,15 @@ class DrainOrchestrator:
         if not self._q.empty():
             return
         try:
-            fn = self._bg.get_nowait()
+            fn, epoch = self._bg.get_nowait()
         except queue.Empty:
+            return
+        if self._stale(epoch):
+            with self._lock:
+                self._bg_inflight -= 1
+                self._stale_dropped += 1
+            self.ctl.bus.publish(E.STALE_OP_REJECTED, kind="background",
+                                 epoch=epoch, current=self._epoch())
             return
         ok = True
         try:
@@ -179,7 +210,7 @@ class DrainOrchestrator:
         ctl = self.ctl
         t0 = ctl.clock.now()
         with ctl._lock:
-            meta.status = CkptStatus.DRAINING
+            ctl.catalog.set_status(meta, CkptStatus.DRAINING)
             drained_bytes = sum(s.nbytes for k, s in meta.shards.items()
                                 if k.replica == 0)
         if ctl.catalog.ec_geometry(meta.app_id) is not None:
@@ -210,8 +241,7 @@ class DrainOrchestrator:
                     ok = False
         if ok and ctl.pfs.checkpoint_complete(meta):
             ctl.pfs.write_manifest(meta)
-            with ctl._lock:
-                meta.status = CkptStatus.IN_L2
+            ctl.catalog.set_status(meta, CkptStatus.IN_L2)
             with self._lock:
                 self._completed += 1
             ctl.bus.publish(E.CKPT_IN_L2, app=meta.app_id, ckpt=meta.ckpt_id,
@@ -222,16 +252,15 @@ class DrainOrchestrator:
             # transient failure (e.g. an agent died mid-drain): give the
             # health monitor a few heartbeats to re-replicate / replace
             # agents before retrying, or the retry races the recovery
-            with ctl._lock:
-                meta.status = CkptStatus.IN_L1
+            ctl.catalog.set_status(meta, CkptStatus.IN_L1)
             recovery = 4 * getattr(ctl.health, "interval", 0.05)
             self._stop.wait(recovery)
             # re-carry the original context: the retried drain is still part
             # of the same checkpoint's trace, not an orphan
             self.submit(meta, attempt + 1, trace=trace)
         else:
-            with ctl._lock:
-                meta.status = CkptStatus.IN_L1     # still restartable from L1
+            # still restartable from L1
+            ctl.catalog.set_status(meta, CkptStatus.IN_L1)
             with self._lock:
                 self._failed += 1
             ctl.bus.publish(E.DRAIN_FAILED, app=meta.app_id, ckpt=meta.ckpt_id)
@@ -259,7 +288,9 @@ class DrainOrchestrator:
         """Keep only the newest ``keep_l1`` durable checkpoints in L1."""
         ctl = self.ctl
         with ctl._lock:
-            app = ctl._apps[app_id]
+            app = ctl._apps.get(app_id)
+            if app is None:     # app record gone (e.g. controller crashed)
+                return
             durable = sorted((m.ckpt_id for m in app.checkpoints.values()
                               if m.status in (CkptStatus.IN_L2,
                                               CkptStatus.IN_L3)))

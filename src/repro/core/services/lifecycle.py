@@ -77,8 +77,17 @@ class StorageLifecycleService:
             meta = app.checkpoints.get(ckpt_id) if app else None
             if meta is None:
                 return False
+            self.ctl.catalog._journal("pin", app=app_id, ckpt=ckpt_id,
+                                      pinned=bool(pinned))
             meta.pinned = bool(pinned)
             return True
+
+    def reset_inflight(self) -> None:
+        """Forget in-flight upload dedup state (controller recovery): the
+        old closures are epoch-fenced in the background lane, so recovered
+        IN_L2 checkpoints must be free to reschedule their trickle."""
+        with self._lock:
+            self._uploading.clear()
 
     # ---------------------------------------------------------- bus wiring
     def _on_event(self, ev: E.Event) -> None:
@@ -240,8 +249,7 @@ class StorageLifecycleService:
                 total += len(payload)
         if not l3.checkpoint_complete(meta):
             return              # raced a concurrent drop; stay IN_L2
-        with ctl._lock:
-            meta.status = CkptStatus.IN_L3
+        ctl.catalog.set_status(meta, CkptStatus.IN_L3)
         l3.write_manifest(meta)
         ctl.bus.publish(E.CKPT_IN_L3, app=app_id, ckpt=ckpt_id, bytes=total,
                         sim_s=max(ctl.clock.now() - t0, 0.0),
@@ -298,8 +306,7 @@ class StorageLifecycleService:
                 ctl.pfs.drop_checkpoint(app_id, meta.ckpt_id)
                 for mgr in ctl.managers():
                     mgr.store.drop_checkpoint(app_id, meta.ckpt_id)
-                with ctl._lock:
-                    meta.status = CkptStatus.EXPIRED
+                ctl.catalog.set_status(meta, CkptStatus.EXPIRED)
                 ctl.bus.publish(E.CKPT_EXPIRED, app=app_id,
                                 ckpt=meta.ckpt_id, tier=self.l3.name,
                                 freed_bytes=freed, terminal=True)

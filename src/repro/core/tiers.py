@@ -46,6 +46,7 @@ from ..kernels.ckpt_codec.blocks import (BLOCK as _Q8_BLOCK, dequantize_np,
                                          quantize_np, to_blocks_np)
 from ..kernels.ckpt_codec.rs import (join_rows, rs_decode_np, rs_encode_np,
                                      split_rows)
+from .retry import with_backoff
 from .simnet import SimNIC
 from .types import (CapacityError, CheckpointMeta, CkptStatus, ICheckError,
                     IntegrityError, PartitionDesc, PartitionScheme,
@@ -931,6 +932,41 @@ def _manifest_path(root: str, app_id: str, ckpt_id: int) -> str:
     return os.path.join(root, app_id, f"ckpt_{ckpt_id:08d}", "MANIFEST.json")
 
 
+def region_doc(r: RegionMeta) -> dict:
+    """JSON-serializable form of one RegionMeta — shared by the tier
+    manifests and the control-plane metadata journal."""
+    return {
+        "shape": list(r.shape),
+        "dtype": r.dtype,
+        "nbytes": r.nbytes,
+        "codec": r.codec,
+        "frame": r.frame,
+        "chain": list(r.chain) if r.chain is not None else None,
+        "partition": {
+            "scheme": r.partition.scheme.value,
+            "axis": r.partition.axis,
+            "num_parts": r.partition.num_parts,
+            "block": r.partition.block,
+            "bounds": r.partition.bounds,
+        },
+    }
+
+
+def region_from_doc(name: str, r: dict) -> RegionMeta:
+    chain = r.get("chain")
+    return RegionMeta(
+        name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
+        nbytes=r["nbytes"], codec=r.get("codec", "raw"),
+        frame=r.get("frame"),
+        chain=tuple(chain) if chain is not None else None,
+        partition=PartitionDesc(
+            scheme=PartitionScheme(r["partition"]["scheme"]),
+            axis=r["partition"]["axis"],
+            num_parts=r["partition"]["num_parts"],
+            block=r["partition"]["block"],
+            bounds=_tupled(r["partition"].get("bounds"))))
+
+
 def _manifest_doc(meta: CheckpointMeta) -> dict:
     """Serializable manifest document (shared by the PFS and L3 tiers)."""
     return {
@@ -939,24 +975,7 @@ def _manifest_doc(meta: CheckpointMeta) -> dict:
         "step": meta.step,
         "status": meta.status.value,
         "userdata_hex": meta.userdata.hex(),
-        "regions": {
-            name: {
-                "shape": list(r.shape),
-                "dtype": r.dtype,
-                "nbytes": r.nbytes,
-                "codec": r.codec,
-                "frame": r.frame,
-                "chain": list(r.chain) if r.chain is not None else None,
-                "partition": {
-                    "scheme": r.partition.scheme.value,
-                    "axis": r.partition.axis,
-                    "num_parts": r.partition.num_parts,
-                    "block": r.partition.block,
-                    "bounds": r.partition.bounds,
-                },
-            }
-            for name, r in meta.regions.items()
-        },
+        "regions": {name: region_doc(r) for name, r in meta.regions.items()},
     }
 
 
@@ -965,18 +984,7 @@ def _meta_from_manifest(doc: dict) -> CheckpointMeta:
                           step=doc["step"], status=CkptStatus(doc["status"]),
                           userdata=bytes.fromhex(doc.get("userdata_hex", "")))
     for name, r in doc["regions"].items():
-        chain = r.get("chain")
-        meta.regions[name] = RegionMeta(
-            name=name, shape=tuple(r["shape"]), dtype=r["dtype"],
-            nbytes=r["nbytes"], codec=r.get("codec", "raw"),
-            frame=r.get("frame"),
-            chain=tuple(chain) if chain is not None else None,
-            partition=PartitionDesc(
-                scheme=PartitionScheme(r["partition"]["scheme"]),
-                axis=r["partition"]["axis"],
-                num_parts=r["partition"]["num_parts"],
-                block=r["partition"]["block"],
-                bounds=_tupled(r["partition"].get("bounds"))))
+        meta.regions[name] = region_from_doc(name, r)
     return meta
 
 
@@ -1213,6 +1221,8 @@ class RemoteObjectTier:
         self._bytes_out = 0
         self._put_requests = 0
         self._get_requests = 0
+        # event bus for retry_exhausted telemetry (wired by the controller)
+        self.bus = None
         # fault injection: an unreachable object store (region outage).
         # Transfers raise ConnectionError; existence/listing probes answer
         # as an unreachable endpoint would (nothing visible) so restart
@@ -1265,6 +1275,16 @@ class RemoteObjectTier:
 
     # -- transfer model -----------------------------------------------------
     def _xfer(self, nbytes: int, outbound: bool) -> float:
+        """One object transfer, with bounded exponential backoff: a brief
+        endpoint blip retries instead of failing the whole tier operation;
+        a real outage exhausts the deadline, publishes ``retry_exhausted``
+        and surfaces the ConnectionError to the caller."""
+        return with_backoff(
+            lambda: self._xfer_once(nbytes, outbound), 0.25,
+            clock=self.link.clock, retry_on=(ConnectionError,),
+            bus=self.bus, what=f"l3_{'get' if outbound else 'put'}")
+
+    def _xfer_once(self, nbytes: int, outbound: bool) -> float:
         """One object transfer: multipart waves of latency + shared bw."""
         self._check_reachable()
         parts = max(1, -(-nbytes // self.part_bytes))
@@ -1410,6 +1430,9 @@ class RemoteObjectTier:
     def read_manifest(self, app_id: str, ckpt_id: int) -> Optional[CheckpointMeta]:
         if self.in_outage:
             return None
+        # a manifest GET is small but still pays the request round-trip —
+        # this is what makes a cold L3 catalog scan expensive in sim time
+        self.link.clock.sleep(self.request_latency)
         with self._lock:
             self._get_requests += 1
         return _read_manifest_file(self.root, app_id, ckpt_id)
@@ -1417,6 +1440,10 @@ class RemoteObjectTier:
     def list_checkpoints(self, app_id: str) -> List[int]:
         if self.in_outage:
             return []
+        # LIST round-trip, same latency floor as any other request
+        self.link.clock.sleep(self.request_latency)
+        with self._lock:
+            self._get_requests += 1
         return _list_manifest_ckpts(self.root, app_id)
 
     def checkpoint_complete(self, meta: CheckpointMeta) -> bool:

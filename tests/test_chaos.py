@@ -36,6 +36,28 @@ def test_schedule_deterministic_and_roundtrips():
         assert json.loads(a.to_json()) == json.loads(back.to_json())
 
 
+def test_schedule_controller_crash_is_additive_and_deterministic():
+    """Enabling the crash draw must not perturb a seed's fault schedule
+    (the crash is drawn after every other draw), and must add exactly one
+    crash in [0.5, 0.75] x horizon with a valid timing mode."""
+    from repro.chaos.schedule import CRASH_MODES
+
+    for seed in (0, 3, 17, 99):
+        plain = generate_schedule(seed)
+        crashy = generate_schedule(seed, controller_crash=True)
+        assert crashy.as_dict() == generate_schedule(
+            seed, controller_crash=True).as_dict()
+        crashes = [a for a in crashy.actions
+                   if a.kind == "controller_crash"]
+        others = [a.as_dict() for a in crashy.actions
+                  if a.kind != "controller_crash"]
+        assert others == [a.as_dict() for a in plain.actions]
+        assert len(crashes) == 1
+        act = crashes[0]
+        assert 0.50 * crashy.horizon_s <= act.at_s <= 0.75 * crashy.horizon_s
+        assert 0 <= int(act.params["mode"]) < len(CRASH_MODES)
+
+
 def test_schedule_composition_stays_survivable():
     for seed in range(50):
         sc = generate_schedule(seed)
@@ -61,7 +83,7 @@ def test_schedule_composition_stays_survivable():
 
 
 # ------------------------------------------------------------ invariants
-def test_registry_has_the_six_checks():
+def test_registry_has_the_core_checks():
     assert set(REGISTRY) >= {
         "restore_bit_identity",
         "latest_restartable_monotonic",
@@ -69,6 +91,7 @@ def test_registry_has_the_six_checks():
         "no_event_bus_stall",
         "telemetry_matches_ground_truth",
         "no_leaked_window_state",
+        "recovery_fidelity",
     }
 
 
@@ -141,6 +164,32 @@ def test_campaign_self_test_flips_chain_check_crit():
     report = run_campaign(0, self_test=True)
     by_name = {c["name"]: c for c in report["checks"]}
     assert by_name["delta_chain_reset_policy"]["status"] == "CRIT"
+    assert not report["ok"]
+
+
+def test_campaign_controller_crash_recovers_green():
+    """End to end: a controller crash + warm recovery mid-chaos ends green
+    — recovery_fidelity actually judged a fired crash (not vacuous) and
+    the stale-epoch probe landed."""
+    report = run_campaign(102, controller_crash=True)
+    assert report["worst"] != "CRIT", report["checks"]
+    by_name = {c["name"]: c for c in report["checks"]}
+    assert by_name["recovery_fidelity"]["status"] == "OK", \
+        by_name["recovery_fidelity"]
+    assert report["recovery_reports"], "crash never fired"
+    assert report["recovery_reports"][0]["stale_probe"] == "rejected"
+    assert report["recovery_reports"][0]["epoch"] >= 1
+
+
+def test_campaign_crash_self_test_flips_fidelity_crit():
+    """The suppressed-journal self-test must be caught: recovery comes up
+    knowing less than the PFS holds and recovery_fidelity goes CRIT."""
+    report = run_campaign(0, crash_self_test=True)
+    by_name = {c["name"]: c for c in report["checks"]}
+    assert by_name["recovery_fidelity"]["status"] == "CRIT", \
+        json.dumps({"check": by_name["recovery_fidelity"],
+                    "recovery_reports": report["recovery_reports"]},
+                   default=str)
     assert not report["ok"]
 
 

@@ -54,7 +54,10 @@ class SlowPFS(PFSTier):
 def test_max_concurrent_drains_respected(tmp_path):
     """Under contention, at most ``max_concurrent_drains`` checkpoints are
     in the DRAINING stage at once — and more than one actually is (the old
-    single flusher thread serialized everything)."""
+    single flusher thread serialized everything).  The backlog is queued
+    up-front (commit with ``drain=False``, then submit all six) so the
+    parallelism assertion doesn't race commit latency against the drain
+    tail."""
     rm = ResourceManager()
     for _ in range(2):
         rm.make_node(memory_bytes=256 << 20)
@@ -64,9 +67,14 @@ def test_max_concurrent_drains_respected(tmp_path):
         client = ICheckClient("app", ctl, ranks=2).init()
         data = np.arange(4096, dtype=np.float32)
         client.add_adapt("x", data.shape, "float32", num_parts=2)
+        metas = []
         for step in range(6):
-            client.commit(step=step, parts_by_region={"x": _parts(data, 2)},
-                          blocking=True)
+            h = client.commit(step=step,
+                              parts_by_region={"x": _parts(data, 2)},
+                              blocking=True, drain=False)
+            metas.append(ctl.app("app").checkpoints[h.ckpt_id])
+        for meta in metas:
+            ctl.drains.submit(meta)
         ctl.wait_for_drains(timeout=30)
         stats = ctl.drains.stats()
         assert stats["max_observed_concurrency"] <= 2

@@ -1,0 +1,246 @@
+"""Crash-consistent control plane: warm recovery from the metadata
+journal, epoch fencing of stale ops (unit + end to end), and the bounded
+``wait_for_drains``/``wait_for_uploads`` timeout reports."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ICheckClient, ICheckCluster, ResourceManager,
+                        split_array)
+from repro.core.controller import Controller
+from repro.core.services.journal import EpochFence, StaleEpochError
+from repro.core.tiers import PFSTier
+from repro.core.types import (CkptStatus, ICheckError, PartitionDesc,
+                              PartitionScheme, ShardKey)
+
+
+def _parts(arr, ranks):
+    desc = PartitionDesc(scheme=PartitionScheme.BLOCK, num_parts=ranks)
+    return {i: p for i, p in enumerate(split_array(arr, desc))}
+
+
+# ------------------------------------------------------------ epoch fence
+def test_epoch_fence_unit():
+    fence = EpochFence()
+    assert fence.current == 0
+    fence.check(0)                      # current epoch passes
+    fence.check(None)                   # unstamped actors always pass
+    assert fence.bump() == 1
+    with pytest.raises(StaleEpochError):
+        fence.check(0, "probe")
+    # recovery bumps past the journaled epoch, monotonically
+    assert fence.bump(at_least=10) == 10
+    assert fence.bump() == 11
+
+
+# ----------------------------------------------------------- warm recovery
+def test_warm_recovery_roundtrip(tmp_path):
+    """Commit -> drain -> hard crash -> recover: the rebuilt catalog must
+    restore the newest checkpoint bit-identically and keep accepting new
+    commits at the bumped epoch."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        client = ICheckClient("app", ctl, ranks=2).init()
+        data = np.arange(4096, dtype=np.float32) * 0.5
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        for step in range(3):
+            client.commit(step=step, parts_by_region={"x": _parts(data, 2)},
+                          blocking=True)
+        ctl.wait_for_drains(timeout=30)
+        assert ctl.fence.current == 0
+
+        ctl.crash()
+        assert ctl._apps == {}                       # amnesia is total
+        report = ctl.recover()
+        assert report["epoch"] == 1 == ctl.fence.current
+        assert report["apps"]["app"]["max_known"] == 2
+        assert report["apps"]["app"]["checkpoints"] == 3
+
+        got = ctl.latest_restartable("app")
+        assert got is not None and got[0].ckpt_id == 2
+        meta, parts, _level = client.restart()
+        assert meta.ckpt_id == 2
+        back = np.concatenate([parts["x"][i] for i in range(2)])
+        np.testing.assert_array_equal(back, data)
+        # the recovered control plane keeps working: new commit, new id
+        h = client.commit(step=3, parts_by_region={"x": _parts(data, 2)},
+                          blocking=True)
+        assert h.ckpt_id == 3
+        client.finalize()
+
+
+def test_recovery_reconciles_pending_to_failed(tmp_path):
+    """A checkpoint journaled as new_ckpt but never finalized (crash mid
+    commit) must come back FAILED, not restartable."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        client = ICheckClient("app", ctl, ranks=2).init()
+        data = np.ones(1024, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        client.commit(step=0, parts_by_region={"x": _parts(data, 2)},
+                      blocking=True)
+        ctl.wait_for_drains(timeout=30)
+        # forge the crash-mid-commit shape: journal a new_ckpt whose shards
+        # never landed, then crash before any finalize
+        ctl.catalog.new_checkpoint("app", step=99,
+                                   regions=dict(ctl._regions["app"]))
+        ctl.crash()
+        ctl.recover()
+        app = ctl.app("app")
+        assert app.checkpoints[1].status == CkptStatus.FAILED
+        got = ctl.latest_restartable("app")
+        assert got is not None and got[0].ckpt_id == 0
+        client.finalize()
+
+
+def test_recover_without_journal_refuses(tmp_path):
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=0,
+                       pfs_root=str(tmp_path / "pfs"),
+                       journal=False) as c:
+        assert c.controller.journal is None
+        with pytest.raises(ICheckError):
+            c.controller.recover()
+
+
+# ------------------------------------------------------------ stale epochs
+def test_stale_epoch_agent_op_rejected_e2e(tmp_path):
+    """An agent inbox op stamped with the pre-recovery epoch must be
+    refused with StaleEpochError (and publish stale_op_rejected), while a
+    freshly stamped op sails through."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        client = ICheckClient("app", ctl, ranks=2).init()
+        client.add_adapt("x", (1024,), "float32", num_parts=2)
+        old_epoch = ctl.fence.current
+        ctl.crash()
+        ctl.recover()
+        agent = ctl.agents_for("app")[0]
+        fut = agent.put(ShardKey("app", 777, "x", 0), b"\x00" * 64,
+                        epoch=old_epoch)
+        with pytest.raises(StaleEpochError):
+            fut.result(timeout=10)
+        assert any(e["event"] == "stale_op_rejected" for e in ctl.events)
+        # current-epoch traffic is unaffected
+        fut = agent.put(ShardKey("app", 778, "x", 0), b"\x00" * 64)
+        assert fut.result(timeout=10) is not None
+        client.finalize()
+
+
+def test_stale_epoch_rm_interaction_rejected(tmp_path):
+    """A zombie controller's RM calls (node requests, resize scheduling)
+    die at the fence after a recovery bumps the epoch."""
+    with ICheckCluster(n_icheck_nodes=1, n_spare_nodes=1,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        rm = ctl.rm
+        old_epoch = ctl.fence.current
+        ctl.crash()
+        ctl.recover()
+        with pytest.raises(StaleEpochError):
+            rm.request_icheck_node(epoch=old_epoch)
+        with pytest.raises(StaleEpochError):
+            rm.schedule_resize("app", 4, epoch=old_epoch)
+        with pytest.raises(StaleEpochError):
+            rm.register_app("app", 2, epoch=old_epoch)
+        # the recovered controller itself (new epoch) still gets nodes
+        assert rm.request_icheck_node(epoch=ctl.fence.current) is not None
+
+
+# --------------------------------------------------- bounded wait reports
+class SlowPFS(PFSTier):
+    """PFS whose shard writes block long enough to pin a drain in flight."""
+
+    def __init__(self, root, delay_s=0.4, **kw):
+        super().__init__(root, **kw)
+        self.delay_s = delay_s
+
+    def write_shard(self, key, payload, crc=None):
+        time.sleep(self.delay_s)
+        return super().write_shard(key, payload, crc)
+
+
+def test_wait_for_drains_timeout_returns_report(tmp_path):
+    """Regression for the bounded-wait satellite: a wait that times out
+    must *return* a completed/pending report (not raise) and publish a
+    ``wait_timeout`` event; the follow-up full wait reports ok."""
+    rm = ResourceManager()
+    for _ in range(2):
+        rm.make_node(memory_bytes=256 << 20)
+    pfs = SlowPFS(str(tmp_path / "pfs"), delay_s=0.4)
+    ctl = Controller(rm, pfs, initial_nodes=2, max_concurrent_drains=2)
+    try:
+        client = ICheckClient("app", ctl, ranks=2).init()
+        data = np.arange(2048, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        metas = []
+        for step in range(2):
+            h = client.commit(step=step,
+                              parts_by_region={"x": _parts(data, 2)},
+                              blocking=True, drain=False)
+            metas.append(ctl.app("app").checkpoints[h.ckpt_id])
+        for meta in metas:
+            ctl.drains.submit(meta)
+        report = ctl.wait_for_drains(timeout=0.05)
+        assert report["ok"] is False and report["timed_out"] is True
+        assert report["what"] == "drains"
+        assert report["pending"] >= 1
+        assert any(e["event"] == "wait_timeout" for e in ctl.events)
+        report = ctl.wait_for_drains(timeout=30)
+        assert report["ok"] is True and report["pending"] == 0
+        assert report["completed"] == 2
+        up = ctl.wait_for_uploads(timeout=30)
+        assert up["ok"] is True and up["what"] == "uploads"
+        client.finalize()
+    finally:
+        ctl.close()
+
+
+# ----------------------------------------------- recovery under live load
+def test_recovery_with_concurrent_commits_never_reuses_ids(tmp_path):
+    """Crash + recover while another thread keeps committing: every
+    checkpoint id stays unique (the journal's new_ckpt barrier makes the
+    rebuilt sequence collision-free) and the system settles restorable."""
+    with ICheckCluster(n_icheck_nodes=2, n_spare_nodes=0,
+                       node_memory=256 << 20,
+                       pfs_root=str(tmp_path / "pfs")) as c:
+        ctl = c.controller
+        client = ICheckClient("app", ctl, ranks=2).init()
+        data = np.arange(1024, dtype=np.float32)
+        client.add_adapt("x", data.shape, "float32", num_parts=2)
+        seen, errors = [], []
+        stop = threading.Event()
+
+        def committer():
+            step = 0
+            while not stop.is_set():
+                try:
+                    h = client.commit(
+                        step=step, parts_by_region={"x": _parts(data, 2)},
+                        blocking=True, drain=False)
+                    seen.append(h.ckpt_id)
+                except (ICheckError, KeyError, ConnectionError):
+                    pass            # amnesia window / stale stamps: fine
+                step += 1
+                time.sleep(0.01)
+
+        t = threading.Thread(target=committer, daemon=True)
+        t.start()
+        time.sleep(0.15)
+        ctl.crash()
+        ctl.recover()
+        time.sleep(0.15)
+        stop.set()
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert len(seen) == len(set(seen)), f"duplicate ckpt ids: {seen}"
+        assert not errors
+        assert ctl.latest_restartable("app") is not None
+        client.finalize()
